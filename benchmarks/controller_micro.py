@@ -1,0 +1,72 @@
+"""Controller microbenchmarks: jitted Eqs (1)-(4) throughput + fused path.
+
+The paper's controller runs as a 1 Hz Prometheus poll; ours is a jitted
+array program. This bench measures (a) host-loop update latency, (b)
+lax.scan throughput over a long trace, (c) the histogram-sketch path —
+evidence for the beyond-paper "controller inside the serving step" claim
+(its cost must be negligible vs a serve step).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import offload, quantile
+
+
+def _time(f, *args, n=50):
+    f(*args)                                    # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = f(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n
+
+
+def main(out_dir: str | None = None):
+    cfg = offload.OffloadConfig()
+    results = {}
+    for F, W in ((1, 64), (16, 256), (256, 256)):
+        state = offload.OffloadState.init(F, cfg)
+        lat = jnp.abs(jax.random.normal(jax.random.PRNGKey(0), (F, W))) + 0.01
+        step = jax.jit(lambda s, l: offload.offload_update(s, l, cfg))
+        dt = _time(step, state, lat)
+        results[f"update_F{F}_W{W}_us"] = dt * 1e6
+        print(f"offload_update F={F:4d} W={W:4d}: {dt*1e6:8.1f} us")
+
+    # scan throughput over a (T, F, W) trace
+    T, F, W = 512, 16, 128
+    trace = jnp.abs(jax.random.normal(jax.random.PRNGKey(1), (T, F, W))) + 0.01
+    scan = jax.jit(lambda tr: offload.scan_controller(cfg, tr))
+    dt = _time(scan, trace, n=10)
+    results["scan_steps_per_s"] = T / dt
+    print(f"scan_controller: {T/dt:,.0f} controller steps/s")
+
+    # sketch path
+    hist = quantile.Histogram.init(16, num_buckets=64)
+    lat16 = jnp.abs(jax.random.normal(jax.random.PRNGKey(2), (16, 128))) + 0.01
+    upd = jax.jit(quantile.update)
+    dt_u = _time(upd, hist, lat16)
+    state16 = offload.OffloadState.init(16, cfg)
+    fused = jax.jit(lambda s, h: offload.offload_update_from_sketch(s, h, cfg))
+    dt_f = _time(fused, state16, hist)
+    results["sketch_update_us"] = dt_u * 1e6
+    results["sketch_controller_us"] = dt_f * 1e6
+    print(f"histogram update: {dt_u*1e6:8.1f} us; "
+          f"sketch controller: {dt_f*1e6:8.1f} us")
+
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        with open(os.path.join(out_dir, "controller_micro.json"), "w") as f:
+            json.dump(results, f, indent=1)
+    return results
+
+
+if __name__ == "__main__":
+    main(os.path.join(os.path.dirname(__file__), "results"))

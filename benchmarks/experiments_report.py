@@ -1,0 +1,83 @@
+"""Generate the EXPERIMENTS.md §Dry-run/§Roofline markdown tables from the
+dry-run JSON artifacts (run after ``repro.launch.dryrun --all``).
+
+    PYTHONPATH=src python -m benchmarks.experiments_report [--mesh single]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+ARCH_ORDER = ["qwen2.5-14b", "llama3-405b", "stablelm-1.6b",
+              "nemotron-4-340b", "hymba-1.5b", "musicgen-medium",
+              "internvl2-1b", "rwkv6-7b", "qwen2-moe-a2.7b", "mixtral-8x7b"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(mesh: str, tagged: bool = False) -> List[Dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(RESULTS, mesh, "*.json"))):
+        name = os.path.basename(path)[:-5]
+        parts = name.split("__")
+        is_tagged = len(parts) > 2
+        if is_tagged != tagged:
+            continue
+        with open(path) as f:
+            r = json.load(f)
+        r["_tag"] = parts[2] if is_tagged else ""
+        rows.append(r)
+    key = lambda r: (ARCH_ORDER.index(r["arch"]), SHAPE_ORDER.index(r["shape"]),
+                     r["_tag"])
+    return sorted(rows, key=key)
+
+
+def ms(x):
+    return f"{x*1e3:,.1f}"
+
+
+def gib(x):
+    return f"{x/2**30:.1f}"
+
+
+def table(rows: List[Dict], with_tag: bool = False) -> str:
+    hdr = ["arch", "shape"] + (["variant"] if with_tag else []) + \
+        ["compute ms", "memory ms", "collective ms", "dominant",
+         "MODEL/HLO", "roofline frac", "GiB/dev", "compile s"]
+    lines = ["| " + " | ".join(hdr) + " |",
+             "|" + "|".join(["---"] * len(hdr)) + "|"]
+    for r in rows:
+        ro = r["roofline"]
+        cells = [r["arch"], r["shape"]] + ([r["_tag"]] if with_tag else []) + [
+            ms(ro["compute_s"]), ms(ro["memory_s"]), ms(ro["collective_s"]),
+            ro["dominant"], f"{r.get('useful_ratio', 0):.2f}",
+            f"{r.get('roofline_fraction', 0):.4f}",
+            gib(r.get("memory", {}).get("per_device_total", 0)),
+            f"{r.get('compile_s', 0):.0f}"]
+        lines.append("| " + " | ".join(str(c) for c in cells) + " |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="both")
+    ap.add_argument("--tagged", action="store_true",
+                    help="show hillclimb variants instead of baselines")
+    args = ap.parse_args()
+    meshes = ("single", "multi") if args.mesh == "both" else (args.mesh,)
+    for mesh in meshes:
+        rows = load(mesh, tagged=args.tagged)
+        if not rows:
+            continue
+        chips = rows[0]["chips"]
+        print(f"\n### mesh `{mesh}` ({chips} chips)\n")
+        print(table(rows, with_tag=args.tagged))
+
+
+if __name__ == "__main__":
+    main()

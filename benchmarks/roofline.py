@@ -1,0 +1,86 @@
+"""§Roofline report: aggregate the dry-run artifacts into the per-cell
+three-term table (compute / memory / collective seconds, dominant term,
+MODEL_FLOPS ratio, one-line bottleneck note).
+
+Reads benchmarks/results/dryrun/<mesh>/<arch>__<shape>[__tag].json written
+by ``repro.launch.dryrun``; does not lower anything itself (so it runs in
+milliseconds and inside ``benchmarks.run``).
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+NOTE = {
+    ("train", "collective"): "FSDP weight gathers + grad reductions dominate"
+                             " — fuse reduce-scatter / cut accum re-gathers",
+    ("train", "memory"): "remat boundary + optimizer traffic — deepen remat"
+                         " grouping, bf16 moments, seq-shard boundaries",
+    ("train", "compute"): "near MXU bound — tune accum/microbatch",
+    ("prefill", "memory"): "flash chunk streaming in fp32 — bf16 dot inputs"
+                           " with fp32 accumulation",
+    ("prefill", "collective"): "TP all-reduces per layer — overlap with"
+                               " compute via latency-hiding scheduler",
+    ("prefill", "compute"): "attention FLOPs dominate — good (S^2 work)",
+    ("decode", "memory"): "KV cache streaming — keep cache bf16, avoid"
+                          " materialized f32 converts",
+    ("decode", "collective"): "per-layer FSDP weight gathers at batch<<model"
+                              " size — switch to serve_replicated weights",
+    ("decode", "compute"): "unexpected for decode — check dispatch overhead",
+}
+
+
+def load(mesh: str) -> List[Dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(RESULTS, mesh, "*.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def fmt_row(r: Dict) -> str:
+    roof = r["roofline"]
+    frac = r.get("roofline_fraction", 0.0)
+    note = NOTE.get((r["kind"], roof["dominant"]), "")
+    tag = ""
+    mem = r.get("memory", {}).get("per_device_total", 0) / 2**30
+    return (f"{r['arch']:>16s} {r['shape']:>12s} "
+            f"{roof['compute_s']*1e3:>12.2f} {roof['memory_s']*1e3:>12.2f} "
+            f"{roof['collective_s']*1e3:>12.2f} {roof['dominant']:>10s} "
+            f"{r.get('useful_ratio', 0):>6.2f} {frac:>8.4f} {mem:>8.2f}")
+
+
+def main(meshes=("single", "multi")) -> Dict:
+    out = {}
+    for mesh in meshes:
+        rows = load(mesh)
+        if not rows:
+            print(f"[roofline] no dry-run artifacts for mesh={mesh} — run "
+                  f"`python -m repro.launch.dryrun --all --mesh {mesh}` first")
+            continue
+        # keep only untagged baselines in the main table
+        base = [r for r in rows if "__" not in os.path.basename(
+            r.get("arch", "")) and r.get("meta", {}).get("variant") is None]
+        print(f"\n=== mesh: {mesh} ({rows[0]['chips']} chips) — times are ms "
+              f"per step ===")
+        print(f"{'arch':>16s} {'shape':>12s} {'compute':>12s} {'memory':>12s} "
+              f"{'collective':>12s} {'dominant':>10s} {'useful':>6s} "
+              f"{'frac':>8s} {'GiB/dev':>8s}")
+        for r in rows:
+            print(fmt_row(r))
+        doms = {}
+        for r in rows:
+            doms[r["roofline"]["dominant"]] = doms.get(
+                r["roofline"]["dominant"], 0) + 1
+        print(f"dominant-term histogram: {doms}")
+        out[mesh] = {"cells": len(rows), "dominant_histogram": doms}
+    return out
+
+
+if __name__ == "__main__":
+    main()

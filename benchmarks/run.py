@@ -1,0 +1,61 @@
+"""Benchmark entry point: ``PYTHONPATH=src python -m benchmarks.run``.
+
+One bench per paper artifact + the roofline report:
+
+  table2       — Table 2 (successful responses per workload x policy)
+  fig2         — Figure 2 time series (latency/CPU/memory/network CSVs)
+  controller   — Eqs (1)-(4) microbenchmarks (jitted + sketch paths)
+  serving      — live two-tier engine + policy comparison
+  roofline     — §Roofline table from the dry-run artifacts
+
+Pass bench names to run a subset: ``python -m benchmarks.run table2 roofline``.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+
+
+def main(argv=None):
+    argv = list(sys.argv[1:] if argv is None else argv)
+    wanted = set(argv) if argv else {"table2", "fig2", "controller",
+                                     "serving", "roofline"}
+    os.makedirs(RESULTS, exist_ok=True)
+    t0 = time.time()
+
+    if "table2" in wanted:
+        print("\n" + "=" * 72 + "\nTable 2 — successful responses "
+              "(simulator, 4 workloads x 6 policies)\n" + "=" * 72)
+        from benchmarks import table2_responses
+        table2_responses.main(RESULTS)
+
+    if "fig2" in wanted:
+        print("\n" + "=" * 72 + "\nFigure 2 — metric time series\n" + "=" * 72)
+        from benchmarks import fig2_timeseries
+        fig2_timeseries.main()
+
+    if "controller" in wanted:
+        print("\n" + "=" * 72 + "\nController microbenchmarks\n" + "=" * 72)
+        from benchmarks import controller_micro
+        controller_micro.main(RESULTS)
+
+    if "serving" in wanted:
+        print("\n" + "=" * 72 + "\nServing bench (live engine)\n" + "=" * 72)
+        from benchmarks import serving_bench
+        serving_bench.main(RESULTS)
+
+    if "roofline" in wanted:
+        print("\n" + "=" * 72 + "\n§Roofline — dry-run derived terms\n" + "=" * 72)
+        from benchmarks import roofline
+        roofline.main()
+
+    print(f"\nall benches done in {time.time()-t0:.1f}s; artifacts in "
+          f"{RESULTS}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,91 @@
+"""Serving-path microbench: tokens/s through the two-tier continuum on the
+smoke configs + offload-policy comparison at fixed wall budget.
+
+This is the live-engine counterpart of the simulator benches: real jitted
+prefill/decode steps, real controller, one CPU device — numbers are
+CPU-relative but the POLICY ordering mirrors the paper's Table 2.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.core import offload
+from repro.core.replication import FunctionSpec
+from repro.models import model_zoo
+from repro.serving.engine import Endpoint, Request
+from repro.serving.tiers import EdgeCloudContinuum, TierConfig
+
+
+def bench_engine(arch: str = "stablelm-1.6b", steps: int = 30):
+    cfg = configs.get_smoke_config(arch)
+    params = model_zoo.init(jax.random.PRNGKey(0), cfg)
+    ep = Endpoint(cfg, params, slots=4, max_len=128)
+    ep.prefill_one(0, np.arange(16, dtype=np.int32))
+    toks = {0: 1}
+    t0 = time.perf_counter()
+    for _ in range(steps):
+        toks = {0: ep.decode_all(toks)[0]}
+    dt = (time.perf_counter() - t0) / steps
+    return {"arch": arch, "decode_step_ms": dt * 1e3,
+            "tokens_per_s_per_slot": 1.0 / dt}
+
+
+def bench_policies(rounds: int = 12, seed: int = 0):
+    cfg = configs.get_smoke_config("stablelm-1.6b")
+    params = model_zoo.init(jax.random.PRNGKey(seed), cfg)
+    out = {}
+    for policy in ("edge_only", "auto"):
+        ocfg = offload.OffloadConfig(
+            c_soft=999.0 if policy == "edge_only" else 1.25)
+        cc = EdgeCloudContinuum(edge=TierConfig(slots=2, max_len=64),
+                                cloud=TierConfig(slots=8, max_len=64),
+                                offload_cfg=ocfg, seed=seed)
+        cc.deploy(FunctionSpec(name="fn", arch="stablelm-1.6b"), cfg, params)
+        rng = np.random.default_rng(seed)
+        rid = 0
+        t0 = time.perf_counter()
+        for rnd in range(rounds):
+            for _ in range(2 if rnd < 3 else 8):
+                cc.submit("fn", Request(
+                    rid=rid, tokens=rng.integers(0, 128, 6).astype(np.int32),
+                    max_new=2))
+                rid += 1
+            cc.tick()
+        wall = time.perf_counter() - t0
+        lat, valid = cc.edge.metrics.latency_windows(256)
+        lats = lat[0][valid[0]]
+        out[policy] = {
+            "served": int(sum(r["edge"] + r["cloud"] for r in cc.log)),
+            "cloud_frac": float(sum(r["cloud"] for r in cc.log) / max(rid, 1)),
+            "wall_s": wall,
+            "edge_p50_ms": float(np.percentile(lats, 50) * 1e3) if len(lats) else None,
+            "edge_p95_ms": float(np.percentile(lats, 95) * 1e3) if len(lats) else None,
+        }
+    return out
+
+
+def main(out_dir: str | None = None):
+    eng = bench_engine()
+    print(f"engine decode: {eng['decode_step_ms']:.1f} ms/step "
+          f"({eng['tokens_per_s_per_slot']:.1f} tok/s/slot)")
+    pol = bench_policies()
+    for k, v in pol.items():
+        print(f"{k:10s} served={v['served']} cloud_frac={v['cloud_frac']:.2f} "
+              f"wall={v['wall_s']:.1f}s p95={v['edge_p95_ms']}")
+    res = {"engine": eng, "policies": pol}
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        with open(os.path.join(out_dir, "serving_bench.json"), "w") as f:
+            json.dump(res, f, indent=1)
+    return res
+
+
+if __name__ == "__main__":
+    main(os.path.join(os.path.dirname(__file__), "results"))

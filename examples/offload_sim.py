@@ -1,0 +1,50 @@
+"""Reproduce the paper's experiment end-to-end in the simulator, including
+the beyond-paper network-aware controller the paper's §4.2 asks for.
+
+Runs the MatMult workload (the paper's network-bottleneck case) under:
+  - edge-only (0%),
+  - full offload (100%) — saturates the 100 MB/s edge->cloud link,
+  - the paper's auto controller,
+  - auto + net_aware=True (our extension: caps offload at link capacity).
+
+    PYTHONPATH=src python examples/offload_sim.py
+"""
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import offload
+from repro.core.simulator import ContinuumSimulator, SimConfig
+
+# push the ramp high enough that the paper controller wants ~100% offload
+# while the 100 MB/s link can only carry part of it — the regime where the
+# paper observes "offloading makes it worse"
+cfg = SimConfig(duration_s=300.0, high_rps=28.0)
+
+rows = []
+for label, policy in (
+    ("edge-only", 0.0),
+    ("100% offload", 100.0),
+    ("auto (paper)", "auto"),
+    ("auto+net-aware", "auto+net"),     # beyond-paper extension
+):
+    res = ContinuumSimulator("matmult", policy, cfg).run()
+    rows.append((label, res))
+
+print(f"{'policy':>16} {'ok':>6} {'fail':>5} {'lat(s)':>8} {'net peak':>9} "
+      f"{'off peak':>8}")
+for label, r in rows:
+    print(f"{label:>16} {r.successes:>6} {r.failures:>5} "
+          f"{np.nanmean(r.latency_avg):>8.3f} "
+          f"{np.nanmax(r.net_MBps):>8.1f}M "
+          f"{np.nanmax(r.offload_pct):>7.0f}%")
+
+print("""
+Reading the table:
+  * edge-only drops requests once the ramp exceeds edge capacity;
+  * 100% offload pushes everything through the 100 MB/s link — when the
+    link is the bottleneck the paper notes offloading 'makes it worse';
+  * the paper's auto controller lands between the extremes;
+  * the net-aware variant keeps offload below link saturation — the
+    'more sophisticated strategy' the paper's §4.2 calls for.""")

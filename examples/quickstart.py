@@ -1,0 +1,36 @@
+"""Quickstart: the paper's offloading controller in 40 lines.
+
+Builds the Eqs (1)-(4) controller, feeds it a synthetic latency trace that
+ramps from calm to tail-heavy and back, and plots (textually) how the
+offloaded-traffic percentage R_t tracks the p95/p50 ratio — the core
+behaviour of Knative Edge's scheduler, as a pure JAX program.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import offload
+
+cfg = offload.OffloadConfig()          # paper-faithful constants
+state = offload.OffloadState.init(num_functions=1, cfg=cfg)
+rng = np.random.default_rng(0)
+
+print(f"{'t':>3} {'p95/p50':>8} {'R_t %':>7}  bar")
+for t in range(60):
+    # calm -> overloaded (tail latency spikes) -> drained
+    overload = max(0.0, min((t - 10) / 10, 1.0)) - max(0.0, (t - 40) / 5)
+    overload = float(np.clip(overload, 0.0, 1.0))
+    lat = rng.lognormal(-2.5, 0.3, size=64).astype(np.float32)
+    n_heavy = int(8 * overload)
+    if n_heavy:
+        lat[-n_heavy:] *= 20.0         # the tail the controller watches
+    ratio = float(offload.latency_ratio(jnp.asarray(lat[None]))[0])
+    state, R = offload.offload_update(state, jnp.asarray(lat[None]), cfg)
+    pct = float(R[0])
+    print(f"{t:>3} {ratio:>8.2f} {pct:>7.1f}  {'#' * int(pct / 2)}")
+
+print("\nR_t rises only while the edge shows heavy tails, and decays "
+      "back to 0 when the edge drains — Eqs (1)-(4) in action.")

@@ -1,0 +1,54 @@
+"""End-to-end driver: serve a small LM across the Edge-Cloud continuum.
+
+Deploys TWO model endpoints (a dense LM and an SSM LM) through the
+replication controller, pushes a ramped request stream at the edge
+gateway, and shows the full paper loop live: latency scrape -> Eq (1)-(4)
+controller -> weighted batch routing -> per-tier serving with KV caches.
+
+    PYTHONPATH=src python examples/serve_continuum.py
+"""
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.core.replication import FunctionSpec
+from repro.models import model_zoo
+from repro.serving.engine import Request
+from repro.serving.tiers import EdgeCloudContinuum, TierConfig
+
+ARCHS = ("stablelm-1.6b", "rwkv6-7b")
+
+cc = EdgeCloudContinuum(edge=TierConfig(slots=2, max_len=64),
+                        cloud=TierConfig(slots=12, max_len=64,
+                                         extra_latency_s=0.02),
+                        seed=0)
+for arch in ARCHS:
+    cfg = configs.get_smoke_config(arch)
+    params = model_zoo.init(jax.random.PRNGKey(hash(arch) % 2**31), cfg)
+    cc.deploy(FunctionSpec(name=arch, arch=arch), cfg, params)
+    print(f"deployed {arch} to cloud; replicated to edge "
+          f"(writes={cc.replicator.writes})")
+
+rng = np.random.default_rng(0)
+rid = 0
+print(f"\n{'round':>5} {'rps':>4} {'edge':>5} {'cloud':>5} {'R_t%':>6}")
+for rnd in range(18):
+    rps = 2 if rnd < 4 else 10          # ramp: overload the 2-slot edge
+    for _ in range(rng.poisson(rps)):
+        arch = ARCHS[rid % 2]
+        cfg = configs.get_smoke_config(arch)
+        cc.submit(arch, Request(
+            rid=rid, tokens=rng.integers(0, cfg.vocab_size, 8).astype(np.int32),
+            max_new=3))
+        rid += 1
+    rec = cc.tick()
+    print(f"{rnd:>5} {rps:>4} {rec['edge']:>5} {rec['cloud']:>5} "
+          f"{rec['R']:>6.1f}")
+
+edge_n = sum(r["edge"] for r in cc.log)
+cloud_n = sum(r["cloud"] for r in cc.log)
+print(f"\nserved {rid} requests: edge={edge_n}, cloud={cloud_n} "
+      f"({100 * cloud_n / max(rid, 1):.0f}% offloaded under overload)")
+print("steady-state replication writes:", cc.replicator.writes,
+      "(no feedback loop)")

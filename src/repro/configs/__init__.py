@@ -1,0 +1,121 @@
+"""Architecture registry + assigned input shapes + dry-run input specs.
+
+Every assigned architecture is a selectable config (``--arch <id>``); each
+arch pairs with the four LM shapes. ``input_specs`` returns weak-type-
+correct ShapeDtypeStruct stand-ins for every model input of a given
+(arch, shape) cell — the dry-run lowers against these, so no host memory is
+ever allocated for the full configs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig
+
+_MODULES = {
+    "qwen2.5-14b": "qwen2_5_14b",
+    "llama3-405b": "llama3_405b",
+    "stablelm-1.6b": "stablelm_1_6b",
+    "nemotron-4-340b": "nemotron_4_340b",
+    "hymba-1.5b": "hymba_1_5b",
+    "musicgen-medium": "musicgen_medium",
+    "internvl2-1b": "internvl2_1b",
+    "rwkv6-7b": "rwkv6_7b",
+    "qwen2-moe-a2.7b": "qwen2_moe_a2_7b",
+    "mixtral-8x7b": "mixtral_8x7b",
+}
+
+ARCHS: Tuple[str, ...] = tuple(_MODULES)
+
+
+def get_config(arch: str) -> ModelConfig:
+    return importlib.import_module(f"repro.configs.{_MODULES[arch]}").config()
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    return importlib.import_module(f"repro.configs.{_MODULES[arch]}").smoke_config()
+
+
+# --------------------------------------------------------------------------
+# Shapes (assigned): seq_len x global_batch; decode shapes lower serve_step
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str          # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524_288, 1),
+}
+
+# long_500k needs sub-quadratic attention: run for SSM / hybrid / SWA archs,
+# skip for pure full-attention archs (recorded in DESIGN.md §8).
+LONG_CONTEXT_ARCHS = ("rwkv6-7b", "hymba-1.5b", "mixtral-8x7b")
+
+
+def cell_is_valid(arch: str, shape: str) -> bool:
+    if shape == "long_500k":
+        return arch in LONG_CONTEXT_ARCHS
+    return True
+
+
+def valid_cells():
+    return [(a, s) for a in ARCHS for s in SHAPES if cell_is_valid(a, s)]
+
+
+# --------------------------------------------------------------------------
+# Input specs for the dry-run (ShapeDtypeStruct; no allocation)
+# --------------------------------------------------------------------------
+
+
+def _tok(shape) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Model inputs for one cell, as abstract values.
+
+    train:   {tokens, labels}           (+patches for vision frontends)
+    prefill: {tokens}                   (+patches)
+    decode:  {tokens (B,), t (B,)}      — cache specs come from the engine
+    """
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        specs: Dict[str, jax.ShapeDtypeStruct] = {}
+        if cfg.frontend == "vision":
+            P = cfg.num_patches
+            specs["patches"] = jax.ShapeDtypeStruct((B, P, cfg.d_model),
+                                                    cfg.compute_dtype)
+            specs["tokens"] = _tok((B, S - P))
+            specs["labels"] = _tok((B, S - P))
+        else:
+            specs["tokens"] = _tok((B, S))
+            specs["labels"] = _tok((B, S))
+        return specs
+    if shape.kind == "prefill":
+        specs = {}
+        if cfg.frontend == "vision":
+            P = cfg.num_patches
+            specs["patches"] = jax.ShapeDtypeStruct((B, P, cfg.d_model),
+                                                    cfg.compute_dtype)
+            specs["tokens"] = _tok((B, S - P))
+        else:
+            specs["tokens"] = _tok((B, S))
+        return specs
+    if shape.kind == "decode":
+        return {"tokens": _tok((B,)), "t": _tok((B,))}
+    raise ValueError(shape.kind)

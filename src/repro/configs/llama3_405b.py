@@ -1,0 +1,22 @@
+"""llama3-405b [dense] — GQA, 128k vocab [arXiv:2407.21783]."""
+from repro.models.common import ModelConfig
+
+ARCH = "llama3-405b"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH, family="dense",
+        num_layers=126, d_model=16384, num_heads=128, num_kv_heads=8,
+        head_dim=128, d_ff=53248, vocab_size=128256,
+        rope_theta=500_000.0, activation="swiglu", norm_type="rmsnorm")
+
+
+def smoke_config() -> ModelConfig:
+    import jax.numpy as jnp
+    return ModelConfig(
+        name=ARCH + "-smoke", family="dense",
+        num_layers=2, d_model=64, num_heads=8, num_kv_heads=2, head_dim=8,
+        d_ff=160, vocab_size=256, activation="swiglu",
+        param_dtype=jnp.float32, compute_dtype=jnp.float32,
+        attn_chunk=32, q_chunk=32, ce_chunk=16)

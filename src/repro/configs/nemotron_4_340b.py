@@ -1,0 +1,22 @@
+"""nemotron-4-340b [dense] — GQA, squared-ReLU MLP [arXiv:2402.16819]."""
+from repro.models.common import ModelConfig
+
+ARCH = "nemotron-4-340b"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH, family="dense",
+        num_layers=96, d_model=18432, num_heads=96, num_kv_heads=8,
+        head_dim=192, d_ff=73728, vocab_size=256_000,
+        rope_theta=10_000.0, activation="relu2", norm_type="layernorm")
+
+
+def smoke_config() -> ModelConfig:
+    import jax.numpy as jnp
+    return ModelConfig(
+        name=ARCH + "-smoke", family="dense",
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=2, head_dim=16,
+        d_ff=192, vocab_size=256, activation="relu2", norm_type="layernorm",
+        param_dtype=jnp.float32, compute_dtype=jnp.float32,
+        attn_chunk=32, q_chunk=32, ce_chunk=16)

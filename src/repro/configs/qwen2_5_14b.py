@@ -1,0 +1,23 @@
+"""qwen2.5-14b [dense] — GQA with QKV bias [hf:Qwen/Qwen2.5-14B]."""
+from repro.models.common import ModelConfig
+
+ARCH = "qwen2.5-14b"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH, family="dense",
+        num_layers=48, d_model=5120, num_heads=40, num_kv_heads=8,
+        head_dim=128, d_ff=13824, vocab_size=152064,
+        qkv_bias=True, rope_theta=1_000_000.0, activation="swiglu",
+        norm_type="rmsnorm")
+
+
+def smoke_config() -> ModelConfig:
+    import jax.numpy as jnp
+    return ModelConfig(
+        name=ARCH + "-smoke", family="dense",
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=2, head_dim=16,
+        d_ff=128, vocab_size=256, qkv_bias=True, activation="swiglu",
+        param_dtype=jnp.float32, compute_dtype=jnp.float32,
+        attn_chunk=32, q_chunk=32, ce_chunk=16)

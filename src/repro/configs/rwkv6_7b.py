@@ -1,0 +1,23 @@
+"""rwkv6-7b [ssm] — Finch, data-dependent decay, attention-free
+[arXiv:2404.05892]. O(1) decode state -> runs the long_500k cell."""
+from repro.models.common import ModelConfig
+
+ARCH = "rwkv6-7b"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH, family="rwkv6",
+        num_layers=32, d_model=4096, num_heads=64, num_kv_heads=64,
+        head_dim=64, rwkv_head_dim=64, d_ff=14336, vocab_size=65536,
+        activation="swiglu", norm_type="rmsnorm")
+
+
+def smoke_config() -> ModelConfig:
+    import jax.numpy as jnp
+    return ModelConfig(
+        name=ARCH + "-smoke", family="rwkv6",
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=4,
+        head_dim=16, rwkv_head_dim=16, d_ff=128, vocab_size=256,
+        param_dtype=jnp.float32, compute_dtype=jnp.float32,
+        attn_chunk=32, q_chunk=32, ce_chunk=16)

@@ -1,0 +1,26 @@
+"""stablelm-1.6b [dense] — MHA (kv=heads), LayerNorm [hf:stabilityai/stablelm-2-1_6b].
+
+Adaptation note: StableLM-2 applies rotary to 25% of head dims; we apply
+full rotary (recorded in DESIGN.md — no effect on systems behaviour).
+"""
+from repro.models.common import ModelConfig
+
+ARCH = "stablelm-1.6b"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH, family="dense",
+        num_layers=24, d_model=2048, num_heads=32, num_kv_heads=32,
+        head_dim=64, d_ff=5632, vocab_size=100352,
+        rope_theta=10_000.0, activation="swiglu", norm_type="layernorm")
+
+
+def smoke_config() -> ModelConfig:
+    import jax.numpy as jnp
+    return ModelConfig(
+        name=ARCH + "-smoke", family="dense",
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=4, head_dim=16,
+        d_ff=128, vocab_size=256, activation="swiglu", norm_type="layernorm",
+        param_dtype=jnp.float32, compute_dtype=jnp.float32,
+        attn_chunk=32, q_chunk=32, ce_chunk=16)

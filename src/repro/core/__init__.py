@@ -1,0 +1,2 @@
+"""Core paper technique: offloading controller (Eqs 1-4), quantile sketch,
+router, cloud->edge replication, autoscaler, and the evaluation simulator."""

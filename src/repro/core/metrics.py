@@ -1,0 +1,74 @@
+"""Lightweight metrics registry — the Prometheus stand-in.
+
+The paper deploys a Prometheus instance per edge cluster with short data
+liveness, scraped by the offloading controller. Here each tier keeps ring
+buffers of recent observations; the controller reads fixed-size latency
+windows from them. Host-side (plain numpy) because this is scrape-cadence
+control-plane data; the on-device path uses ``core.quantile.Histogram``.
+"""
+
+from __future__ import annotations
+
+import collections
+from typing import Deque, Dict, List, Tuple
+
+import numpy as np
+
+
+class LatencyWindow:
+    """Fixed-capacity ring of recent request latencies for one function."""
+
+    def __init__(self, capacity: int = 256):
+        self.capacity = capacity
+        self._buf: Deque[float] = collections.deque(maxlen=capacity)
+
+    def record(self, latency_s: float) -> None:
+        self._buf.append(float(latency_s))
+
+    def window(self, size: int) -> Tuple[np.ndarray, np.ndarray]:
+        """Return (latencies, valid) padded/masked to ``size``."""
+        data = list(self._buf)[-size:]
+        lat = np.zeros(size, np.float32)
+        valid = np.zeros(size, bool)
+        if data:
+            lat[: len(data)] = data
+            valid[: len(data)] = True
+        return lat, valid
+
+    def __len__(self) -> int:
+        return len(self._buf)
+
+
+class MetricsRegistry:
+    """Per-function latency windows + scalar gauges/counters."""
+
+    def __init__(self, function_names: List[str], capacity: int = 256):
+        self.function_names = list(function_names)
+        self.latency: Dict[str, LatencyWindow] = {
+            n: LatencyWindow(capacity) for n in self.function_names}
+        self.counters: Dict[str, float] = collections.defaultdict(float)
+        self.gauges: Dict[str, float] = {}
+
+    def register(self, fn: str, capacity: int = 256) -> None:
+        """Add a function after construction (dynamic deployments)."""
+        if fn not in self.latency:
+            self.function_names.append(fn)
+            self.latency[fn] = LatencyWindow(capacity)
+
+    def record_latency(self, fn: str, latency_s: float) -> None:
+        self.latency[fn].record(latency_s)
+
+    def inc(self, name: str, v: float = 1.0) -> None:
+        self.counters[name] += v
+
+    def set_gauge(self, name: str, v: float) -> None:
+        self.gauges[name] = v
+
+    def latency_windows(self, size: int) -> Tuple[np.ndarray, np.ndarray]:
+        """Stacked (F, size) latency windows + masks, function-ordered."""
+        lats, valids = [], []
+        for n in self.function_names:
+            l, v = self.latency[n].window(size)
+            lats.append(l)
+            valids.append(v)
+        return np.stack(lats), np.stack(valids)

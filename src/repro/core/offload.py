@@ -1,0 +1,236 @@
+"""Edge-to-Cloud offloading controller — Eqs (1)-(4) of the paper.
+
+This is the paper's primary algorithmic contribution, implemented as a pure,
+vectorized JAX state machine so it can run under ``jit``/``vmap``/``lax.scan``
+and, in the beyond-paper configuration, *inside* the jitted serving step.
+
+Paper semantics (Simion et al., 2024, §3.3.2):
+
+    Eq (1)  r_l(t)  = p95(X_l(t)) / p50(X_l(t))
+    Eq (2)  r_l'(t) = sum_k c_decay^k * r_l(t-k) / sum_k c_decay^k,  k in [0, c_t]
+    Eq (3)  r_t(t)  = 0                                if r_l' < c_soft
+                      100                              if r_l' > c_hard
+                      100*(r_l'-c_soft)/(c_hard-c_soft) otherwise
+    Eq (4)  R_t(t)  = R_t(t-1)*c_in + r_t(t)*(1-c_in),  R_t(0) = 0
+
+All state is carried per *function* (the serverless unit); arrays have a
+leading ``F`` (num_functions) axis.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantile
+
+
+@dataclasses.dataclass(frozen=True)
+class OffloadConfig:
+    """Controller constants (names follow the paper).
+
+    Defaults were chosen to reproduce the qualitative behaviour of the
+    paper's ``auto`` policy on the simulator: offload engages under ramped
+    overload and disengages when the edge drains.
+    """
+
+    c_decay: float = 0.8      # exponential decay of past ratios, Eq (2)
+    c_t: int = 10             # history window length (steps), Eq (2)
+    c_soft: float = 1.25      # soft limit of the p95/p50 ratio, Eq (3)
+    c_hard: float = 2.5       # hard limit of the p95/p50 ratio, Eq (3)
+    c_in: float = 0.6         # inertia factor, Eq (4)
+    # --- beyond-paper extension (§4.2 of the paper lists this as missing):
+    # when True, the controller caps the offloaded fraction by the fraction
+    # the edge->cloud link can actually absorb, avoiding the paper's
+    # "offloading makes it worse when the network is the bottleneck" regime.
+    net_aware: bool = False
+    link_bytes_per_s: float = 100e6   # paper's observed 100 MB/s ceiling
+    req_bytes: float = 1e6            # avg request+response payload
+    # requests/s the controller assumes as current demand when net_aware
+    # (supplied per update call; this is only the fallback).
+    demand_rps: float = 100.0
+
+    def decay_weights(self) -> jnp.ndarray:
+        """w_k = c_decay^k / sum_j c_decay^j for k = 0..c_t (newest first)."""
+        k = jnp.arange(self.c_t + 1, dtype=jnp.float32)
+        w = jnp.power(jnp.float32(self.c_decay), k)
+        return w / jnp.sum(w)
+
+
+@jax.tree_util.register_pytree_node_class
+class OffloadState:
+    """Per-function controller state (a pytree of arrays).
+
+    Attributes:
+      ratios:  (F, c_t+1) ring buffer of past r_l values, element ``head``
+               is the most recent.
+      head:    () int32 ring-buffer write position.
+      filled:  (F,) int32 number of valid entries (for warm-up masking).
+      R:       (F,) float32 smoothed traffic percentage, Eq (4).
+    """
+
+    def __init__(self, ratios, head, filled, R):
+        self.ratios = ratios
+        self.head = head
+        self.filled = filled
+        self.R = R
+
+    @staticmethod
+    def init(num_functions: int, cfg: OffloadConfig) -> "OffloadState":
+        return OffloadState(
+            ratios=jnp.ones((num_functions, cfg.c_t + 1), jnp.float32),
+            head=jnp.zeros((), jnp.int32),
+            filled=jnp.zeros((num_functions,), jnp.int32),
+            R=jnp.zeros((num_functions,), jnp.float32),  # R_t(0) = 0
+        )
+
+    # --- pytree protocol -------------------------------------------------
+    def tree_flatten(self):
+        return (self.ratios, self.head, self.filled, self.R), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def latency_ratio(latencies: jnp.ndarray, valid: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Eq (1): tail-to-median ratio per function.
+
+    Args:
+      latencies: (F, W) window of recent request latencies (seconds).
+      valid: optional (F, W) bool mask of real observations.
+
+    Returns:
+      (F,) float32 ``p95/p50`` with a floor of 1.0 (a tail cannot be faster
+      than the median; guards the p50==0 corner).
+    """
+    lat = jnp.asarray(latencies, jnp.float32)
+    if valid is not None:
+        # Masked percentile: replace invalid with NaN and use nanpercentile.
+        lat = jnp.where(valid, lat, jnp.nan)
+        p95 = jnp.nanpercentile(lat, 95.0, axis=-1)
+        p50 = jnp.nanpercentile(lat, 50.0, axis=-1)
+    else:
+        p95 = jnp.percentile(lat, 95.0, axis=-1)
+        p50 = jnp.percentile(lat, 50.0, axis=-1)
+    ratio = p95 / jnp.maximum(p50, 1e-9)
+    ratio = jnp.where(jnp.isfinite(ratio), ratio, 1.0)
+    return jnp.maximum(ratio, 1.0)
+
+
+def latency_ratio_from_sketch(hist: quantile.Histogram) -> jnp.ndarray:
+    """Eq (1) from the on-device histogram sketch (production path)."""
+    p95 = quantile.quantile(hist, 0.95)
+    p50 = quantile.quantile(hist, 0.50)
+    ratio = p95 / jnp.maximum(p50, 1e-9)
+    ratio = jnp.where(jnp.isfinite(ratio), ratio, 1.0)
+    return jnp.maximum(ratio, 1.0)
+
+
+def _decayed_ratio(state: OffloadState, cfg: OffloadConfig) -> jnp.ndarray:
+    """Eq (2): exponentially decayed weighted sum over the ring buffer."""
+    n = cfg.c_t + 1
+    # Order the ring newest-first: index (head - k) mod n.
+    k = jnp.arange(n, dtype=jnp.int32)
+    idx = jnp.mod(state.head - k, n)
+    ordered = state.ratios[:, idx]                      # (F, c_t+1) newest first
+    w = cfg.decay_weights()                             # (c_t+1,)
+    # Warm-up: only the first ``filled`` entries are real; renormalize.
+    mask = (k[None, :] < jnp.maximum(state.filled[:, None], 1)).astype(jnp.float32)
+    wm = w[None, :] * mask
+    return jnp.sum(ordered * wm, axis=-1) / jnp.maximum(jnp.sum(wm, axis=-1), 1e-9)
+
+
+def target_percentage(r_prime: jnp.ndarray, cfg: OffloadConfig) -> jnp.ndarray:
+    """Eq (3): piecewise-linear map from decayed ratio to traffic percent."""
+    span = max(cfg.c_hard - cfg.c_soft, 1e-9)
+    lin = 100.0 * (r_prime - cfg.c_soft) / span
+    return jnp.clip(lin, 0.0, 100.0)
+
+
+def offload_update(
+    state: OffloadState,
+    latencies: jnp.ndarray,
+    cfg: OffloadConfig,
+    valid: jnp.ndarray | None = None,
+    demand_rps: jnp.ndarray | None = None,
+) -> Tuple[OffloadState, jnp.ndarray]:
+    """One controller step: Eqs (1), (2), (3), (4) in order.
+
+    Args:
+      state: controller state.
+      latencies: (F, W) latest latency window per function.
+      cfg: controller constants.
+      valid: optional (F, W) observation mask.
+      demand_rps: optional (F,) current request rate, used by the
+        net-aware extension.
+
+    Returns:
+      (new_state, R): R is the (F,) percentage of traffic to send cloud-ward.
+    """
+    r_l = latency_ratio(latencies, valid)               # Eq (1)
+    state = push_ratio(state, r_l)
+    return _finish_update(state, cfg, demand_rps)
+
+
+def offload_update_from_sketch(
+    state: OffloadState,
+    hist: quantile.Histogram,
+    cfg: OffloadConfig,
+    demand_rps: jnp.ndarray | None = None,
+) -> Tuple[OffloadState, jnp.ndarray]:
+    """Controller step reading Eq (1) from the histogram sketch."""
+    r_l = latency_ratio_from_sketch(hist)
+    state = push_ratio(state, r_l)
+    return _finish_update(state, cfg, demand_rps)
+
+
+def push_ratio(state: OffloadState, r_l: jnp.ndarray) -> OffloadState:
+    """Advance the ring buffer with a fresh Eq-(1) observation."""
+    n = state.ratios.shape[-1]
+    head = jnp.mod(state.head + 1, n)
+    ratios = state.ratios.at[:, head].set(r_l)
+    filled = jnp.minimum(state.filled + 1, n)
+    return OffloadState(ratios, head, filled, state.R)
+
+
+def _finish_update(state, cfg, demand_rps):
+    r_prime = _decayed_ratio(state, cfg)                # Eq (2)
+    r_t = target_percentage(r_prime, cfg)               # Eq (3)
+    R = state.R * cfg.c_in + r_t * (1.0 - cfg.c_in)     # Eq (4)
+    if cfg.net_aware:
+        rps = demand_rps if demand_rps is not None else jnp.full_like(R, cfg.demand_rps)
+        # Max fraction of demand the link can carry without saturating.
+        cap = 100.0 * cfg.link_bytes_per_s / jnp.maximum(rps * cfg.req_bytes, 1e-9)
+        R = jnp.minimum(R, jnp.clip(cap, 0.0, 100.0))
+    new_state = OffloadState(state.ratios, state.head, state.filled, R)
+    return new_state, R
+
+
+def scan_controller(
+    cfg: OffloadConfig,
+    latency_windows: jnp.ndarray,
+    valid: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """Run the controller over a (T, F, W) latency trace with ``lax.scan``.
+
+    Returns the (T, F) trajectory of R_t — used by tests and benchmarks.
+    """
+    T, F, _ = latency_windows.shape
+    state0 = OffloadState.init(F, cfg)
+
+    def step(state, inp):
+        if valid is None:
+            lat = inp
+            state, R = offload_update(state, lat, cfg)
+        else:
+            lat, v = inp
+            state, R = offload_update(state, lat, cfg, valid=v)
+        return state, R
+
+    xs = latency_windows if valid is None else (latency_windows, valid)
+    _, Rs = jax.lax.scan(step, state0, xs)
+    return Rs

@@ -1,0 +1,120 @@
+"""Streaming latency quantiles — the on-device Prometheus analogue.
+
+The paper scrapes request latencies into Prometheus and queries p95/p50.
+On a TPU there is no sidecar; instead each serving tier maintains a
+*decayed log-bucketed histogram* (exactly the shape of a Prometheus
+histogram with exponential buckets) as a small on-device array, updated
+inside the jitted serving step. Quantiles are read with the same
+interpolation rule Prometheus' ``histogram_quantile`` uses (linear within
+the bucket), done in log-space because the buckets are geometric.
+
+Everything is pure jnp: update/read are O(num_buckets) and vectorizable
+over the function axis F.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_pytree_node_class
+class Histogram:
+    """Decayed log-bucket histogram, vectorized over functions.
+
+    Attributes:
+      counts: (F, B) float32 decayed bucket counts.
+      log_lo: scalar — log of the smallest bucket edge.
+      log_hi: scalar — log of the largest bucket edge.
+    """
+
+    def __init__(self, counts, log_lo, log_hi):
+        self.counts = counts
+        self.log_lo = log_lo
+        self.log_hi = log_hi
+
+    @staticmethod
+    def init(num_functions: int, num_buckets: int = 64,
+             lo: float = 1e-4, hi: float = 1e3) -> "Histogram":
+        return Histogram(
+            counts=jnp.zeros((num_functions, num_buckets), jnp.float32),
+            log_lo=jnp.float32(jnp.log(lo)),
+            log_hi=jnp.float32(jnp.log(hi)),
+        )
+
+    # --- pytree protocol -------------------------------------------------
+    def tree_flatten(self):
+        return (self.counts, self.log_lo, self.log_hi), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def num_buckets(self) -> int:
+        return self.counts.shape[-1]
+
+
+def _bucket_index(hist: Histogram, x: jnp.ndarray) -> jnp.ndarray:
+    """Bucket of value x (clamped into range)."""
+    B = hist.num_buckets
+    t = (jnp.log(jnp.maximum(x, 1e-30)) - hist.log_lo) / (hist.log_hi - hist.log_lo)
+    return jnp.clip((t * B).astype(jnp.int32), 0, B - 1)
+
+
+def update(hist: Histogram, latencies: jnp.ndarray,
+           valid: jnp.ndarray | None = None, decay: float = 0.9) -> Histogram:
+    """Fold a (F, W) window of observations into the decayed histogram.
+
+    ``decay`` plays the role of Prometheus' retention: old observations
+    fade geometrically per update call (the paper configures "short data
+    liveness" for the same reason).
+    """
+    lat = jnp.asarray(latencies, jnp.float32)
+    idx = _bucket_index(hist, lat)                      # (F, W)
+    w = jnp.ones_like(lat) if valid is None else valid.astype(jnp.float32)
+    onehot = jax.nn.one_hot(idx, hist.num_buckets, dtype=jnp.float32)  # (F,W,B)
+    fresh = jnp.einsum("fw,fwb->fb", w, onehot)
+    return Histogram(hist.counts * decay + fresh, hist.log_lo, hist.log_hi)
+
+
+def quantile(hist: Histogram, q: float) -> jnp.ndarray:
+    """Prometheus-style histogram_quantile: (F,) value of quantile ``q``.
+
+    Linear interpolation inside the winning bucket, geometric bucket edges.
+    Empty histograms return 0.
+    """
+    counts = hist.counts                                 # (F, B)
+    B = hist.num_buckets
+    total = jnp.sum(counts, axis=-1, keepdims=True)      # (F, 1)
+    cum = jnp.cumsum(counts, axis=-1)                    # (F, B)
+    target = q * total                                   # (F, 1)
+    # First bucket where cum >= target.
+    hit = cum >= jnp.maximum(target, 1e-12)
+    idx = jnp.argmax(hit, axis=-1)                       # (F,)
+    f = jnp.arange(counts.shape[0])
+    cum_before = jnp.where(idx > 0, cum[f, jnp.maximum(idx - 1, 0)], 0.0)
+    in_bucket = jnp.maximum(counts[f, idx], 1e-12)
+    frac = jnp.clip((target[:, 0] - cum_before) / in_bucket, 0.0, 1.0)
+    # Geometric bucket edges in log space.
+    width = (hist.log_hi - hist.log_lo) / B
+    log_left = hist.log_lo + idx.astype(jnp.float32) * width
+    val = jnp.exp(log_left + frac * width)
+    return jnp.where(total[:, 0] > 0, val, 0.0)
+
+
+def quantiles(hist: Histogram, qs: Tuple[float, ...]) -> jnp.ndarray:
+    """(len(qs), F) stacked quantiles."""
+    return jnp.stack([quantile(hist, q) for q in qs])
+
+
+@dataclasses.dataclass(frozen=True)
+class SketchSpec:
+    """Config for building per-tier histograms."""
+    num_buckets: int = 64
+    lo: float = 1e-4
+    hi: float = 1e3
+    decay: float = 0.9

@@ -1,0 +1,85 @@
+"""Traffic splitting between the edge and cloud tiers.
+
+The paper's API gateway "makes the decision randomly, and only a percentage
+of traffic (decided by the offloading strategy) is being sent to the cloud".
+TPU serving is batched, so the router exposes both:
+
+  * ``route_bernoulli`` — the paper-faithful per-request coin flip;
+  * ``route_batch``     — expectation-matched batch split (deterministic
+    count = floor(B*p) plus a Bernoulli remainder), which has the same mean
+    and strictly lower variance. This is the production path.
+
+Both are pure jnp and run under jit.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def route_bernoulli(key: jax.Array, pct: jnp.ndarray, fn_ids: jnp.ndarray) -> jnp.ndarray:
+    """Per-request i.i.d. routing (paper-faithful).
+
+    Args:
+      key: PRNG key.
+      pct: (F,) percentage of traffic to offload per function.
+      fn_ids: (B,) function id of each request in the batch.
+
+    Returns:
+      (B,) bool — True = send to cloud.
+    """
+    p = jnp.clip(pct[fn_ids] / 100.0, 0.0, 1.0)
+    return jax.random.uniform(key, fn_ids.shape) < p
+
+
+def route_batch(key: jax.Array, pct: jnp.ndarray, fn_ids: jnp.ndarray,
+                num_functions: int) -> jnp.ndarray:
+    """Expectation-matched split: per function, exactly ``round-ish(B_f * p_f)``
+    requests go to the cloud (floor + Bernoulli(frac) extra).
+
+    Returns (B,) bool mask, True = cloud.
+    """
+    B = fn_ids.shape[0]
+    p = jnp.clip(pct / 100.0, 0.0, 1.0)                       # (F,)
+    onehot = jax.nn.one_hot(fn_ids, num_functions, dtype=jnp.float32)  # (B,F)
+    per_fn = jnp.sum(onehot, axis=0)                          # (F,) counts
+    want = per_fn * p                                         # (F,) expected cloud
+    base = jnp.floor(want)
+    frac = want - base
+    extra = (jax.random.uniform(key, (num_functions,)) < frac).astype(jnp.float32)
+    n_cloud = base + extra                                    # (F,)
+    # Within each function, rank its requests by a random permutation value
+    # and send the lowest-ranked n_cloud[f] to the cloud.
+    noise = jax.random.uniform(jax.random.fold_in(key, 1), (B,))
+    # rank of request i among same-function requests
+    same = onehot @ onehot.T                                  # (B,B) 1 if same fn
+    rank = jnp.sum(same * (noise[None, :] < noise[:, None]), axis=1)
+    return rank < n_cloud[fn_ids]
+
+
+def split_counts(mask: jnp.ndarray, fn_ids: jnp.ndarray,
+                 num_functions: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(F,) edge / cloud request counts from a routing mask (for metrics)."""
+    onehot = jax.nn.one_hot(fn_ids, num_functions, dtype=jnp.int32)
+    cloud = jnp.sum(onehot * mask[:, None].astype(jnp.int32), axis=0)
+    total = jnp.sum(onehot, axis=0)
+    return total - cloud, cloud
+
+
+def hedged_mask(key: jax.Array, latencies: jnp.ndarray, p99: jnp.ndarray,
+                fn_ids: jnp.ndarray) -> jnp.ndarray:
+    """Beyond-paper: mark in-flight requests whose age already exceeds the
+    function's p99 for duplication on the other tier (hedged request /
+    backup request — request-level straggler mitigation).
+
+    Args:
+      latencies: (B,) current age of each in-flight request.
+      p99: (F,) per-function p99 latency estimate.
+    Returns:
+      (B,) bool — True = issue a hedge.
+    """
+    del key  # deterministic rule; key kept for API symmetry
+    return latencies > p99[fn_ids]

@@ -1,0 +1,311 @@
+"""Discrete-event simulator of the edge-cloud continuum testbed (§4 of the paper).
+
+Reproduces the paper's experimental apparatus — 4 Raspberry-Pi-class edge
+instances, an elastic cloud tier, a shared 100 MB/s edge->cloud link, a
+ramped open-loop request generator — so that Table 2 (successful responses
+per traffic policy) and Figure 2 (latency / CPU / memory / network time
+series) can be regenerated deterministically on this machine.
+
+Crucially the ``auto`` policy exercises the *real* controller from
+``repro.core.offload`` (the same jitted code the live serving tier runs),
+not a reimplementation: the simulator is the calibration harness for the
+paper's Eqs (1)-(4).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from collections import deque
+from typing import Deque, Dict, List, Optional, Tuple, Union
+
+import jax
+import numpy as np
+
+from repro.core import offload
+from repro.core.metrics import MetricsRegistry
+from repro.core.workloads import PROFILES, WorkloadProfile
+
+
+@dataclasses.dataclass(frozen=True)
+class SimConfig:
+    duration_s: float = 600.0
+    low_rps: float = 2.0
+    high_rps: float = 16.0
+    ramp_start_s: float = 60.0
+    ramp_end_s: float = 240.0
+    edge_instances: int = 4            # the paper's 4x Raspberry Pi 3B+
+    edge_slots_per_instance: int = 1
+    cloud_slots: int = 64
+    link_bandwidth_Bps: float = 100e6  # paper: "maximum of 100MB/s"
+    link_rtt_s: float = 0.04
+    timeout_s: float = 10.0
+    control_interval_s: float = 1.0    # Prometheus scrape cadence
+    metric_interval_s: float = 5.0
+    window: int = 64                   # latency window fed to Eq (1)
+    mem_baseline_mb: float = 180.0
+    # Knative queue-proxy semantics: per-instance request queue is bounded;
+    # overflow is rejected immediately (503). Fast rejections are *part of*
+    # the latency distribution Prometheus scrapes — they are what keeps
+    # Eq (1) bimodal (and hence alive) under deep overload.
+    queue_depth_per_slot: int = 8
+    reject_latency_s: float = 0.005
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class SimResult:
+    policy: str
+    workload: str
+    successes: int
+    failures: int
+    times: np.ndarray              # (T,) metric timestamps
+    latency_avg: np.ndarray        # (T,) mean completed latency per interval
+    cpu_util: np.ndarray           # (T,) edge busy fraction
+    mem_mb: np.ndarray             # (T,) edge resident memory
+    net_MBps: np.ndarray           # (T,) edge->cloud egress
+    offload_pct: np.ndarray        # (T,) controller output
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "successes": self.successes,
+            "failures": self.failures,
+            "latency_avg": float(np.nanmean(self.latency_avg)),
+            "cpu_peak": float(self.cpu_util.max(initial=0.0)),
+            "net_peak_MBps": float(self.net_MBps.max(initial=0.0)),
+        }
+
+
+# Event kinds, ordered for deterministic tie-breaking.
+_ARRIVAL, _EDGE_DONE, _CLOUD_DONE, _CONTROL, _METRIC = range(5)
+
+
+def _service_sample(rng: np.random.Generator, mean: float, cv: float) -> float:
+    """Lognormal service time with given mean and coefficient of variation."""
+    sigma2 = np.log(1.0 + cv * cv)
+    mu = np.log(mean) - 0.5 * sigma2
+    return float(rng.lognormal(mu, np.sqrt(sigma2)))
+
+
+class ContinuumSimulator:
+    """One workload, one policy, one run."""
+
+    def __init__(self, workload: str, policy: Union[float, str],
+                 cfg: SimConfig = SimConfig(),
+                 offload_cfg: Optional[offload.OffloadConfig] = None):
+        if workload not in PROFILES:
+            raise ValueError(f"unknown workload {workload!r}")
+        self.profile: WorkloadProfile = PROFILES[workload]
+        self.cfg = cfg
+        self.policy = policy
+        self.rng = np.random.default_rng(cfg.seed)
+        self.metrics = MetricsRegistry([workload], capacity=max(cfg.window * 4, 256))
+        self.offload_cfg = offload_cfg or offload.OffloadConfig()
+        self._auto = isinstance(policy, str) and policy.startswith("auto")
+        if self._auto and "net" in policy:
+            self.offload_cfg = dataclasses.replace(
+                self.offload_cfg, net_aware=True,
+                link_bytes_per_s=cfg.link_bandwidth_Bps,
+                req_bytes=self.profile.payload_bytes)
+        self._ctrl_state = offload.OffloadState.init(1, self.offload_cfg)
+        self._update = jax.jit(
+            lambda s, lat, v, rps: offload.offload_update(
+                s, lat, self.offload_cfg, valid=v, demand_rps=rps))
+
+    # ------------------------------------------------------------------
+    def _rate(self, t: float) -> float:
+        c = self.cfg
+        if t < c.ramp_start_s:
+            return c.low_rps
+        if t >= c.ramp_end_s:
+            return c.high_rps
+        frac = (t - c.ramp_start_s) / (c.ramp_end_s - c.ramp_start_s)
+        return c.low_rps + frac * (c.high_rps - c.low_rps)
+
+    def run(self) -> SimResult:
+        cfg, prof = self.cfg, self.profile
+        events: List[Tuple[float, int, int, tuple]] = []
+        seq = itertools.count()
+
+        def push(t: float, kind: int, payload: tuple = ()):
+            heapq.heappush(events, (t, next(seq), kind, payload))
+
+        # --- state ----------------------------------------------------
+        edge_slots = cfg.edge_instances * cfg.edge_slots_per_instance
+        edge_busy = 0
+        edge_queue: Deque[Tuple[float]] = deque()     # (arrival_time,)
+        cloud_busy = 0
+        cloud_queue: Deque[Tuple[float]] = deque()
+        link_free_at = 0.0
+        pct = float(self.policy) if not self._auto else 0.0
+        successes = failures = 0
+        arrivals_in_interval = 0
+        bytes_in_interval = 0.0
+        completed_lat: List[float] = []
+        busy_integral = 0.0
+        last_busy_t = 0.0
+
+        ts, lat_s, cpu_s, mem_s, net_s, off_s = ([] for _ in range(6))
+
+        def note_busy(t: float):
+            nonlocal busy_integral, last_busy_t
+            busy_integral += edge_busy / max(edge_slots, 1) * (t - last_busy_t)
+            last_busy_t = t
+
+        # --- seed events ------------------------------------------------
+        push(self.rng.exponential(1.0 / self._rate(0.0)), _ARRIVAL)
+        push(cfg.control_interval_s, _CONTROL)
+        push(cfg.metric_interval_s, _METRIC)
+
+        def start_edge(t: float, arr: float):
+            nonlocal edge_busy, successes, failures
+            note_busy(t)
+            edge_busy += 1
+            svc = _service_sample(self.rng, prof.edge_service_s, prof.cv)
+            push(t + svc, _EDGE_DONE, (arr,))
+
+        def start_cloud(t: float, arr: float):
+            nonlocal cloud_busy
+            cloud_busy += 1
+            svc = _service_sample(self.rng, prof.cloud_service_s, prof.cv)
+            push(t + svc, _CLOUD_DONE, (arr,))
+
+        while events:
+            t, _, kind, payload = heapq.heappop(events)
+            if t > cfg.duration_s:
+                break
+
+            if kind == _ARRIVAL:
+                arrivals_in_interval += 1
+                to_cloud = self.rng.uniform() * 100.0 < pct
+                if to_cloud:
+                    # Serialize over the shared link (FIFO pipe model):
+                    # saturation shows up as link_free_at running ahead of t.
+                    xfer = prof.payload_bytes / cfg.link_bandwidth_Bps
+                    start = max(t, link_free_at)
+                    link_free_at = start + xfer
+                    bytes_in_interval += prof.payload_bytes
+                    ready = link_free_at + cfg.link_rtt_s
+                    if cloud_busy < cfg.cloud_slots:
+                        start_cloud(ready, t)
+                    else:
+                        cloud_queue.append((t,))
+                else:
+                    if edge_busy < edge_slots:
+                        start_edge(t, t)
+                    elif len(edge_queue) < edge_slots * cfg.queue_depth_per_slot:
+                        edge_queue.append((t,))
+                    else:
+                        # queue-proxy overflow: immediate 503
+                        failures += 1
+                        self.metrics.record_latency(prof.name, cfg.reject_latency_s)
+                push(t + self.rng.exponential(1.0 / self._rate(t)), _ARRIVAL)
+
+            elif kind == _EDGE_DONE:
+                (arr,) = payload
+                note_busy(t)
+                edge_busy -= 1
+                lat = t - arr
+                # Prometheus sees every completed request's latency,
+                # successful or not; only the success *counter* is gated.
+                self.metrics.record_latency(prof.name, lat)
+                if lat <= cfg.timeout_s:
+                    successes += 1
+                    completed_lat.append(lat)
+                else:
+                    failures += 1
+                # admit next from queue, dropping timed-out waiters
+                while edge_queue:
+                    (qarr,) = edge_queue.popleft()
+                    if t - qarr > cfg.timeout_s:
+                        failures += 1
+                        self.metrics.record_latency(prof.name, t - qarr)
+                        continue
+                    start_edge(t, qarr)
+                    break
+
+            elif kind == _CLOUD_DONE:
+                (arr,) = payload
+                cloud_busy -= 1
+                lat = t - arr
+                if lat <= cfg.timeout_s:
+                    successes += 1
+                    completed_lat.append(lat)
+                    # Cloud latencies are *not* fed to Eq (1): the paper's
+                    # strategy "uses the request latency metrics of all the
+                    # functions running at the Edge".
+                else:
+                    failures += 1
+                while cloud_queue:
+                    (qarr,) = cloud_queue.popleft()
+                    if t - qarr > cfg.timeout_s:
+                        failures += 1
+                        continue
+                    start_cloud(t, qarr)
+                    break
+
+            elif kind == _CONTROL:
+                if self._auto:
+                    lat, valid = self.metrics.latency_windows(cfg.window)
+                    # The scrape also sees *in-flight* request ages (Knative's
+                    # queue-proxy exposes queue depth/age gauges). Mixing the
+                    # ages of waiting requests into X_l(t) is what lets Eq (1)
+                    # fire during onset, before slow completions drain out.
+                    q = list(edge_queue)
+                    k = min(len(q), cfg.window // 2)
+                    # Sample evenly across the queue: the age spread (new
+                    # arrivals vs head-of-line) is the bimodality Eq (1) keys on.
+                    sel = [q[int(i * len(q) / k)] for i in range(k)] if k else []
+                    ages = [t - qarr for (qarr,) in sel]
+                    if ages:
+                        k = len(ages)
+                        lat = lat.copy(); valid = valid.copy()
+                        # Ages displace the *oldest* completions so the fresh
+                        # queue state dominates stale (often timeout-censored)
+                        # history.
+                        lat[0, :k] = ages
+                        valid[0, :k] = True
+                    if valid.any():
+                        rps = np.asarray(
+                            [max(arrivals_in_interval / cfg.control_interval_s, 1e-3)],
+                            np.float32)
+                        self._ctrl_state, R = self._update(
+                            self._ctrl_state, lat, valid, rps)
+                        pct = float(R[0])
+                push(t + cfg.control_interval_s, _CONTROL)
+                arrivals_in_interval = 0
+
+            elif kind == _METRIC:
+                note_busy(t)
+                ts.append(t)
+                lat_s.append(float(np.mean(completed_lat)) if completed_lat else np.nan)
+                completed_lat.clear()
+                cpu_s.append(busy_integral / cfg.metric_interval_s)
+                busy_integral = 0.0
+                active = edge_busy + len(edge_queue)
+                mem_s.append(cfg.mem_baseline_mb + active * prof.mem_mb)
+                net_s.append(bytes_in_interval / cfg.metric_interval_s / 1e6)
+                bytes_in_interval = 0.0
+                off_s.append(pct)
+                push(t + cfg.metric_interval_s, _METRIC)
+
+        # Drain: everything still queued at the end never completed.
+        failures += len(edge_queue) + len(cloud_queue) + edge_busy + cloud_busy
+
+        return SimResult(
+            policy=str(self.policy), workload=prof.name,
+            successes=successes, failures=failures,
+            times=np.asarray(ts), latency_avg=np.asarray(lat_s),
+            cpu_util=np.asarray(cpu_s), mem_mb=np.asarray(mem_s),
+            net_MBps=np.asarray(net_s), offload_pct=np.asarray(off_s))
+
+
+def run_policy_sweep(workload: str,
+                     policies=(0.0, 25.0, 50.0, 75.0, 100.0, "auto"),
+                     cfg: SimConfig = SimConfig()) -> Dict[str, SimResult]:
+    """The paper's Table 2 row for one workload."""
+    out: Dict[str, SimResult] = {}
+    for p in policies:
+        out[str(p)] = ContinuumSimulator(workload, p, cfg).run()
+    return out

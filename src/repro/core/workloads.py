@@ -1,0 +1,104 @@
+"""The paper's four FaaS workloads as JAX function bodies.
+
+§4.1: "matrix multiplication (MatMult), image processing (Image Proc.),
+random I/O, and a combination of these three loads (Mixed)". These are the
+request bodies the platform serves in examples/tests, and the source of the
+simulator's service-time and payload constants.
+
+Each body is a pure function of (key, size) so it jits once per size.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def matmult(key: jax.Array, n: int = 256) -> jnp.ndarray:
+    """Dense matmul chain — CPU/MXU-bound."""
+    a = jax.random.normal(key, (n, n), jnp.float32)
+    b = jax.random.normal(jax.random.fold_in(key, 1), (n, n), jnp.float32)
+    c = a @ b
+    c = c @ b.T
+    return jnp.tanh(c).mean()
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def image_proc(key: jax.Array, hw: int = 128) -> jnp.ndarray:
+    """Separable blur + sobel + normalize over an image — memory-bound."""
+    img = jax.random.uniform(key, (1, hw, hw, 3), jnp.float32)
+    k = jnp.array([1.0, 4.0, 6.0, 4.0, 1.0], jnp.float32)
+    k = (k / k.sum()).reshape(5, 1, 1, 1)
+    blur_h = jax.lax.conv_general_dilated(
+        img, jnp.broadcast_to(k, (5, 1, 3, 3)), (1, 1), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    sob = jnp.array([[-1, 0, 1], [-2, 0, 2], [-1, 0, 1]], jnp.float32)
+    sob = jnp.broadcast_to(sob.reshape(3, 3, 1, 1), (3, 3, 3, 3))
+    edges = jax.lax.conv_general_dilated(
+        blur_h, sob, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return (edges - edges.mean()).std()
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def random_io(key: jax.Array, n: int = 1 << 16) -> jnp.ndarray:
+    """Random gather/scatter over a buffer — latency/IO-bound stand-in."""
+    buf = jnp.arange(n, dtype=jnp.float32)
+    idx = jax.random.randint(key, (n // 4,), 0, n)
+    vals = buf[idx]
+    buf = buf.at[(idx * 7919) % n].add(vals * 0.5)
+    return buf.sum()
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def mixed(key: jax.Array, scale: int = 128) -> jnp.ndarray:
+    """The paper's combined load: one of each, summed."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    return (matmult(k1, scale) + image_proc(k2, scale) +
+            random_io(k3, scale * scale)).sum()
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadProfile:
+    """Simulator constants for one workload (per-tier service model).
+
+    ``edge_service_s``/``cloud_service_s`` are mean service times on a
+    single slot; ``payload_bytes`` is the request+response transfer that a
+    cloud-routed request pushes over the edge->cloud link; ``mem_mb`` is the
+    per-request resident footprint on the edge (Figure 2 "Memory").
+    Values are calibrated to reproduce the paper's qualitative Table 2 /
+    Figure 2 regimes (see benchmarks/table2_responses.py).
+    """
+    name: str
+    fn: Callable
+    edge_service_s: float
+    cloud_service_s: float
+    payload_bytes: float
+    mem_mb: float
+    cv: float = 0.10            # service-time CV (RPi service is near-deterministic)
+
+
+PROFILES: Dict[str, WorkloadProfile] = {
+    # MatMult: CPU-heavy on the edge, huge payloads (matrices) -> the
+    # workload whose full offload saturates the 100 MB/s link in the paper.
+    "matmult": WorkloadProfile("matmult", matmult,
+                               edge_service_s=0.85, cloud_service_s=0.10,
+                               payload_bytes=6.0e6, mem_mb=96.0),
+    # Image processing: moderate CPU, moderate payloads.
+    "image_proc": WorkloadProfile("image_proc", image_proc,
+                                  edge_service_s=0.55, cloud_service_s=0.08,
+                                  payload_bytes=2.5e6, mem_mb=48.0),
+    # Random I/O: cheap compute, tiny payloads -> offloading helps most
+    # (paper: 4852 -> 9408 successes from 0% to 100%).
+    "io": WorkloadProfile("io", random_io,
+                          edge_service_s=0.40, cloud_service_s=0.06,
+                          payload_bytes=2.0e5, mem_mb=16.0),
+    # Mixed: average of the three.
+    "mixed": WorkloadProfile("mixed", mixed,
+                             edge_service_s=0.60, cloud_service_s=0.08,
+                             payload_bytes=2.9e6, mem_mb=56.0),
+}

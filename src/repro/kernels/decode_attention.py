@@ -1,0 +1,123 @@
+"""Pallas flash-decode: one query token vs a large KV cache.
+
+Decode is memory-bound (read T x Hkv x D cache bytes per generated token),
+so the kernel's job is to stream the cache through VMEM exactly once, in
+bf16, with fp32 accumulators in scratch:
+
+* grid = (batch, kv_heads, T/blk_k); the kv axis iterates sequentially and
+  carries (acc, m, l) for all G = Hq/Hkv query heads of this kv head.
+* q is tiled (G, D) per (batch, kv head); k/v stream (blk_k, D) tiles.
+* The cache may be a rolling buffer: slot validity and causality are
+  positional predicates on kv_pos (pos < 0 = empty slot), identical to
+  the prefill kernel's rule.
+
+This is the kernel the paper-representative decode cells hillclimb onto:
+it removes the fp32 cache materialization the XLA baseline exhibits (see
+EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, qp_ref, kp_ref, o_ref,
+            acc_ref, m_ref, l_ref, *, scale: float,
+            window: Optional[int], softcap: Optional[float], nk: int):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    qg = q_ref[0, 0, :, :].astype(jnp.float32) * scale       # (G, D)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)                # (bk, D)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)                # (bk, D)
+    qp = qp_ref[0]                                           # ()
+    kp = kp_ref[0, :]                                        # (bk,)
+
+    s = jax.lax.dot_general(qg, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (G, bk)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    d = qp - kp
+    ok = (kp >= 0) & (d >= 0)
+    if window is not None:
+        ok &= d < window
+    s = jnp.where(ok[None, :], s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    alive = m_new > NEG_INF / 2
+    p = jnp.where(alive[:, None], jnp.exp(s - m_new[:, None]), 0.0)
+    corr = jnp.where(alive, jnp.exp(m_prev - m_new), 1.0)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+    m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _out():
+        den = jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0, 0, :, :] = (acc_ref[...] / den).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "softcap", "blk_k",
+                                             "interpret"))
+def decode_attention(q, k, v, q_pos, kv_pos, *,
+                     window: Optional[int] = None,
+                     softcap: Optional[float] = None,
+                     blk_k: int = 512, interpret: bool = False):
+    """q: (B,Hq,D); k/v: (B,T,Hkv,D); q_pos: (B,); kv_pos: (B,T).
+
+    Returns (B,Hq,D) in q.dtype.
+    """
+    B, Hq, D = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    scale = D ** -0.5
+
+    blk_k = min(blk_k, T)
+    pad_t = (-T) % blk_k
+    if pad_t:
+        k = jnp.pad(k, ((0, 0), (0, pad_t), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_t), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, ((0, 0), (0, pad_t)), constant_values=-1)
+    Tp = T + pad_t
+    nk = Tp // blk_k
+
+    qg = q.reshape(B, Hkv, G, D)
+    kernel = functools.partial(_kernel, scale=scale, window=window,
+                               softcap=softcap, nk=nk)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, Hkv, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, h, ki: (b, h, 0, 0)),
+            pl.BlockSpec((1, blk_k, 1, D), lambda b, h, ki: (b, ki, h, 0)),
+            pl.BlockSpec((1, blk_k, 1, D), lambda b, h, ki: (b, ki, h, 0)),
+            pl.BlockSpec((1,), lambda b, h, ki: (b,)),
+            pl.BlockSpec((1, blk_k), lambda b, h, ki: (b, ki)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, ki: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, D), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(qg, k, v, q_pos, kv_pos)
+    return out.reshape(B, Hq, D)

@@ -1,0 +1,134 @@
+"""Pallas TPU flash attention (GQA, causal, sliding-window, softcap).
+
+Blocked online-softmax, the TPU-native adaptation of FlashAttention:
+
+* grid = (batch, q_heads, S/blk_q, T/blk_k); the kv axis is the innermost,
+  sequentially-iterated dimension ("arbitrary" semantics) so the running
+  max / denominator / accumulator live in VMEM scratch across kv steps.
+* BlockSpecs tile q and out to (blk_q, head_dim) and k/v to
+  (blk_k, head_dim) per (batch, head) — MXU-aligned when blk_* are
+  multiples of 128 and head_dim is 64/128.
+* Masking is positional (absolute positions for q and kv): causality,
+  sliding windows and empty cache slots (pos < 0) are one predicate, so
+  the same kernel serves training, prefill and rolling-buffer caches.
+* GQA: query head h reads kv head h // (Hq // Hkv) — no head replication
+  in HBM.
+
+Validated against ``ref.flash_attention`` in interpret mode on CPU
+(tests/test_kernels.py sweeps shapes/dtypes/windows).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, qp_ref, kp_ref, o_ref,
+            acc_ref, m_ref, l_ref, *, scale: float, causal: bool,
+            window: Optional[int], softcap: Optional[float], nk: int):
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, :, 0, :].astype(jnp.float32) * scale        # (bq, D)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)                # (bk, D)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)                # (bk, D)
+    qp = qp_ref[0, :]                                        # (bq,)
+    kp = kp_ref[0, :]                                        # (bk,)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (bq, bk)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+
+    d = qp[:, None] - kp[None, :]
+    ok = kp[None, :] >= 0
+    if causal:
+        ok &= d >= 0
+    if window is not None:
+        ok &= d < window
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    alive = m_new > NEG_INF / 2
+    p = jnp.where(alive[:, None], jnp.exp(s - m_new[:, None]), 0.0)
+    corr = jnp.where(alive, jnp.exp(m_prev - m_new), 1.0)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+    m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _out():
+        den = jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0, :, 0, :] = (acc_ref[...] / den).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "softcap",
+                                             "blk_q", "blk_k", "interpret"))
+def flash_attention(q, k, v, q_pos, kv_pos, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    softcap: Optional[float] = None,
+                    blk_q: int = 128, blk_k: int = 128,
+                    interpret: bool = False):
+    """q: (B,S,Hq,D); k/v: (B,T,Hkv,D); q_pos: (B,S); kv_pos: (B,T).
+
+    Returns (B,S,Hq,D) in q.dtype.
+    """
+    B, S, Hq, D = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    scale = D ** -0.5
+
+    blk_q = min(blk_q, S)
+    blk_k = min(blk_k, T)
+    pad_s = (-S) % blk_q
+    pad_t = (-T) % blk_k
+    if pad_s:
+        q = jnp.pad(q, ((0, 0), (0, pad_s), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, pad_s)), constant_values=-1)
+    if pad_t:
+        k = jnp.pad(k, ((0, 0), (0, pad_t), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_t), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, ((0, 0), (0, pad_t)), constant_values=-1)
+    Sp, Tp = S + pad_s, T + pad_t
+    nq, nk = Sp // blk_q, Tp // blk_k
+
+    kernel = functools.partial(_kernel, scale=scale, causal=causal,
+                               window=window, softcap=softcap, nk=nk)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, Hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, blk_q, 1, D), lambda b, h, qi, ki: (b, qi, h, 0)),
+            pl.BlockSpec((1, blk_k, 1, D), lambda b, h, qi, ki: (b, ki, h // G, 0)),
+            pl.BlockSpec((1, blk_k, 1, D), lambda b, h, qi, ki: (b, ki, h // G, 0)),
+            pl.BlockSpec((1, blk_q), lambda b, h, qi, ki: (b, qi)),
+            pl.BlockSpec((1, blk_k), lambda b, h, qi, ki: (b, ki)),
+        ],
+        out_specs=pl.BlockSpec((1, blk_q, 1, D), lambda b, h, qi, ki: (b, qi, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Sp, Hq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((blk_q, D), jnp.float32),
+            pltpu.VMEM((blk_q,), jnp.float32),
+            pltpu.VMEM((blk_q,), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(q, k, v, q_pos, kv_pos)
+    return out[:, :S]

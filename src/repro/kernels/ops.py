@@ -1,0 +1,118 @@
+"""Jit'd public wrappers over the Pallas kernels.
+
+Call sites go through these (``cfg.use_pallas=True`` flips the model code
+here); each op:
+
+* pads/validates shapes, picks TPU-aligned block sizes;
+* runs ``interpret=True`` automatically on CPU (the container target) and
+  compiled Mosaic on TPU;
+* carries a ``custom_vjp`` whose backward recomputes through the pure-jnp
+  oracle (``ref.py``) — numerically identical to differentiating the
+  oracle, so training through kernels needs no hand-written backward
+  kernels while inference gets the fused forward.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import decode_attention as _dec
+from repro.kernels import flash_attention as _fa
+from repro.kernels import ref
+from repro.kernels import rwkv6_scan as _rwkv
+from repro.kernels import ssd_scan as _ssd
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+# --------------------------------------------------------------------------
+# flash attention
+# --------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7))
+def flash_attention(q, k, v, q_pos, kv_pos, causal=True, window=None,
+                    softcap=None):
+    return _fa.flash_attention(q, k, v, q_pos, kv_pos, causal=causal,
+                               window=window, softcap=softcap,
+                               interpret=_on_cpu())
+
+
+def _fa_fwd(q, k, v, q_pos, kv_pos, causal, window, softcap):
+    out = flash_attention(q, k, v, q_pos, kv_pos, causal, window, softcap)
+    return out, (q, k, v, q_pos, kv_pos)
+
+
+def _fa_bwd(causal, window, softcap, res, g):
+    q, k, v, q_pos, kv_pos = res
+    def f(q, k, v):
+        return ref.flash_attention(q, k, v, q_pos, kv_pos, causal=causal,
+                                   window=window, softcap=softcap)
+    _, vjp = jax.vjp(f, q, k, v)
+    dq, dk, dv = vjp(g)
+    return dq, dk, dv, None, None
+
+
+flash_attention.defvjp(_fa_fwd, _fa_bwd)
+
+
+# --------------------------------------------------------------------------
+# decode attention (inference only — no vjp needed, but harmless)
+# --------------------------------------------------------------------------
+
+
+def decode_attention(q, k, v, q_pos, kv_pos, window=None, softcap=None):
+    return _dec.decode_attention(q, k, v, q_pos, kv_pos, window=window,
+                                 softcap=softcap, interpret=_on_cpu())
+
+
+# --------------------------------------------------------------------------
+# WKV6
+# --------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def rwkv6_scan(r, k, v, lw, u, s0):
+    return _rwkv.rwkv6_scan(r, k, v, lw, u, s0, interpret=_on_cpu())
+
+
+def _rwkv_fwd(r, k, v, lw, u, s0):
+    return rwkv6_scan(r, k, v, lw, u, s0), (r, k, v, lw, u, s0)
+
+
+def _rwkv_bwd(res, g):
+    r, k, v, lw, u, s0 = res
+    _, vjp = jax.vjp(lambda *a: ref.rwkv6_scan(*a), r, k, v, lw, u, s0)
+    return vjp(g)
+
+
+rwkv6_scan.defvjp(_rwkv_fwd, _rwkv_bwd)
+
+
+# --------------------------------------------------------------------------
+# selective-SSM scan
+# --------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def ssd_scan(a, b, h0):
+    return _ssd.ssd_scan(a, b, h0, interpret=_on_cpu())
+
+
+def _ssd_fwd(a, b, h0):
+    return ssd_scan(a, b, h0), (a, b, h0)
+
+
+def _ssd_bwd(res, g):
+    a, b, h0 = res
+    _, vjp = jax.vjp(lambda *x: ref.ssd_scan(*x), a, b, h0)
+    return vjp(g)
+
+
+ssd_scan.defvjp(_ssd_fwd, _ssd_bwd)

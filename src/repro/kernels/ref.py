@@ -1,0 +1,80 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the ground truth the kernel sweeps assert against
+(``tests/test_kernels.py``) — deliberately naive, O(S^2) where that is the
+simplest correct thing, always fp32 accumulation.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _mask(q_pos, kv_pos, window: Optional[int], causal: bool):
+    d = q_pos[..., :, None] - kv_pos[..., None, :]
+    ok = kv_pos[..., None, :] >= 0
+    if causal:
+        ok &= d >= 0
+    if window is not None:
+        ok &= d < window
+    return ok
+
+
+def flash_attention(q, k, v, q_pos, kv_pos, *, causal=True, window=None,
+                    softcap=None):
+    """O(S^2) oracle. q: (B,S,Hq,D); k/v: (B,T,Hkv,D); returns (B,S,Hq,D)."""
+    B, S, Hq, D = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    qf = q.reshape(B, S, Hkv, G, D).astype(jnp.float32) * D ** -0.5
+    s = jnp.einsum("bskgd,btkd->bkgst", qf, k.astype(jnp.float32))
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    ok = _mask(q_pos, kv_pos, window, causal)
+    s = jnp.where(ok[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    any_ok = jnp.any(ok, axis=-1)[:, None, None, :, None]
+    p = jnp.where(any_ok, p, 0.0)
+    out = jnp.einsum("bkgst,btkd->bskgd", p, v.astype(jnp.float32))
+    return out.reshape(B, S, Hq, D).astype(q.dtype)
+
+
+def decode_attention(q, k, v, q_pos, kv_pos, *, window=None, softcap=None):
+    """One query token per sequence. q: (B,Hq,D); k/v: (B,T,Hkv,D)."""
+    out = flash_attention(q[:, None], k, v, q_pos[:, None], kv_pos,
+                          causal=True, window=window, softcap=softcap)
+    return out[:, 0]
+
+
+def rwkv6_scan(r, k, v, lw, u, s0):
+    """Literal WKV6 recurrence. r,k,v,lw: (B,S,H,D) fp32; u: (H,D);
+    s0: (B,H,D,D). Returns (y (B,S,H,D), s_final)."""
+    def step(s, inp):
+        rt, kt, vt, wt = inp                                 # (B,H,D)
+        kv = kt[..., :, None] * vt[..., None, :]             # (B,H,D,D)
+        y = jnp.einsum("bhd,bhde->bhe", rt, s + u[..., :, None] * kv)
+        s = jnp.exp(wt)[..., :, None] * s + kv
+        return s, y
+    xs = tuple(a.transpose(1, 0, 2, 3).astype(jnp.float32)
+               for a in (r, k, v, lw))
+    s_fin, ys = jax.lax.scan(step, s0.astype(jnp.float32), xs)
+    return ys.transpose(1, 0, 2, 3), s_fin
+
+
+def ssd_scan(a, b, h0):
+    """Diagonal linear recurrence h_t = a_t*h_{t-1} + b_t (selective SSM).
+
+    a, b: (B,S,I,N) fp32; h0: (B,I,N). Returns (hs (B,S,I,N), h_final)."""
+    def step(h, inp):
+        at, bt = inp
+        h = at * h + bt
+        return h, h
+    xs = (a.transpose(1, 0, 2, 3).astype(jnp.float32),
+          b.transpose(1, 0, 2, 3).astype(jnp.float32))
+    h_fin, hs = jax.lax.scan(step, h0.astype(jnp.float32), xs)
+    return hs.transpose(1, 0, 2, 3), h_fin

@@ -1,0 +1,121 @@
+"""Pallas WKV6 (RWKV "Finch") chunked scan with data-dependent decay.
+
+The recurrence per head (state S in R^{DxD}, decay w_t in R^D per token):
+
+    y_t = r_t . (S + u k_t v_t^T)
+    S  <- diag(e^{w_t}) S + k_t v_t^T
+
+A token-by-token loop is VPU-bound; the TPU adaptation evaluates each
+chunk of C tokens in closed form with (C,D)x(D,D) and (C,C)x(C,D) MXU
+matmuls (cf. models/rwkv6.wkv_chunked):
+
+    y = (r e^{L}) S_in  +  tril_strict[(r_t k_s) e^{L_t - L_{s+1}}] v
+        + diag(r_t . u k_t) v_t
+    S_out = e^{L_end} S_in + (k e^{L_end - L_incl})^T v
+
+where L is the exclusive cumulative log-decay within the chunk.
+
+* grid = (B, H, S/C): the chunk axis is sequential ("arbitrary"); the
+  (D, D) state lives in fp32 VMEM scratch across chunk steps.
+* r/k/v/w tiles are (C, D) per (batch, head); D = 64 for rwkv6-7b, so a
+  (64,64) state tile plus four (C,64) streams fit VMEM at C = 128-512.
+* s0 is read at the first chunk; the final state is a second output
+  (written at the last chunk) so serving can carry it between segments.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, y_ref, sfin_ref,
+            s_ref, *, nc: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_ref[...] = s0_ref[0, 0].astype(jnp.float32)
+
+    r = r_ref[0, :, 0, :].astype(jnp.float32)            # (C, D)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    w = w_ref[0, :, 0, :].astype(jnp.float32)            # log-decay <= 0
+    u = u_ref[0, :]                                      # (D,)
+    s = s_ref[...]                                       # (D, D)
+
+    C = r.shape[0]
+    Lincl = jnp.cumsum(w, axis=0)                        # (C, D) inclusive
+    L = Lincl - w                                        # exclusive
+    Lend = Lincl[-1:, :]                                 # (1, D)
+
+    # inter-chunk: tokens see the carried state decayed by their prefix
+    y_inter = jax.lax.dot_general(r * jnp.exp(L), s, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    # intra-chunk pairwise scores with decay between s and t (s < t)
+    diff = L[:, None, :] - Lincl[None, :, :]             # (t, s, D)
+    A = jnp.sum(r[:, None, :] * k[None, :, :] *
+                jnp.exp(jnp.minimum(diff, 0.0)), axis=-1)  # (t, s)
+    ti = jax.lax.broadcasted_iota(jnp.int32, (C, C), 0)
+    si = jax.lax.broadcasted_iota(jnp.int32, (C, C), 1)
+    A = jnp.where(si < ti, A, 0.0)
+    y_intra = jax.lax.dot_general(A, v, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    # bonus diagonal
+    du = jnp.sum(r * u[None, :] * k, axis=-1)            # (C,)
+    y = y_inter + y_intra + du[:, None] * v
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+    # carry the state
+    kd = k * jnp.exp(jnp.minimum(Lend - Lincl, 0.0))     # (C, D)
+    s_new = jnp.exp(Lend)[0, :, None] * s + jax.lax.dot_general(
+        kd, v, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    s_ref[...] = s_new
+
+    @pl.when(ci == nc - 1)
+    def _fin():
+        sfin_ref[0, 0] = s_new
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def rwkv6_scan(r, k, v, lw, u, s0, *, chunk: int = 128,
+               interpret: bool = False):
+    """r,k,v,lw: (B,S,H,D); u: (H,D); s0: (B,H,D,D) fp32.
+
+    Returns (y (B,S,H,D) in r.dtype, s_final (B,H,D,D) fp32).
+    """
+    B, S, H, D = r.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+
+    kernel = functools.partial(_kernel, nc=nc)
+    y, sfin = pl.pallas_call(
+        kernel,
+        grid=(B, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, D), lambda b, h, ci: (b, ci, h, 0)),
+            pl.BlockSpec((1, chunk, 1, D), lambda b, h, ci: (b, ci, h, 0)),
+            pl.BlockSpec((1, chunk, 1, D), lambda b, h, ci: (b, ci, h, 0)),
+            pl.BlockSpec((1, chunk, 1, D), lambda b, h, ci: (b, ci, h, 0)),
+            pl.BlockSpec((1, D), lambda b, h, ci: (h, 0)),
+            pl.BlockSpec((1, 1, D, D), lambda b, h, ci: (b, h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, D), lambda b, h, ci: (b, ci, h, 0)),
+            pl.BlockSpec((1, 1, D, D), lambda b, h, ci: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, H, D), r.dtype),
+            jax.ShapeDtypeStruct((B, H, D, D), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((D, D), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(r, k, v, lw, u, s0)
+    return y, sfin

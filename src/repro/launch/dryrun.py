@@ -1,0 +1,285 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# persistent compile cache: re-analysis sweeps skip recompilation
+os.environ.setdefault("JAX_COMPILATION_CACHE_DIR", "/tmp/jax_dryrun_cache")
+os.environ.setdefault("JAX_PERSISTENT_CACHE_MIN_COMPILE_TIME_SECS", "1")
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+cell on the production meshes, and record memory/cost/collective analysis.
+
+This is deliverable (e): the proof that the distribution config is
+coherent — sharding mismatches, compile-time OOM and unsupported
+collectives all surface here as hard failures.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --mesh single --arch qwen2.5-14b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --mesh multi --all
+    PYTHONPATH=src python -m repro.launch.dryrun --all            # both meshes
+
+Results land in benchmarks/results/dryrun/<mesh>/<arch>__<shape>.json;
+benchmarks/roofline.py and EXPERIMENTS.md read from there.
+
+NOTE the first two lines of this file: the placeholder-device flag must be
+set before jax initializes. Only the dry-run sets it — tests and benches
+see the single real CPU device.
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro import sharding as shlib
+from repro.launch import hlo_analysis, presets
+from repro.launch import sharding as rules_lib
+from repro.launch.mesh import make_production_mesh
+from repro.models import model_zoo
+from repro.training import train_loop
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "benchmarks", "results", "dryrun")
+
+
+def _variant_overrides(cfg, variant: str):
+    """Named config variants used by the §Perf hillclimb iterations."""
+    if variant == "baseline":
+        return cfg
+    raise ValueError(f"unknown variant {variant!r} (hillclimbs register "
+                     f"theirs via --set key=value)")
+
+
+def _apply_sets(cfg, sets):
+    """--set key=value config overrides (ints/floats/bools auto-coerced)."""
+    if not sets:
+        return cfg
+    kv = {}
+    for s in sets:
+        k, v = s.split("=", 1)
+        if v in ("True", "False"):
+            v = v == "True"
+        else:
+            try:
+                v = int(v)
+            except ValueError:
+                try:
+                    v = float(v)
+                except ValueError:
+                    pass
+        kv[k] = v
+    return dataclasses.replace(cfg, **kv)
+
+
+def build_lowered(arch: str, shape_name: str, mesh, *,
+                  serve_mode: str = "serve", sets=None,
+                  accum: Optional[int] = None):
+    """Lower one cell on ``mesh``. Returns (lowered, meta)."""
+    cfg = _apply_sets(configs.get_config(arch), sets)
+    shape = configs.SHAPES[shape_name]
+    batch_abs = configs.input_specs(cfg, shape)
+    chips = mesh.devices.size
+
+    arules = rules_lib.act_rules(mesh, "train" if shape.kind == "train" else "serve")
+
+    if shape.kind == "train":
+        tcfg = presets.train_preset(cfg, shape.global_batch)
+        if accum is not None:
+            tcfg = dataclasses.replace(tcfg, accum_steps=accum)
+        state_abs = train_loop.abstract_state(cfg, tcfg)
+        state_sh = rules_lib.train_state_shardings(
+            cfg, mesh, compression=tcfg.compression.enabled)
+        batch_sh = rules_lib.batch_shardings(batch_abs, mesh)
+        step = train_loop.make_train_step(cfg, tcfg,
+                                          grad_shardings=state_sh.params)
+        prules = rules_lib.param_rules(mesh, "train")
+
+        def wrapped(state, batch):
+            with shlib.use_rules(arules), shlib.use_param_rules(prules):
+                return step(state, batch)
+
+        rep = rules_lib.replicated(mesh)
+        jitted = jax.jit(
+            wrapped,
+            in_shardings=(state_sh, batch_sh),
+            out_shardings=(state_sh, None),
+            donate_argnums=(0,))
+        with mesh:
+            lowered = jitted.lower(state_abs, batch_abs)
+        meta = {"accum_steps": tcfg.accum_steps,
+                "moment_dtype": str(tcfg.opt.moment_dtype.__name__
+                                    if hasattr(tcfg.opt.moment_dtype, "__name__")
+                                    else tcfg.opt.moment_dtype)}
+        return lowered, cfg, meta
+
+    # ---- serving cells ----
+    if serve_mode == "auto":
+        # replicate weights over "data" when they fit beside the cache
+        # (TP keeps 1/16th per device); FSDP-gather serving otherwise
+        serve_mode = ("serve_replicated"
+                      if cfg.param_count() * 2 / 16 < 8e9 else "serve")
+    params_abs = model_zoo.abstract_params(cfg)
+    params_sh = rules_lib.param_shardings(cfg, mesh, serve_mode)
+    cache_abs = model_zoo.init_cache(cfg, shape.global_batch, shape.seq_len,
+                                     abstract=True)
+    cache_sh = rules_lib.cache_shardings(cfg, cache_abs, mesh, "serve")
+
+    if shape.kind == "prefill":
+        batch_sh = rules_lib.batch_shardings(batch_abs, mesh)
+
+        def serve_step(params, batch, cache):
+            with shlib.use_rules(arules):
+                return model_zoo.prefill(cfg, params, batch, cache)
+
+        jitted = jax.jit(serve_step,
+                         in_shardings=(params_sh, batch_sh, cache_sh),
+                         out_shardings=(None, cache_sh),
+                         donate_argnums=(2,))
+        with mesh:
+            lowered = jitted.lower(params_abs, batch_abs, cache_abs)
+        return lowered, cfg, {}
+
+    # decode: one new token against a full cache
+    B = shape.global_batch
+    tok_abs = batch_abs["tokens"]
+    t_abs = batch_abs["t"]
+    brules = rules_lib.batch_shardings({"tokens": tok_abs}, mesh)
+    tok_sh = brules["tokens"]
+
+    def serve_step(params, cache, tokens, t):
+        with shlib.use_rules(arules):
+            return model_zoo.decode(cfg, params, cache, tokens, t)
+
+    jitted = jax.jit(serve_step,
+                     in_shardings=(params_sh, cache_sh, tok_sh, tok_sh),
+                     out_shardings=(None, cache_sh),
+                     donate_argnums=(1,))
+    with mesh:
+        lowered = jitted.lower(params_abs, cache_abs, tok_abs, t_abs)
+    return lowered, cfg, {}
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
+             serve_mode: str = "serve", sets=None, accum=None,
+             out_dir: Optional[str] = None, tag: str = "") -> Dict[str, Any]:
+    """Lower + compile one cell; returns (and persists) the analysis dict."""
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    chips = mesh.devices.size
+    shape = configs.SHAPES[shape_name]
+    t0 = time.time()
+    lowered, cfg, meta = build_lowered(arch, shape_name, mesh,
+                                       serve_mode=serve_mode, sets=sets,
+                                       accum=accum)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    # -- memory ------------------------------------------------------------
+    mem: Dict[str, float] = {}
+    try:
+        ma = compiled.memory_analysis()
+        for k in ("temp_size_in_bytes", "argument_size_in_bytes",
+                  "output_size_in_bytes", "alias_size_in_bytes",
+                  "generated_code_size_in_bytes"):
+            v = getattr(ma, k, None)
+            if v is not None:
+                mem[k] = float(v)
+        # bytes resident per device during the step (args are sharded;
+        # aliased/donated outputs don't double-count)
+        mem["per_device_total"] = (mem.get("argument_size_in_bytes", 0.0)
+                                   + mem.get("output_size_in_bytes", 0.0)
+                                   - mem.get("alias_size_in_bytes", 0.0)
+                                   + mem.get("temp_size_in_bytes", 0.0))
+    except Exception as e:   # CPU backend may not implement it
+        mem["error"] = str(e)
+
+    # -- roofline ----------------------------------------------------------
+    hlo = compiled.as_text()
+    roof, detail = hlo_analysis.roofline_from_compiled(compiled, chips,
+                                                       hlo_text=hlo)
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    mf = hlo_analysis.model_flops(cfg, shape.kind, tokens,
+                                  seq_len=shape.seq_len,
+                                  batch=shape.global_batch)
+    mf_per_dev = mf / chips
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind, "chips": chips,
+        "kind": shape.kind,
+        "lower_s": t_lower, "compile_s": t_compile,
+        "memory": mem,
+        "roofline": roof.to_dict(),
+        "model_flops_per_device": mf_per_dev,
+        "useful_ratio": (mf_per_dev / roof.flops_per_device
+                         if roof.flops_per_device else 0.0),
+        "roofline_fraction": roof.fraction_of_roofline(mf_per_dev),
+        "collectives": detail["collectives"],
+        "collective_counts": detail["counts"],
+        "meta": meta,
+    }
+    if out_dir is None:
+        out_dir = os.path.join(RESULTS_DIR, mesh_kind)
+    os.makedirs(out_dir, exist_ok=True)
+    suffix = f"__{tag}" if tag else ""
+    path = os.path.join(out_dir, f"{arch}__{shape_name}{suffix}.json")
+    with open(path, "w") as f:
+        json.dump(result, f, indent=1)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None, choices=list(configs.ARCHS))
+    ap.add_argument("--shape", default=None, choices=list(configs.SHAPES))
+    ap.add_argument("--mesh", default="both", choices=("single", "multi", "both"))
+    ap.add_argument("--all", action="store_true", help="every valid cell")
+    ap.add_argument("--serve-mode", default="serve",
+                    choices=("serve", "serve_replicated", "auto"))
+    ap.add_argument("--set", action="append", default=None,
+                    help="config override key=value (repeatable)")
+    ap.add_argument("--accum", type=int, default=None)
+    ap.add_argument("--tag", default="", help="result filename suffix")
+    ap.add_argument("--out-dir", default=None)
+    args = ap.parse_args()
+
+    meshes = ("single", "multi") if args.mesh == "both" else (args.mesh,)
+    if args.all:
+        cells = configs.valid_cells()
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    failures = []
+    for mesh_kind in meshes:
+        for arch, shape in cells:
+            if not configs.cell_is_valid(arch, shape):
+                continue
+            label = f"[{mesh_kind}] {arch} x {shape}"
+            try:
+                r = run_cell(arch, shape, mesh_kind,
+                             serve_mode=args.serve_mode, sets=args.set,
+                             accum=args.accum, tag=args.tag,
+                             out_dir=args.out_dir)
+                rf = r["roofline"]
+                print(f"{label}: OK compile={r['compile_s']:.1f}s "
+                      f"mem/dev={r['memory'].get('per_device_total', 0)/2**30:.2f}GiB "
+                      f"compute={rf['compute_s']*1e3:.2f}ms "
+                      f"memory={rf['memory_s']*1e3:.2f}ms "
+                      f"collective={rf['collective_s']*1e3:.2f}ms "
+                      f"dominant={rf['dominant']} "
+                      f"roofline_frac={r['roofline_fraction']:.3f}",
+                      flush=True)
+            except Exception as e:
+                failures.append((label, repr(e)))
+                print(f"{label}: FAIL {e}", flush=True)
+                traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{len(failures)} cell(s) failed: "
+                         + "; ".join(l for l, _ in failures))
+
+
+if __name__ == "__main__":
+    main()

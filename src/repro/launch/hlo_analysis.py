@@ -1,0 +1,262 @@
+"""Static analysis of compiled HLO: collective bytes + roofline terms.
+
+``cost_analysis()`` gives HLO_FLOPs and HLO_bytes but not collective
+traffic, so collective bytes are parsed from the compiled HLO text: for
+every ``all-gather`` / ``all-reduce`` / ``reduce-scatter`` / ``all-to-all``
+/ ``collective-permute`` op we sum the *operand* sizes (the bytes that hit
+the interconnect, per participating device).
+
+Hardware model (TPU v5e, the assignment's target):
+    peak 197 TFLOP/s bf16 per chip; 819 GB/s HBM; ~50 GB/s/link ICI.
+
+Roofline terms, per device:
+    compute    = HLO_FLOPs_per_device / peak
+    memory     = HLO_bytes_per_device / HBM_bw
+    collective = collective_bytes_per_device / link_bw
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Iterable, Optional, Tuple
+
+PEAK_FLOPS = 197e12          # bf16 MXU / chip
+VPU_FLOPS = 3.9e12           # elementwise f32 / chip (8x128 VPU @ ~950MHz)
+HBM_BW = 819e9               # B/s / chip
+LINK_BW = 50e9               # B/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+_COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                     "all-to-all", "collective-permute")
+# Post-optimization HLO prints operands by %name (no inline types), so we
+# parse the RESULT type (left of the op name) and the replica group size,
+# and derive operand/wire bytes per collective kind from those.
+_OP_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([0-9, ]*)\}")
+_PERMUTE_PAIRS_RE = re.compile(r"source_target_pairs=\{")
+
+
+def _shape_bytes(text: str) -> float:
+    """Sum bytes of every dtype[shape] group in a type string."""
+    total = 0.0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        return max(len([x for x in m.group(1).split(",") if x.strip() != ""]), 1)
+    return 1
+
+
+def _iter_collectives(hlo_text: str):
+    """Yield (kind, result_bytes, group_size) per collective instruction."""
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if not any(k in s for k in _COLLECTIVE_KINDS):
+            continue
+        if "-done" in s:          # async completion: counted at -start
+            continue
+        m = _OP_RE.search(s)
+        if not m:
+            continue
+        result_t, kind = m.group(1), m.group(2)
+        yield kind, _shape_bytes(result_t), _group_size(s), s
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-kind *operand* bytes (the assignment's metric) and a ring-model
+    ``wire`` estimate of per-device link traffic.
+
+    operand bytes per kind (result_bytes R, group size n):
+        all-gather: R/n   all-reduce: R   reduce-scatter: R*n
+        all-to-all: R     collective-permute: R
+    wire bytes per device (bidirectional ring model):
+        all-gather: R*(n-1)/n          all-reduce: 2*R*(n-1)/n
+        reduce-scatter: R*(n-1)        all-to-all: R*(n-1)/n
+        collective-permute: R
+    """
+    out: Dict[str, float] = {k: 0.0 for k in _COLLECTIVE_KINDS}
+    wire = 0.0
+    for kind, R, n, _ in _iter_collectives(hlo_text):
+        if kind == "all-gather":
+            out[kind] += R / n
+            wire += R * (n - 1) / n
+        elif kind == "all-reduce":
+            out[kind] += R
+            wire += 2.0 * R * (n - 1) / n
+        elif kind == "reduce-scatter":
+            out[kind] += R * n
+            wire += R * (n - 1)
+        elif kind == "all-to-all":
+            out[kind] += R
+            wire += R * (n - 1) / n
+        else:                      # collective-permute
+            out[kind] += R
+            wire += R
+    out["total"] = sum(out[k] for k in _COLLECTIVE_KINDS)
+    out["wire"] = wire
+    return out
+
+
+def collective_ops_count(hlo_text: str) -> Dict[str, int]:
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVE_KINDS}
+    for kind, _, _, _ in _iter_collectives(hlo_text):
+        out[kind] += 1
+    return out
+
+
+def top_collectives(hlo_text: str, n: int = 10):
+    """The n largest collectives by wire bytes — the §Perf shortlist."""
+    rows = []
+    for kind, R, g, line in _iter_collectives(hlo_text):
+        meta = ""
+        m = re.search(r'op_name="([^"]*)"', line)
+        if m:
+            meta = m.group(1)[-90:]
+        rows.append((R, kind, g, meta))
+    rows.sort(reverse=True)
+    return rows[:n]
+
+
+@dataclasses.dataclass
+class Roofline:
+    """Per-device roofline terms (seconds) for one compiled step."""
+    flops_per_device: float              # total (MXU + VPU)
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    chips: int
+    mxu_flops_per_device: float = 0.0
+
+    @property
+    def compute_s(self) -> float:
+        """MXU time + VPU time (elementwise work runs on the vector unit)."""
+        mxu = self.mxu_flops_per_device or self.flops_per_device
+        vpu = max(self.flops_per_device - mxu, 0.0)
+        return mxu / PEAK_FLOPS + vpu / VPU_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_per_device / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes_per_device / LINK_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_s(self) -> float:
+        """Lower-bound step time = max of the three overlapped terms."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def fraction_of_roofline(self, useful_flops_per_device: float) -> float:
+        """useful-FLOPs MFU bound implied by the dominant term."""
+        if self.step_s <= 0:
+            return 0.0
+        return useful_flops_per_device / PEAK_FLOPS / self.step_s
+
+    def to_dict(self) -> Dict[str, float]:
+        return {
+            "flops_per_device": self.flops_per_device,
+            "mxu_flops_per_device": self.mxu_flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "collective_bytes_per_device": self.collective_bytes_per_device,
+            "chips": self.chips,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "step_s": self.step_s,
+        }
+
+
+def roofline_from_compiled(compiled, chips: int,
+                           hlo_text: Optional[str] = None) -> Tuple[Roofline, Dict]:
+    """Build roofline terms from a jax ``Compiled`` object.
+
+    The compiled module is the per-device SPMD program, so every number is
+    the per-device view. FLOPs/bytes/collectives come from the
+    trip-count-aware ``hlo_cost`` walk (XLA's own ``cost_analysis`` counts
+    loop bodies once — useless for scanned layer stacks; it is recorded in
+    the detail dict for reference).
+    """
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    from repro.launch import hlo_cost
+    hc = hlo_cost.analyze_hlo(text)
+    coll = dict(hc["collective_operand_bytes"])
+    coll["total"] = hc["collective_operand_total"]
+    coll["wire"] = hc["collective_wire_bytes"]
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        xla_ca = {k: float(v) for k, v in ca.items()
+                  if isinstance(v, (int, float))}
+    except Exception:
+        xla_ca = {}
+    return (Roofline(hc["flops"], hc["bytes"], coll["wire"], chips,
+                     mxu_flops_per_device=hc["mxu_flops"]),
+            {"collectives": coll, "counts": collective_ops_count(text),
+             "num_collectives": hc["num_collectives"],
+             "transcendentals": hc["transcendentals"],
+             "xla_cost_analysis_unscaled": xla_ca})
+
+
+def model_flops(cfg, shape_kind: str, tokens: int, *, seq_len: int = 0,
+                batch: int = 0) -> float:
+    """Useful model FLOPs for the cell (the MODEL_FLOPS of §Roofline).
+
+    train:   6 * N_active * tokens  (fwd 2ND + bwd 4ND)
+    prefill: 2 * N_active * tokens
+    decode:  2 * N_active * batch  + attention KV read term
+    """
+    n = cfg.active_param_count()
+    if shape_kind == "train":
+        base = 6.0 * n * tokens
+    elif shape_kind == "prefill":
+        base = 2.0 * n * tokens
+    else:  # decode: one token per sequence
+        base = 2.0 * n * batch
+    # attention score/value FLOPs: 2 * 2 * B * S_q * S_kv * H * D (approx,
+    # causal halves it for train/prefill)
+    H, D, L = cfg.num_heads, cfg.head_dim, cfg.num_layers
+    if shape_kind in ("train", "prefill") and H:
+        S = seq_len
+        attn = 2 * 2 * batch * S * S * H * D * L / 2
+        if cfg.sliding_window:
+            w = min(cfg.sliding_window, S)
+            attn = 2 * 2 * batch * S * w * H * D * L
+        base += attn * (3 if shape_kind == "train" else 1)
+    elif shape_kind == "decode" and H:
+        w = seq_len if not cfg.sliding_window else min(cfg.sliding_window, seq_len)
+        base += 2 * 2 * batch * w * H * D * L
+    return base

@@ -1,0 +1,571 @@
+"""Trip-count-aware cost model over compiled HLO text.
+
+``compiled.cost_analysis()`` counts each op ONCE, ignoring control-flow
+multiplicity — useless for scan-over-layers models where >95% of work sits
+inside ``while`` bodies. This module re-derives FLOPs / memory traffic /
+collective traffic by walking the HLO text and **multiplying loop bodies
+by their ``known_trip_count``** (stamped by XLA's while-loop analysis;
+jax's ``lax.scan`` always produces statically-counted loops).
+
+Cost rules (mirroring xla::HloCostAnalysis, applied per instruction):
+
+* ``dot``      — 2 x prod(result_shape) x prod(lhs contracting dims) FLOPs.
+* elementwise / reduce / rng — 1 FLOP per output (reduce: per input) elem.
+* ``fusion``   — FLOPs from the fused computation; BYTES from the fusion
+  boundary only (operands + result), which is XLA's memory-traffic model.
+* ``while``    — (body + condition) x trip_count.
+* ``call``/``conditional`` — sum of called computations.
+* collectives  — recorded with their loop multiplier, result bytes and
+  replica-group size (converted to operand/wire bytes by the caller).
+* ``copy``/``transpose`` at computation level — bytes only.
+* free ops (bitcast, tuple, get-tuple-element, parameter, constant,
+  broadcast, iota, reshape) — 0.
+
+The result is the per-device cost of one step of the SPMD program — the
+numbers the §Roofline terms are built from.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COMP_HDR_RE = re.compile(
+    r"^(ENTRY\s+)?%?([\w.\-]+)\s*(\(.*\))?(?:\s*->\s*[^{]+)?\s*\{\s*$")
+_COMMENT_RE = re.compile(r"/\*[^*]*\*/")
+_PARAM_RE = re.compile(
+    r"([\w.\-]+):\s*((?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?))")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*"
+    r"(\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s*"
+    r"([\w\-]+)\(")
+_TRIP_RE = re.compile(r'known_trip_count["\s:{]+n["\s:]+(\d+)')
+_CALLS_RE = re.compile(r"(?:calls|body|to_apply)=%([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%([\w.\-]+)")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([0-9, ]*)\}")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+_FREE_OPS = frozenset((
+    "bitcast", "tuple", "get-tuple-element", "parameter", "constant",
+    "broadcast", "iota", "reshape", "after-all", "partition-id",
+    "replica-id", "opt-barrier", "custom-call", "bitcast-convert",
+))
+
+# Ops that make a fusion a "pure dtype/layout cast". XLA:CPU's float
+# normalization materializes fp32 copies of every bf16 dot operand (the
+# CPU has no native bf16 FMA); the TPU MXU consumes bf16 directly and such
+# casts fuse into the dot's operand feed. Pure-cast fusions are therefore
+# charged min(input, output) bytes and zero flops — the TPU-roofline view.
+_PURE_CAST_OPS = frozenset((
+    "parameter", "constant", "convert", "bitcast", "copy", "transpose",
+    "reshape", "broadcast", "iota", "bitcast-convert",
+))
+_COLLECTIVES = frozenset((
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute", "all-gather-start", "all-reduce-start",
+    "reduce-scatter-start", "all-to-all-start", "collective-permute-start",
+))
+
+
+def _shape_bytes(text: str) -> float:
+    total = 0.0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _shape_elems(text: str) -> float:
+    total = 0.0
+    for _, dims in _SHAPE_RE.findall(text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n
+    return total
+
+
+def _dims_of(type_text: str) -> List[int]:
+    m = _SHAPE_RE.search(type_text)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",")]
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_text: str
+    op: str
+    operands: List[str]
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    params: Dict[str, str]            # param name -> type text
+    instrs: List[Instr]
+
+
+@dataclasses.dataclass
+class Collective:
+    kind: str
+    result_bytes: float
+    group_size: int
+    multiplier: float
+    op_name: str
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0           # total (MXU + elementwise)
+    mxu_flops: float = 0.0       # dot/convolution only
+    bytes: float = 0.0
+    transcendentals: float = 0.0
+
+    def __add__(self, o: "Cost") -> "Cost":
+        return Cost(self.flops + o.flops, self.mxu_flops + o.mxu_flops,
+                    self.bytes + o.bytes,
+                    self.transcendentals + o.transcendentals)
+
+    def scaled(self, k: float) -> "Cost":
+        return Cost(self.flops * k, self.mxu_flops * k, self.bytes * k,
+                    self.transcendentals * k)
+
+
+def _operand_list(line: str) -> List[str]:
+    """Extract top-level %operand names from ``op(...)`` in the line."""
+    i = line.find("(", line.find("=") + 1)
+    # find the '(' right after the op name (skip the type which may contain
+    # parens for tuples): search after the op match instead
+    m = _INSTR_RE.match(line)
+    if not m:
+        return []
+    start = m.end() - 1
+    depth, j = 0, start
+    while j < len(line):
+        if line[j] == "(":
+            depth += 1
+        elif line[j] == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        j += 1
+    inner = line[start + 1:j]
+    return re.findall(r"%([\w.\-]+)", inner)
+
+
+def parse_module(hlo_text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry: Optional[str] = None
+    cur: Optional[Computation] = None
+    for raw in hlo_text.splitlines():
+        line = _COMMENT_RE.sub("", raw.rstrip())
+        if cur is None:
+            m = _COMP_HDR_RE.match(line.strip())
+            # instruction lines carry " = " before the first paren; headers
+            # never do — that distinguishes them robustly.
+            if m and "=" not in line.split("(", 1)[0]:
+                params = {}
+                if m.group(3):
+                    for pname, ptype in _PARAM_RE.findall(m.group(3)):
+                        params[pname] = ptype
+                cur = Computation(m.group(2), params, [])
+                if m.group(1):
+                    entry = m.group(2)
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INSTR_RE.match(line.strip())
+        if m:
+            cur.instrs.append(Instr(m.group(1), m.group(2), m.group(3),
+                                    _operand_list(line.strip()), line.strip()))
+    if cur is not None:
+        comps[cur.name] = cur
+    return comps, entry
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        return max(len([x for x in m.group(1).split(",") if x.strip()]), 1)
+    return 1
+
+
+class HloCostModel:
+    """Walks the parsed module, scaling loop bodies by trip count."""
+
+    def __init__(self, hlo_text: str, trace: bool = False):
+        self.comps, self.entry = parse_module(hlo_text)
+        self.collectives: List[Collective] = []
+        self._memo: Dict[Tuple, Cost] = {}
+        self.trace: Optional[List] = [] if trace else None
+
+    # -- per-instruction flop rules ----------------------------------------
+    def _instr_flops(self, ins: Instr, comp: Computation,
+                     types: Dict[str, str]) -> float:
+        op = ins.op
+        if op == "dot":
+            out_elems = _shape_elems(ins.type_text)
+            contract = 1.0
+            mc = _CONTRACT_RE.search(ins.line)
+            lhs_t = types.get(ins.operands[0], "") if ins.operands else ""
+            dims = _dims_of(lhs_t)
+            if mc and dims:
+                for d in mc.group(1).split(","):
+                    if d != "" and int(d) < len(dims):
+                        contract *= dims[int(d)]
+            return 2.0 * out_elems * contract
+        if op in ("reduce", "reduce-window"):
+            in_elems = sum(_shape_elems(types.get(o, ""))
+                           for o in ins.operands[:1])
+            return in_elems
+        if op in ("convolution",):
+            return 2.0 * _shape_elems(ins.type_text)   # unused by these models
+        if op in _FREE_OPS or op in _COLLECTIVES or op in (
+                "while", "conditional", "call", "fusion", "copy", "transpose",
+                "dynamic-slice", "dynamic-update-slice", "slice", "concatenate",
+                "gather", "scatter", "pad", "reverse", "select-and-scatter",
+                "convert", "compare", "select", "rng", "rng-bit-generator"):
+            if op in ("compare", "select"):
+                return _shape_elems(ins.type_text)
+            return 0.0          # convert: fuses into the consumer on TPU
+        # elementwise arithmetic (add/multiply/exp/...)
+        return _shape_elems(ins.type_text)
+
+    # -- effective bytes ----------------------------------------------------
+    # ``eff`` maps value name -> effective buffer bytes: the narrowest dtype
+    # the value had upstream of pure casts. XLA:CPU widens every bf16 dot
+    # operand to a materialized fp32 copy (no native bf16 FMA); the TPU MXU
+    # consumes bf16 directly, so reads are charged at the pre-cast size and
+    # the cast copies themselves are free. Tuples carry per-element lists.
+
+    @staticmethod
+    def _flat_eff(v) -> float:
+        if isinstance(v, list):
+            return sum(HloCostModel._flat_eff(x) for x in v)
+        return float(v)
+
+    def _eff_of(self, o: str, types: Dict[str, str], eff: Dict) -> float:
+        v = eff.get(o)
+        if v is None:
+            return _shape_bytes(types.get(o, ""))
+        return self._flat_eff(v)
+
+    def _instr_bytes(self, ins: Instr, types: Dict[str, str],
+                     eff: Optional[Dict] = None) -> float:
+        eff = eff if eff is not None else {}
+        if ins.op in ("parameter", "constant", "tuple", "get-tuple-element",
+                      "bitcast", "after-all", "iota", "partition-id",
+                      "replica-id", "opt-barrier", "reshape"):
+            return 0.0
+        res = _shape_bytes(ins.type_text)
+        rd = lambda o: self._eff_of(o, types, eff)
+        if ins.op == "convert":
+            return 0.0                       # charged at the consumer
+        if ins.op in ("dynamic-slice", "gather"):
+            # reads only the sliced/gathered window + indices, not the
+            # whole operand (embedding tables, per-layer cache slices);
+            # window read scaled by the operand's effective dtype
+            full = _shape_bytes(types.get(ins.operands[0], "")) if ins.operands else res
+            ratio = (rd(ins.operands[0]) / full) if full else 1.0
+            idx = sum(rd(o) for o in ins.operands[1:])
+            return res * min(ratio, 1.0) + res + idx
+        if ins.op in ("scatter", "dynamic-update-slice"):
+            upd_i = 2 if ins.op == "scatter" else 1
+            upd = (rd(ins.operands[upd_i])
+                   if len(ins.operands) > upd_i else res)
+            idx = sum(rd(o) for o in ins.operands[1:upd_i])
+            return 2.0 * upd + idx
+        return sum(rd(o) for o in ins.operands) + res
+
+    def _fusion_operand_bytes(self, ins: Instr, types: Dict[str, str],
+                              fcomp: "Computation",
+                              eff: Optional[Dict] = None) -> float:
+        """Effective fusion traffic: operands consumed only via
+        dynamic-slice/gather count as the slice, not the full buffer;
+        all reads at effective (pre-cast) dtype."""
+        eff = eff if eff is not None else {}
+        pnames = list(fcomp.params)
+        total = 0.0
+        for i, opnd in enumerate(ins.operands):
+            full = _shape_bytes(types.get(opnd, ""))
+            e = self._eff_of(opnd, types, eff)
+            ratio = (e / full) if full else 1.0
+            if i < len(pnames):
+                p = pnames[i]
+                uses = [fi for fi in fcomp.instrs if p in fi.operands]
+                if uses and all(fi.op in ("dynamic-slice", "gather")
+                                and fi.operands and fi.operands[0] == p
+                                for fi in uses):
+                    win = sum(_shape_bytes(fi.type_text) for fi in uses)
+                    total += min(win * min(ratio, 1.0), e)
+                    continue
+            total += min(e, full)
+        return total + _shape_bytes(ins.type_text)
+
+    # -- computation walk ---------------------------------------------------
+    @staticmethod
+    def _freeze(v):
+        if isinstance(v, list):
+            return tuple(HloCostModel._freeze(x) for x in v)
+        return round(float(v), 3)
+
+    def comp_cost(self, name: str, inside_fusion: bool = False,
+                  param_eff: Optional[Dict] = None) -> Cost:
+        digest = (tuple(sorted((k, self._freeze(v))
+                               for k, v in param_eff.items()))
+                  if param_eff else None)
+        key = (name, inside_fusion, digest)
+        if key in self._memo:
+            return self._memo[key]
+        comp = self.comps.get(name)
+        if comp is None:
+            return Cost()
+        types: Dict[str, str] = dict(comp.params)
+        for ins in comp.instrs:
+            types[ins.name] = ins.type_text
+        eff: Dict = dict(param_eff) if param_eff else {}
+        total = Cost()
+        for ins in comp.instrs:
+            op = ins.op
+            if op == "get-tuple-element":
+                m = re.search(r"index=(\d+)", ins.line)
+                src = ins.operands[0] if ins.operands else None
+                v = eff.get(src)
+                if m and isinstance(v, list):
+                    idx = int(m.group(1))
+                    if idx < len(v):
+                        eff[ins.name] = v[idx]
+                continue
+            if op == "tuple":
+                eff[ins.name] = [self._eff_of(o, types, eff)
+                                 for o in ins.operands]
+                continue
+            if op == "convert":
+                src = ins.operands[0] if ins.operands else None
+                eff[ins.name] = min(_shape_bytes(ins.type_text),
+                                    self._eff_of(src, types, eff)
+                                    if src else 1e30)
+                continue
+            if op in ("bitcast", "reshape"):
+                if ins.operands and ins.operands[0] in eff:
+                    eff[ins.name] = eff[ins.operands[0]]
+                continue
+            if op == "fusion":
+                called = _CALLS_RE.search(ins.line)
+                inner = (self.comp_cost(called.group(1), inside_fusion=True)
+                         if called else Cost())
+                fcomp0 = (self.comps.get(called.group(1)) if called else None)
+                pure_cast = (fcomp0 is not None and fcomp0.instrs and
+                             all(fi.op in _PURE_CAST_OPS
+                                 for fi in fcomp0.instrs))
+                if pure_cast:
+                    opnd = sum(self._eff_of(o, types, eff)
+                               for o in ins.operands)
+                    eff[ins.name] = min(opnd, _shape_bytes(ins.type_text))
+                    continue                 # cast copies fuse away on TPU
+                # slice+cast fusions (per-layer weight/cache slices taken
+                # from a fp32-widened stacked buffer, bf16-round-tripped):
+                # on TPU this is one bf16 dynamic-slice — charge 2x the
+                # narrowest same-size representation inside the fusion.
+                slice_cast = (fcomp0 is not None and fcomp0.instrs and
+                              all(fi.op in _PURE_CAST_OPS
+                                  or fi.op in ("dynamic-slice", "slice")
+                                  for fi in fcomp0.instrs))
+                if slice_cast and not inside_fusion:
+                    res_e = _shape_elems(ins.type_text)
+                    cands = [_shape_bytes(fi.type_text)
+                             for fi in fcomp0.instrs
+                             if fi.op not in ("parameter", "constant")
+                             and _shape_elems(fi.type_text) == res_e]
+                    cands.append(_shape_bytes(ins.type_text))
+                    eff_out = min(cands)
+                    eff[ins.name] = eff_out
+                    # a slice view: consumers charge their own (effective)
+                    # reads; charge the one window read here
+                    if self.trace is not None:
+                        self.trace.append((eff_out, name, "slice-cast",
+                                           ins.name, ins.type_text[:48]))
+                    total += Cost(0.0, 0.0, eff_out, 0.0)
+                    continue
+                if inside_fusion:
+                    by = 0.0
+                elif fcomp0 is not None:
+                    by = self._fusion_operand_bytes(ins, types, fcomp0, eff)
+                else:
+                    by = self._instr_bytes(ins, types, eff)
+                # In-place dynamic-update-slice fusions (cache writes) only
+                # touch the updated window, not the whole aliased buffer —
+                # on TPU XLA shares the buffer (FusionCanShareBufferHint).
+                # Scale bytes and inner elementwise flops to the window.
+                dus = None
+                for fi in (fcomp0.instrs if fcomp0 is not None else ()):
+                    if fi.op == "dynamic-update-slice" and dus is None:
+                        dus = (fcomp0, fi)
+                    elif fi.op == "scatter" and len(fi.operands) > 2:
+                        # scatter(operand, indices, updates): in-place on
+                        # TPU; only the updates window moves. A scatter
+                        # takes precedence over a carry-plumbing DUS in the
+                        # same fusion (scan writing the slice back).
+                        dus = (fcomp0, Instr(fi.name, fi.type_text,
+                                             "dynamic-update-slice",
+                                             [fi.operands[0], fi.operands[2]],
+                                             fi.line))
+                        break
+                if dus is not None:
+                    fcomp, fi = dus
+                    ftypes = dict(fcomp.params)
+                    for x in fcomp.instrs:
+                        ftypes[x.name] = x.type_text
+                    upd_b = (_shape_bytes(ftypes.get(fi.operands[1], ""))
+                             if len(fi.operands) > 1 else 0.0)
+                    res_b = _shape_bytes(ins.type_text)
+                    frac = min(upd_b / res_b, 1.0) if res_b else 1.0
+                    inner = inner.scaled(frac)
+                    by = 2.0 * upd_b if not inside_fusion else 0.0
+                    # the written buffer keeps its carried effective dtype
+                    if ins.operands and ins.operands[0] in eff:
+                        eff[ins.name] = eff[ins.operands[0]]
+                if self.trace is not None and by > 0:
+                    self.trace.append((by, name, ins.op, ins.name,
+                                       ins.type_text[:48]))
+                total += Cost(inner.flops, inner.mxu_flops, by,
+                              inner.transcendentals)
+            elif op == "while":
+                body = _BODY_RE.search(ins.line)
+                cond = _COND_RE.search(ins.line)
+                trip = 1.0
+                mt = _TRIP_RE.search(ins.line)
+                if mt:
+                    trip = float(mt.group(1))
+                # loop carries inherit the operand tuple's effective dtypes
+                carry_eff = (eff.get(ins.operands[0])
+                             if ins.operands else None)
+                inner = Cost()
+                if body:
+                    bp = self.comps.get(body.group(1))
+                    peff = ({list(bp.params)[0]: carry_eff}
+                            if bp is not None and bp.params
+                            and carry_eff is not None else None)
+                    inner += self._cost_with_collectives(body.group(1), trip,
+                                                         peff)
+                if cond:
+                    inner += self.comp_cost(cond.group(1))
+                total += inner.scaled(trip)
+                if carry_eff is not None:
+                    eff[ins.name] = carry_eff
+            elif op in ("call", "conditional"):
+                for cname in _CALLS_RE.findall(ins.line):
+                    total += self.comp_cost(cname, inside_fusion)
+            elif op in _COLLECTIVES:
+                if "-done" in op:
+                    continue
+                kind = op.replace("-start", "")
+                self.collectives.append(Collective(
+                    kind, _shape_bytes(ins.type_text), _group_size(ins.line),
+                    1.0, name))
+                total += Cost(0.0, 0.0, 0.0 if inside_fusion
+                              else self._instr_bytes(ins, types, eff))
+            else:
+                fl = self._instr_flops(ins, comp, types)
+                mxu = fl if op in ("dot", "convolution") else 0.0
+                by = 0.0 if inside_fusion else self._instr_bytes(ins, types, eff)
+                tr = (_shape_elems(ins.type_text)
+                      if op in ("exponential", "log", "tanh", "rsqrt", "sqrt",
+                                "power", "sine", "cosine", "logistic")
+                      else 0.0)
+                if self.trace is not None and by > 0:
+                    self.trace.append((by, name, ins.op, ins.name,
+                                       ins.type_text[:48]))
+                total += Cost(fl, mxu, by, tr)
+        self._memo[key] = total
+        return total
+
+    def _cost_with_collectives(self, name: str, multiplier: float,
+                               param_eff: Optional[Dict] = None) -> Cost:
+        """comp_cost, but collectives found inside get the loop multiplier."""
+        before = len(self.collectives)
+        cost = self.comp_cost(name, param_eff=param_eff)
+        # comp_cost memoizes; on a memo hit the collectives were already
+        # recorded the first time. Scale multipliers only for fresh entries;
+        # for memo hits, replay the recorded collectives of that comp.
+        fresh = self.collectives[before:]
+        if fresh:
+            for c in fresh:
+                c.multiplier *= multiplier
+            self._replay_cache = getattr(self, "_replay_cache", {})
+            self._replay_cache[name] = [dataclasses.replace(c, multiplier=1.0)
+                                        for c in fresh]
+        else:
+            cache = getattr(self, "_replay_cache", {}).get(name, [])
+            for c in cache:
+                self.collectives.append(
+                    dataclasses.replace(c, multiplier=multiplier))
+        return cost
+
+    # -- public API ----------------------------------------------------------
+    def analyze(self) -> Dict[str, float]:
+        if self.entry is None:
+            return {"flops": 0.0, "bytes": 0.0}
+        self.collectives.clear()
+        cost = self.comp_cost(self.entry)
+        coll_operand = {k: 0.0 for k in ("all-gather", "all-reduce",
+                                         "reduce-scatter", "all-to-all",
+                                         "collective-permute")}
+        wire = 0.0
+        for c in self.collectives:
+            R, n, mult = c.result_bytes, c.group_size, c.multiplier
+            if c.kind == "all-gather":
+                coll_operand[c.kind] += mult * R / n
+                wire += mult * R * (n - 1) / n
+            elif c.kind == "all-reduce":
+                coll_operand[c.kind] += mult * R
+                wire += mult * 2.0 * R * (n - 1) / n
+            elif c.kind == "reduce-scatter":
+                coll_operand[c.kind] += mult * R * n
+                wire += mult * R * (n - 1)
+            elif c.kind == "all-to-all":
+                coll_operand[c.kind] += mult * R
+                wire += mult * R * (n - 1) / n
+            else:
+                coll_operand[c.kind] += mult * R
+                wire += mult * R
+        return {
+            "flops": cost.flops,
+            "mxu_flops": cost.mxu_flops,
+            "vpu_flops": cost.flops - cost.mxu_flops,
+            "bytes": cost.bytes,
+            "transcendentals": cost.transcendentals,
+            "collective_operand_bytes": coll_operand,
+            "collective_operand_total": sum(coll_operand.values()),
+            "collective_wire_bytes": wire,
+            "num_collectives": len(self.collectives),
+        }
+
+
+def analyze_hlo(hlo_text: str) -> Dict[str, float]:
+    return HloCostModel(hlo_text).analyze()

@@ -1,0 +1,34 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state — required because only the
+dry-run process forces 512 host devices; tests and benches run on 1.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """The assignment's grading meshes.
+
+    single-pod: (16, 16)   ("data", "model")    — 256 chips (one v5e pod)
+    multi-pod:  (2, 16, 16) ("pod", "data", "model") — 512 chips (2 pods)
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
+    """Arbitrary mesh (tests use small ones, e.g. (2, 2) on 4 host devices)."""
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh():
+    """Single-device mesh with the production axis names — lets every
+    sharded code path run unchanged on one CPU device."""
+    return jax.make_mesh((1, 1), ("data", "model"))

@@ -1,0 +1,41 @@
+"""Per-cell runtime presets: gradient accumulation + state dtypes.
+
+The assigned shapes pin global batch and sequence length; what's free is
+how a cell spends HBM. These presets are the baseline memory plan derived
+in EXPERIMENTS.md §Dry-run (napkin math per arch, then validated against
+``memory_analysis()``):
+
+* accum_steps: keeps the microbatch's activation footprint (remat layer
+  boundaries, seq-sharded) plus CE logits inside HBM.
+* moment_dtype: bf16 Adam moments for the >=100B archs (fp32 moments alone
+  would be 4 bytes/param -> 6.3 GB/chip at 512-way sharding for 405B).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig
+from repro.training.optimizer import OptimizerConfig
+from repro.training.train_loop import TrainConfig
+
+
+def train_preset(cfg: ModelConfig, global_batch: int) -> TrainConfig:
+    n = cfg.param_count()
+    if n >= 100e9:
+        accum, moment_dtype = 16, jnp.bfloat16
+    elif n >= 30e9:
+        accum, moment_dtype = 8, jnp.float32
+    elif n >= 5e9:
+        accum, moment_dtype = 4, jnp.float32
+    else:
+        accum, moment_dtype = 2, jnp.float32
+    accum = min(accum, global_batch)
+    while global_batch % accum:
+        accum //= 2
+    return TrainConfig(
+        opt=OptimizerConfig(moment_dtype=moment_dtype),
+        accum_steps=max(accum, 1))

@@ -1,0 +1,171 @@
+"""Mode-specific logical-axis -> mesh-axis rule tables + spec builders.
+
+Two rule sets per mode (train / serve):
+
+* **param rules** — how parameter (and optimizer/cache state) dimensions
+  map to the mesh;
+* **act rules**   — how in-graph activation constraints (``shd``) map.
+
+The same logical name can map differently in each set ("embed" is
+FSDP-sharded on params but replicated on activations).
+
+Baseline layout (hillclimbed variants live in EXPERIMENTS.md §Perf):
+
+train  = FSDP("data") x TP("model") x DP("pod"):
+    params/opt:  embed->data (ZeRO-3 style), heads/ffn/vocab->model
+    activations: batch->(pod,data), seq->model between layers (Megatron-
+                 style sequence parallelism for the remat boundaries),
+                 heads/ffn->model inside blocks
+serve  = same weight layout (memory-safe for the 405B/340B archs) with
+    batch->(pod,data) and the KV-cache sequence dim -> model
+    (flash-decode: each model shard owns a slice of the context).
+
+Divisibility fallbacks happen in ``AxisRules.spec`` (e.g. hymba's 25 heads
+simply stay replicated on a 16-way model axis).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.common import ModelConfig
+from repro.sharding import AxisRules
+
+PyTree = Any
+
+_BATCH = ("pod", "data")          # mesh axes used for the batch dim
+
+
+def param_rules(mesh: Mesh, mode: str) -> AxisRules:
+    """Parameter-dimension rules (also applied to optimizer moments)."""
+    fsdp = ("data",) if "data" in mesh.axis_names else ()
+    table: Dict[str, Any] = {
+        "embed": fsdp,            # ZeRO-3: shard the model dim over data
+        "embed_table": "model",
+        "vocab_in": fsdp,
+        "vocab": "model",
+        "heads": "model",
+        "kv_heads": "model",
+        "head_dim": None,
+        "ffn": "model",
+        "experts": None,          # EP variant flips this to "model"
+        "ssm_inner": "model",
+        "layers": None,
+    }
+    if mode == "serve_replicated":
+        # Small-model serving: weights replicated over data, TP over model.
+        table = dict(table, embed=None, vocab_in=None)
+    return AxisRules(mesh, table)
+
+
+def act_rules(mesh: Mesh, mode: str) -> AxisRules:
+    """Activation (``shd``) rules."""
+    batch = tuple(a for a in _BATCH if a in mesh.axis_names)
+    table: Dict[str, Any] = {
+        "batch": batch,
+        "seq": "model" if mode == "train" else None,   # Megatron SP boundaries
+        "heads": "model",
+        "kv_heads": "model",
+        "head_dim": None,
+        "ffn": "model",
+        "embed": None,
+        "vocab": "model",
+        "cache_seq": "model",
+        "experts": None,
+        "ssm_inner": "model",
+    }
+    return AxisRules(mesh, table)
+
+
+# ---------------------------------------------------------------------------
+# Whole-pytree spec builders (feed jit in_shardings / out_shardings)
+# ---------------------------------------------------------------------------
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh, mode: str) -> Dict[str, NamedSharding]:
+    """NamedSharding per parameter path, from the ParamSpec logical axes."""
+    from repro.models import model_zoo
+    rules = param_rules(mesh, mode)
+    table = model_zoo.param_table(cfg)
+    return {path: rules.sharding(spec.axes, spec.shape)
+            for path, spec in table.items()}
+
+
+def _cache_leaf_spec(key: str, shape: Tuple[int, ...], rules: AxisRules,
+                     stacked: bool) -> P:
+    """Logical axes of one KV/state cache leaf, by key name.
+
+    Layout (scan mode adds a leading "layers" dim):
+      k/v:   (B, W, Hkv, Dh)    pos: (B, W)
+      tm_x/cm_x: (B, d)         tm_s: (B, H, D, D)
+      h:     (B, I, N)          conv: (B, K-1, I)
+    """
+    base = {
+        "k": ("batch", "cache_seq", "kv_heads", "head_dim"),
+        "v": ("batch", "cache_seq", "kv_heads", "head_dim"),
+        "pos": ("batch", "cache_seq"),
+        "tm_x": ("batch", None),
+        "cm_x": ("batch", None),
+        "tm_s": ("batch", "heads", None, None),
+        "h": ("batch", "ssm_inner", None),
+        "conv": ("batch", None, "ssm_inner"),
+    }[key]
+    axes = (("layers",) + base) if stacked else base
+    axes = axes[:len(shape)]
+    return rules.spec(axes, shape)
+
+
+def cache_shardings(cfg: ModelConfig, cache_abstract: PyTree, mesh: Mesh,
+                    mode: str) -> PyTree:
+    """NamedSharding pytree matching a cache pytree (scan dict or layer list)."""
+    rules = act_rules(mesh, mode)
+    # The cache logical table routes "layers" to nothing; batch/cache_seq per
+    # the act rules. kv_heads on the cache follows the act rules too, but the
+    # cache_seq dim usually wins the "model" axis (listed first).
+    stacked = isinstance(cache_abstract, dict)
+
+    def one(tree):
+        return {k: NamedSharding(mesh, _cache_leaf_spec(k, v.shape, rules, stacked))
+                for k, v in tree.items()}
+
+    if stacked:
+        return one(cache_abstract)
+    return [one(layer) for layer in cache_abstract]
+
+
+def batch_shardings(batch_abstract: Dict[str, jax.ShapeDtypeStruct],
+                    mesh: Mesh) -> Dict[str, NamedSharding]:
+    """Input batches shard their leading (global-batch) dim over (pod, data)."""
+    batch = tuple(a for a in _BATCH if a in mesh.axis_names)
+    out = {}
+    for k, v in batch_abstract.items():
+        axes: Tuple[Any, ...] = (batch,) + (None,) * (len(v.shape) - 1)
+        # drop if not divisible (long_500k: B=1 stays replicated)
+        rules = AxisRules(mesh, {"b": batch})
+        out[k] = rules.sharding(("b",) + (None,) * (len(v.shape) - 1), v.shape)
+    return out
+
+
+def opt_state_shardings(param_sh: Dict[str, NamedSharding], mesh: Mesh):
+    """Optimizer moments mirror their parameter's sharding; step replicated."""
+    from repro.training.optimizer import OptState
+    rep = NamedSharding(mesh, P())
+    return OptState(step=rep, mu=dict(param_sh), nu=dict(param_sh))
+
+
+def train_state_shardings(cfg: ModelConfig, mesh: Mesh, *,
+                          compression: bool = False):
+    """Shardings for the full TrainState pytree."""
+    from repro.training.train_loop import TrainState
+    psh = param_shardings(cfg, mesh, "train")
+    err = dict(psh) if compression else None
+    return TrainState(params=psh, opt=opt_state_shardings(psh, mesh), err=err)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

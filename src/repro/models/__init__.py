@@ -1,0 +1,1 @@
+"""Model zoo: dense GQA transformers, MoE, RWKV6, Hymba hybrid + stubs."""

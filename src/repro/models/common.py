@@ -1,0 +1,353 @@
+"""Shared model substrate: config, param tables with logical sharding axes,
+norms, rotary embeddings, activations, and memory-safe losses.
+
+Design notes
+------------
+* **Functional, flax-free.** Parameters live in a *flat dict* ``{path: array}``.
+  Every parameter is declared once in a :class:`ParamSpec` table; the same
+  table drives initialization (``init_params``), abstract shapes for the
+  dry-run (``abstract_params``), and mesh partitioning
+  (``launch/sharding.py`` maps each spec's *logical axes* to mesh axes).
+* **Scan-over-layers.** Per-layer parameters are stacked along a leading
+  ``"layers"`` axis so the transformer body is a single ``lax.scan`` step —
+  this keeps the HLO O(1) in depth (essential for the 126-layer dry-run
+  compiles) and gives remat a natural per-layer boundary.
+* **Mixed precision.** Params are stored in ``cfg.param_dtype`` (bf16 for
+  the big configs), matmuls run in ``cfg.compute_dtype``, reductions
+  (norms, softmax, CE, router) accumulate in fp32.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Mapping, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, jax.Array]
+PyTree = Any
+
+# --------------------------------------------------------------------------
+# Model configuration (one dataclass covers every assigned family)
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture hyperparameters + runtime policy knobs."""
+
+    name: str = "model"
+    family: str = "dense"            # dense | moe | rwkv6 | hymba
+    num_layers: int = 2
+    d_model: int = 128
+    num_heads: int = 2
+    num_kv_heads: int = 2
+    head_dim: int = 64
+    d_ff: int = 512
+    vocab_size: int = 1024
+
+    # attention flavour
+    qkv_bias: bool = False           # qwen2.5
+    rope_theta: float = 10_000.0
+    sliding_window: Optional[int] = None     # SWA width (mixtral, hymba)
+    global_layers: Tuple[int, ...] = ()      # hymba: layers w/ full attention
+    attn_logit_softcap: Optional[float] = None
+
+    # MLP flavour
+    activation: str = "swiglu"       # swiglu | relu2 (nemotron) | gelu
+    # MoE
+    num_experts: int = 0
+    num_shared_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0                # routed-expert hidden size (qwen2-moe: 1408)
+    shared_d_ff: int = 0             # shared-expert hidden size
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01
+
+    # SSM / RWKV
+    ssm_state: int = 0               # mamba N (hymba: 16)
+    ssm_expand: int = 2              # d_inner = expand * d_model
+    ssm_conv: int = 4                # depthwise conv width
+    rwkv_head_dim: int = 64
+
+    # modality frontend (assignment: stub — precomputed embeddings arrive
+    # as inputs; the backbone is what we build)
+    frontend: Optional[str] = None   # None | "vision" | "audio"
+    num_patches: int = 256           # vision prefix length in prefill/train
+
+    # norms / misc
+    norm_eps: float = 1e-5
+    norm_type: str = "rmsnorm"       # rmsnorm | layernorm
+    tie_embeddings: bool = False
+
+    # runtime policy
+    param_dtype: Any = jnp.bfloat16
+    compute_dtype: Any = jnp.bfloat16
+    scan_layers: bool = True         # False => python-unrolled (hymba: mixed caches)
+    # train-mode override for scan_layers (hymba: unrolled for serving's
+    # mixed cache widths, scanned for training where there is no cache)
+    scan_layers_train: Optional[bool] = None
+    remat: bool = True               # checkpoint each layer in training
+
+    # ---- beyond-baseline performance toggles (EXPERIMENTS.md §Perf) ----
+    # keep dot operands in bf16 with fp32 MXU accumulation instead of
+    # materializing fp32 copies of activations/caches/weights
+    opt_bf16_dots: bool = False
+    # fuse the SSM y-projection into the chunked scan (never materialize
+    # the full (B,S,I,N) hidden-state tensor)
+    opt_fused_ssm_y: bool = False
+    # constrain per-layer weight slices at their use site (forces the AD
+    # cotangent — the layer grads — onto the FSDP shard layout inside the
+    # backward loop: reduce-scatter instead of full all-reduce)
+    opt_weight_constraints: bool = False
+    # remat granularity: checkpoint every G layers instead of every layer
+    # (boundary activations / G; enables lower grad-accumulation, which is
+    # the dominant FSDP re-gather multiplier at 405B scale)
+    remat_group: int = 1
+    attn_chunk: int = 1024           # KV chunk for the lax flash path
+    q_chunk: int = 2048              # query chunk for long prefill
+    ce_chunk: int = 512              # sequence chunk for the CE loss
+    use_pallas: bool = False         # True => Pallas kernels (TPU / interpret)
+
+    # distribution hints (read by launch/sharding.py)
+    fsdp: bool = True                # shard params over "data" in training
+
+    @property
+    def q_per_kv(self) -> int:
+        return max(self.num_heads // max(self.num_kv_heads, 1), 1)
+
+    @property
+    def ssm_d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def num_rwkv_heads(self) -> int:
+        return self.d_model // self.rwkv_head_dim
+
+    def param_count(self) -> int:
+        """Total parameters (exact, from the spec table)."""
+        from repro.models import model_zoo  # local import to avoid cycle
+        table = model_zoo.param_table(self)
+        return sum(int(math.prod(s.shape)) for s in table.values())
+
+    def active_param_count(self) -> int:
+        """Parameters touched per token (MoE: shared + top_k experts)."""
+        from repro.models import model_zoo
+        table = model_zoo.param_table(self)
+        total = 0
+        for path, spec in table.items():
+            n = int(math.prod(spec.shape))
+            if "experts/" in path and self.num_experts > 0:
+                n = n * self.top_k // self.num_experts
+            total += n
+        return total
+
+
+# --------------------------------------------------------------------------
+# Parameter specs
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """Declared parameter: shape + logical axis names + initializer.
+
+    ``axes`` entries name *logical* dimensions ("vocab", "embed", "heads",
+    "kv_heads", "head_dim", "ffn", "experts", "ssm", "layers", or None);
+    ``launch/sharding.py`` maps them to mesh axes per run mode.
+    """
+
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"             # normal | zeros | ones | uniform_pm
+    scale: float = 1.0               # stddev multiplier on top of fan-in rule
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def stack_layers(table: Mapping[str, ParamSpec], num_layers: int,
+                 prefix: str = "layers/") -> Dict[str, ParamSpec]:
+    """Stack a single-layer table along a leading 'layers' axis."""
+    out = {}
+    for k, s in table.items():
+        out[prefix + k] = ParamSpec((num_layers,) + s.shape, ("layers",) + s.axes,
+                                    s.init, s.scale)
+    return out
+
+
+def _init_leaf(key: jax.Array, spec: ParamSpec, dtype) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dtype)
+    if spec.init == "uniform_pm":   # uniform in [-scale, scale]
+        return jax.random.uniform(key, spec.shape, dtype, -spec.scale, spec.scale)
+    if spec.init == "const":        # constant fill with value = scale
+        return jnp.full(spec.shape, spec.scale, dtype)
+    # fan-in scaled normal: std = scale / sqrt(fan_in); fan_in = prod of all
+    # dims except the last (works for stacked (L, ...) specs too since the
+    # per-layer fan-in is what matters — strip a leading "layers" axis).
+    shape = spec.shape[1:] if spec.axes and spec.axes[0] == "layers" else spec.shape
+    fan_in = max(int(math.prod(shape[:-1])), 1)
+    std = spec.scale / math.sqrt(fan_in)
+    return (jax.random.normal(key, spec.shape, jnp.float32) * std).astype(dtype)
+
+
+def init_params(key: jax.Array, table: Mapping[str, ParamSpec], dtype) -> Params:
+    """Materialize a parameter dict from a spec table (deterministic)."""
+    keys = jax.random.split(key, len(table))
+    return {path: _init_leaf(k, spec, dtype)
+            for k, (path, spec) in zip(keys, sorted(table.items()))}
+
+
+def abstract_params(table: Mapping[str, ParamSpec], dtype) -> Params:
+    """ShapeDtypeStruct stand-ins (dry-run: no allocation)."""
+    return {p: jax.ShapeDtypeStruct(s.shape, dtype) for p, s in table.items()}
+
+
+def layer_slice(params: Params, prefix: str = "layers/") -> Tuple[Params, Params]:
+    """Split params into (stacked per-layer, rest)."""
+    stacked = {k[len(prefix):]: v for k, v in params.items() if k.startswith(prefix)}
+    rest = {k: v for k, v in params.items() if not k.startswith(prefix)}
+    return stacked, rest
+
+
+# --------------------------------------------------------------------------
+# Norms / activations / rotary
+# --------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * gamma.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x: jax.Array, gamma: jax.Array, beta: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * gamma.astype(jnp.float32) + beta.astype(jnp.float32)).astype(x.dtype)
+
+
+def apply_norm(cfg: ModelConfig, params: Params, prefix: str, x: jax.Array) -> jax.Array:
+    if cfg.norm_type == "layernorm":
+        return layer_norm(x, params[prefix + "/scale"], params[prefix + "/bias"],
+                          cfg.norm_eps)
+    return rms_norm(x, params[prefix + "/scale"], cfg.norm_eps)
+
+
+def norm_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    """Specs for one norm under a caller-supplied prefix."""
+    d = cfg.d_model
+    specs = {"scale": ParamSpec((d,), ("embed",), "ones")}
+    if cfg.norm_type == "layernorm":
+        specs["bias"] = ParamSpec((d,), ("embed",), "zeros")
+    return specs
+
+
+def activate(cfg: ModelConfig, gate: jax.Array, up: Optional[jax.Array]) -> jax.Array:
+    """MLP nonlinearity. swiglu: silu(gate)*up; relu2: relu(gate)^2 (nemotron)."""
+    if cfg.activation == "swiglu":
+        assert up is not None
+        return jax.nn.silu(gate) * up
+    if cfg.activation == "relu2":
+        r = jax.nn.relu(gate)
+        return r * r
+    if cfg.activation == "gelu":
+        return jax.nn.gelu(gate)
+    raise ValueError(cfg.activation)
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    """(head_dim/2,) inverse frequencies."""
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary position embedding.
+
+    x: (..., S, H, D); positions: broadcastable to (..., S).
+    """
+    freqs = rope_frequencies(x.shape[-1], theta)             # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos = jnp.cos(angles)[..., None, :]                       # (..., S, 1, D/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Memory-safe cross-entropy (sequence-chunked; never materializes (B,S,V))
+# --------------------------------------------------------------------------
+
+
+def chunked_softmax_xent(x: jax.Array, w_out: jax.Array, labels: jax.Array,
+                         chunk: int, logit_dtype=jnp.float32,
+                         bf16_dots: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """Mean token cross-entropy of ``x @ w_out.T`` against labels.
+
+    Args:
+      x: (B, S, d) final hidden states.
+      w_out: (V, d) output head (vocab may be sharded over "model").
+      labels: (B, S) int32; negative labels are masked out.
+      chunk: sequence chunk length.
+
+    Returns:
+      (mean_loss, token_count) — both fp32 scalars.
+
+    The scan over sequence chunks keeps live logits at (B, chunk, V); under
+    remat the backward pass recomputes each chunk's logits instead of saving
+    them — the standard trick that makes 256k-row vocabularies trainable.
+    """
+    B, S, d = x.shape
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:                     # pad with masked labels (loss-neutral)
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+        S += pad
+    n_chunks = S // chunk
+    xs = x.reshape(B, n_chunks, chunk, d).swapaxes(0, 1)          # (n,B,c,d)
+    ls = labels.reshape(B, n_chunks, chunk).swapaxes(0, 1)        # (n,B,c)
+
+    V = w_out.shape[0]
+
+    def one_chunk(carry, inp):
+        loss_sum, count = carry
+        xc, lc = inp
+        if bf16_dots:
+            # keep the (sharded, FSDP-gathered) head in bf16 on the wire;
+            # the MXU accumulates logits in fp32
+            logits = jnp.einsum("bcd,vd->bcv", xc, w_out,
+                                preferred_element_type=logit_dtype)
+        else:
+            logits = jnp.einsum("bcd,vd->bcv", xc.astype(logit_dtype),
+                                w_out.astype(logit_dtype))
+        lse = jax.nn.logsumexp(logits, axis=-1)                   # (B,c)
+        # One-hot contraction instead of take_along_axis: partitions cleanly
+        # when V is sharded over the model axis.
+        onehot = jax.nn.one_hot(jnp.maximum(lc, 0), V, dtype=logit_dtype)
+        correct = jnp.einsum("bcv,bcv->bc", logits, onehot)
+        mask = (lc >= 0).astype(logit_dtype)
+        loss_sum = loss_sum + jnp.sum((lse - correct) * mask)
+        count = count + jnp.sum(mask)
+        return (loss_sum, count), None
+
+    (loss_sum, count), _ = jax.lax.scan(
+        one_chunk, (jnp.float32(0.0), jnp.float32(0.0)), (xs, ls))
+    return loss_sum / jnp.maximum(count, 1.0), count
+
+
+def embed_tokens(embed: jax.Array, tokens: jax.Array, compute_dtype) -> jax.Array:
+    """Input embedding lookup (table sharded over the *embed* dim, so the
+    row gather is collective-free; activations all-gather afterwards)."""
+    return jnp.take(embed, tokens, axis=0).astype(compute_dtype)

@@ -1,0 +1,173 @@
+"""Mixture-of-Experts FFN (qwen2-moe, mixtral) — TPU-native dispatch.
+
+Adaptation notes (GPU MoE -> TPU, recorded per the brief):
+
+* Dispatch is **shard-local**: tokens are grouped by sequence (the group
+  axis is the batch axis, which is data-sharded), each group does its own
+  capacity accounting, and every expert processes its group-local slice.
+  No token ever crosses a data shard, so the only collectives are the
+  existing tensor-parallel psums on the expert FFN — the TPU-idiomatic
+  replacement for GPU all-to-all dispatch.
+* The (tokens, experts, capacity) one-hot dispatch tensor of GShard is
+  never materialized; dispatch/combine are segment-sum scatters and row
+  gathers bounded by O(tokens x d_model).
+* Capacity: per group, ``C = ceil(S * top_k * capacity_factor / E)``;
+  overflow tokens drop that expert's contribution (keep their other
+  experts), standard capacity semantics. The router aux loss (GShard)
+  keeps assignment balanced so drops are rare; tests cover both regimes.
+* Shared experts (qwen2-moe) are a fused dense FFN applied to every token.
+
+Expert-parallel (experts sharded over "model") is a config option in
+``launch/sharding.py`` when ``num_experts % model_axis == 0``; the default
+keeps experts replicated and TP-shards each expert's ``d_ff``.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer
+from repro.models.common import (ModelConfig, ParamSpec, Params, activate,
+                                 apply_norm, norm_specs)
+from repro.sharding import shd
+
+
+def moe_ffn_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d, E, F = cfg.d_model, cfg.num_experts, cfg.moe_d_ff or cfg.d_ff
+    t = {
+        "router": ParamSpec((d, E), ("embed", None)),
+        "experts/wi": ParamSpec((E, d, F), ("experts", "embed", "ffn")),
+        "experts/wo": ParamSpec((E, F, d), ("experts", "ffn", "embed")),
+    }
+    if cfg.activation == "swiglu":
+        t["experts/wg"] = ParamSpec((E, d, F), ("experts", "embed", "ffn"))
+    if cfg.num_shared_experts > 0:
+        Fs = cfg.shared_d_ff or cfg.num_shared_experts * F
+        t["shared/wi"] = ParamSpec((d, Fs), ("embed", "ffn"))
+        t["shared/wo"] = ParamSpec((Fs, d), ("ffn", "embed"))
+        if cfg.activation == "swiglu":
+            t["shared/wg"] = ParamSpec((d, Fs), ("embed", "ffn"))
+        t["shared/gate"] = ParamSpec((d, 1), ("embed", None), "zeros")
+    t.update({f"norm/{k}": v for k, v in norm_specs(cfg).items()})
+    return t
+
+
+def moe_layer_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    return {**{f"attn/{k}": v for k, v in transformer.attn_specs(cfg).items()},
+            **{f"moe/{k}": v for k, v in moe_ffn_specs(cfg).items()}}
+
+
+def param_table(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    from repro.models.common import stack_layers
+    return {**transformer.head_specs(cfg),
+            **stack_layers(moe_layer_specs(cfg), cfg.num_layers)}
+
+
+def _capacity(cfg: ModelConfig, group_tokens: int) -> int:
+    c = math.ceil(group_tokens * cfg.top_k * cfg.capacity_factor
+                  / max(cfg.num_experts, 1))
+    return max(int(c), 1)
+
+
+def moe_ffn(cfg: ModelConfig, p: Params, x: jax.Array,
+            prefix: str = "moe/") -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Routed FFN. x: (B, S, d) -> (B, S, d), aux losses.
+
+    Groups = batch rows (data-sharded); all dispatch is group-local.
+    """
+    B, S, d = x.shape
+    E, K = cfg.num_experts, cfg.top_k
+    F = cfg.moe_d_ff or cfg.d_ff
+    C = _capacity(cfg, S)
+
+    h = apply_norm(cfg, p, prefix + "norm", x)
+
+    # ---- routing (fp32) ------------------------------------------------
+    logits = jnp.einsum("bsd,de->bse", h.astype(jnp.float32),
+                        p[prefix + "router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                    # (B,S,E)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)              # (B,S,K)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)      # renormalize
+
+    # ---- aux losses (GShard load-balance + router z) -------------------
+    me = jnp.mean(probs, axis=(0, 1))                          # (E,)
+    assign = jax.nn.one_hot(gate_idx[..., 0], E, dtype=jnp.float32)
+    ce = jnp.mean(assign, axis=(0, 1))                         # top-1 fraction
+    aux = jnp.sum(me * ce) * E
+    z = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+
+    # ---- capacity accounting, per group --------------------------------
+    # position of each (token, k) slot within its expert's group-local queue
+    onehot = jax.nn.one_hot(gate_idx, E, dtype=jnp.int32)      # (B,S,K,E)
+    flat = onehot.reshape(B, S * K, E)
+    pos_in_e = jnp.cumsum(flat, axis=1) - flat                 # (B,S*K,E)
+    pos = jnp.sum(pos_in_e * flat, axis=-1).reshape(B, S, K)   # (B,S,K)
+    keep = pos < C
+    dest = jnp.where(keep, gate_idx * C + pos, E * C)          # overflow slot
+
+    # ---- dispatch: segment-sum into (B, E*C+1, d) -----------------------
+    hk = jnp.broadcast_to(h[:, :, None, :], (B, S, K, d)).reshape(B, S * K, d)
+    destf = dest.reshape(B, S * K)
+
+    def scatter_one(rows, idx):
+        return jax.ops.segment_sum(rows, idx, num_segments=E * C + 1)
+
+    expert_in = jax.vmap(scatter_one)(hk, destf)               # (B,E*C+1,d)
+    expert_in = expert_in[:, :E * C].reshape(B, E, C, d)
+    expert_in = shd(expert_in, "batch", "experts", None, "embed")
+
+    # ---- expert FFN (batched einsum; F is TP-sharded) --------------------
+    wi = p[prefix + "experts/wi"].astype(x.dtype)
+    wo = p[prefix + "experts/wo"].astype(x.dtype)
+    gate_h = jnp.einsum("becd,edf->becf", expert_in.astype(x.dtype), wi)
+    gate_h = shd(gate_h, "batch", "experts", None, "ffn")
+    up_h = None
+    if cfg.activation == "swiglu":
+        wg = p[prefix + "experts/wg"].astype(x.dtype)
+        up_h = jnp.einsum("becd,edf->becf", expert_in.astype(x.dtype), wg)
+        up_h = shd(up_h, "batch", "experts", None, "ffn")
+    act = activate(cfg, gate_h, up_h)
+    expert_out = jnp.einsum("becf,efd->becd", act, wo)          # (B,E,C,d)
+    expert_out = expert_out.reshape(B, E * C, d)
+    expert_out = jnp.pad(expert_out, ((0, 0), (0, 1), (0, 0)))  # overflow row=0
+
+    # ---- combine: gather rows back, weight by gate ----------------------
+    def gather_one(rows, idx):
+        return rows[idx]                                        # (S*K, d)
+
+    back = jax.vmap(gather_one)(expert_out, destf).reshape(B, S, K, d)
+    y = jnp.sum(back.astype(jnp.float32)
+                * gate_vals[..., None].astype(jnp.float32), axis=2)
+    y = y.astype(x.dtype)
+
+    # ---- shared experts (qwen2-moe) -------------------------------------
+    if cfg.num_shared_experts > 0:
+        gate_s = jnp.einsum("bsd,df->bsf", h, p[prefix + "shared/wi"].astype(x.dtype))
+        up_s = None
+        if cfg.activation == "swiglu":
+            up_s = jnp.einsum("bsd,df->bsf", h,
+                              p[prefix + "shared/wg"].astype(x.dtype))
+        act_s = activate(cfg, gate_s, up_s)
+        shared = jnp.einsum("bsf,fd->bsd", act_s,
+                            p[prefix + "shared/wo"].astype(x.dtype))
+        sg = jax.nn.sigmoid(jnp.einsum("bsd,do->bso", h.astype(jnp.float32),
+                                       p[prefix + "shared/gate"].astype(jnp.float32)))
+        y = y + (shared.astype(jnp.float32) * sg).astype(x.dtype)
+
+    return y, {"moe_aux": aux, "router_z": z}
+
+
+def moe_layer(cfg: ModelConfig, p: Params, x: jax.Array, positions: jax.Array,
+              cache, mode: str, layer_idx: Optional[int] = None, meta=None):
+    a, cache = transformer.attention_block(cfg, p, x, positions, cache, mode,
+                                           layer_idx)
+    x = x + a
+    m, aux = moe_ffn(cfg, p, x)
+    x = x + m
+    x = shd(x, "batch", "seq", "embed")
+    return x, cache, aux

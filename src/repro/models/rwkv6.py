@@ -1,0 +1,283 @@
+"""RWKV6 "Finch" — attention-free LM with data-dependent per-channel decay.
+
+Core recurrence, per head (key dim i, value dim j):
+
+    y_t[j] = sum_i r_t[i] * ( S_{t-1}[i,j] + u[i] * k_t[i] * v_t[j] )
+    S_t[i,j] = w_t[i] * S_{t-1}[i,j] + k_t[i] * v_t[j],   w_t = exp(-exp(x_w))
+
+Execution paths:
+
+* **Chunked (train/prefill, the MXU path).** Sequences are processed in
+  chunks; within a chunk the recurrence is re-expressed as three matmuls
+  using *log-space decay differences* (every exponent is a sum of log-decays
+  over a non-empty suffix, hence <= 0 — no overflow, no 1/P underflow that
+  plagues the textbook "divide by cumulative decay" form):
+
+      L_t   = sum_{tau<t} log w_tau                      (exclusive cumsum)
+      y_t   = (r_t . e^{L_t}) @ S_0                       inter-chunk
+            + sum_{s<t} [sum_i r_t[i] k_s[i] e^{L_t[i]-L_{s+1}[i]}] v_s
+            + (sum_i r_t[i] u[i] k_t[i]) v_t              bonus diagonal
+      S_c   = e^{L_c} . S_0 + (k . e^{L_c - L_{s+1}})^T @ v
+
+  ``lax.scan`` carries S across chunks, so the saved residuals are one
+  (B,H,D,D) state per chunk instead of per token.
+* **Recurrent (decode / oracle).** The literal per-token recurrence:
+  O(1) state, which is why this arch runs the 500k-token decode cell.
+* **Pallas kernel** (``kernels/rwkv6_scan.py``): same chunked math with the
+  state held in VMEM scratch across the sequential grid dimension.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer
+from repro.models.common import (ModelConfig, ParamSpec, Params, layer_norm,
+                                 norm_specs, stack_layers)
+from repro.sharding import shd
+
+LORA_MIX = 32      # rank of the token-shift mixing LoRA
+LORA_DECAY = 64    # rank of the decay LoRA
+
+
+# --------------------------------------------------------------------------
+# Parameter table
+# --------------------------------------------------------------------------
+
+
+def layer_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d, H, D, F = cfg.d_model, cfg.num_rwkv_heads, cfg.rwkv_head_dim, cfg.d_ff
+    n = lambda: {f"norm/{k}": v for k, v in norm_specs(cfg).items()}
+    t = {
+        # --- time mix -------------------------------------------------
+        "tm/mu_x": ParamSpec((d,), ("embed",), "uniform_pm", 0.5),
+        "tm/mu5": ParamSpec((5, d), (None, "embed"), "uniform_pm", 0.5),
+        "tm/lora_w1": ParamSpec((d, 5 * LORA_MIX), ("embed", None), scale=0.1),
+        "tm/lora_w2": ParamSpec((5, LORA_MIX, d), (None, None, "embed"), scale=0.1),
+        "tm/w0": ParamSpec((H, D), ("heads", "head_dim"), "const", -5.0),
+        "tm/decay_a": ParamSpec((d, LORA_DECAY), ("embed", None), scale=0.1),
+        "tm/decay_b": ParamSpec((LORA_DECAY, H, D), (None, "heads", "head_dim"),
+                                scale=0.1),
+        "tm/u": ParamSpec((H, D), ("heads", "head_dim"), "uniform_pm", 0.5),
+        "tm/wr": ParamSpec((d, H, D), ("embed", "heads", "head_dim")),
+        "tm/wk": ParamSpec((d, H, D), ("embed", "heads", "head_dim")),
+        "tm/wv": ParamSpec((d, H, D), ("embed", "heads", "head_dim")),
+        "tm/wg": ParamSpec((d, H, D), ("embed", "heads", "head_dim")),
+        "tm/wo": ParamSpec((H, D, d), ("heads", "head_dim", "embed")),
+        "tm/ln_scale": ParamSpec((H, D), ("heads", "head_dim"), "ones"),
+        "tm/ln_bias": ParamSpec((H, D), ("heads", "head_dim"), "zeros"),
+        **{f"tm/{k}": v for k, v in n().items()},
+        # --- channel mix ------------------------------------------------
+        "cm/mu_k": ParamSpec((d,), ("embed",), "uniform_pm", 0.5),
+        "cm/mu_r": ParamSpec((d,), ("embed",), "uniform_pm", 0.5),
+        "cm/wk": ParamSpec((d, F), ("embed", "ffn")),
+        "cm/wv": ParamSpec((F, d), ("ffn", "embed")),
+        "cm/wr": ParamSpec((d, d), ("embed", None)),
+        **{f"cm/{k}": v for k, v in n().items()},
+    }
+    return t
+
+
+def param_table(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    return {**transformer.head_specs(cfg),
+            **stack_layers(layer_specs(cfg), cfg.num_layers)}
+
+
+# --------------------------------------------------------------------------
+# WKV core
+# --------------------------------------------------------------------------
+
+
+def wkv_chunked(r, k, v, lw, u, s0, chunk: int):
+    """Chunked WKV. r,k,v,lw: (B,S,H,D) fp32 (lw = log decay <= 0);
+    u: (H,D); s0: (B,H,D,D). Returns (y (B,S,H,D), s_final)."""
+    B, S, H, D = r.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    n = S // chunk
+    rc = r.reshape(B, n, chunk, H, D).transpose(1, 0, 3, 2, 4)  # (n,B,H,c,D)
+    kc = k.reshape(B, n, chunk, H, D).transpose(1, 0, 3, 2, 4)
+    vc = v.reshape(B, n, chunk, H, D).transpose(1, 0, 3, 2, 4)
+    wc = lw.reshape(B, n, chunk, H, D).transpose(1, 0, 3, 2, 4)
+
+    causal = jnp.tril(jnp.ones((chunk, chunk), jnp.float32), k=-1)  # s<t
+
+    def step(s, inp):
+        rb, kb, vb, wb = inp                         # (B,H,c,D)
+        Lincl = jnp.cumsum(wb, axis=2)               # L_{t+1} = sum_{tau<=t}
+        L = Lincl - wb                               # exclusive: L_t
+        Lend = Lincl[:, :, -1:, :]                   # (B,H,1,D)
+        # inter-chunk
+        y_inter = jnp.einsum("bhtd,bhde->bhte", rb * jnp.exp(L), s)
+        # intra-chunk pairwise: exponent L_t - L_{s+1} (<=0 where s<t)
+        diff = L[:, :, :, None, :] - Lincl[:, :, None, :, :]   # (B,H,t,s,D)
+        A = jnp.einsum("bhtd,bhsd,bhtsd->bhts", rb, kb,
+                       jnp.exp(jnp.minimum(diff, 0.0)))
+        A = A * causal
+        y_intra = jnp.einsum("bhts,bhse->bhte", A, vb)
+        # bonus diagonal
+        du = jnp.einsum("bhtd,hd,bhtd->bht", rb, u, kb)
+        y_diag = du[..., None] * vb
+        y = y_inter + y_intra + y_diag
+        # state to next chunk
+        kd = kb * jnp.exp(jnp.minimum(Lend - Lincl, 0.0))      # (B,H,c,D)
+        s_new = jnp.exp(Lend)[:, :, 0, :, None] * s + \
+            jnp.einsum("bhtd,bhte->bhde", kd, vb)
+        return s_new, y
+
+    s_fin, ys = jax.lax.scan(step, s0, (rc, kc, vc, wc))
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(B, S, H, D)
+    return y, s_fin
+
+
+def wkv_recurrent_step(r, k, v, lw, u, s):
+    """One token. r,k,v,lw: (B,H,D); s: (B,H,D,D). Returns (y, s')."""
+    kv = k[..., :, None] * v[..., None, :]                     # (B,H,D,D)
+    y = jnp.einsum("bhd,bhde->bhe", r, s + u[..., :, None] * kv)
+    s_new = jnp.exp(lw)[..., :, None] * s + kv
+    return y, s_new
+
+
+def wkv_recurrent(r, k, v, lw, u, s0):
+    """Oracle: literal per-token scan. Same signature as wkv_chunked."""
+    def step(s, inp):
+        rt, kt, vt, wt = inp
+        y, s = wkv_recurrent_step(rt, kt, vt, wt, u, s)
+        return s, y
+    xs = tuple(a.transpose(1, 0, 2, 3) for a in (r, k, v, lw))
+    s_fin, ys = jax.lax.scan(step, s0, xs)
+    return ys.transpose(1, 0, 2, 3), s_fin
+
+
+# --------------------------------------------------------------------------
+# Blocks
+# --------------------------------------------------------------------------
+
+
+def _token_shift(x: jax.Array, x_prev: jax.Array) -> jax.Array:
+    """(B,S,d), (B,d) -> previous-token stream (B,S,d)."""
+    return jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)
+
+
+def time_mix(cfg: ModelConfig, p: Params, x: jax.Array, state, mode: str):
+    """RWKV6 attention analogue. state = {"x": (B,d), "s": (B,H,D,D)}."""
+    B, S, d = x.shape
+    H, D = cfg.num_rwkv_heads, cfg.rwkv_head_dim
+    from repro.models.common import apply_norm
+    h = apply_norm(cfg, p, "tm/norm", x)
+    xprev = _token_shift(h, state["x"]) if mode != "decode" else \
+        state["x"][:, None].astype(h.dtype)
+    if mode == "decode":
+        xprev = jnp.broadcast_to(xprev, h.shape)
+    dx = xprev - h
+    xxx = h + dx * p["tm/mu_x"].astype(h.dtype)
+    mix = jnp.tanh(jnp.einsum("bsd,dr->bsr", xxx, p["tm/lora_w1"].astype(h.dtype)))
+    mix = mix.reshape(B, S, 5, LORA_MIX)
+    off = jnp.einsum("bsmr,mrd->mbsd", mix, p["tm/lora_w2"].astype(h.dtype))
+    mu5 = p["tm/mu5"].astype(h.dtype)                          # (5,d)
+    xr, xk, xv, xw, xg = [h + dx * (mu5[i] + off[i]) for i in range(5)]
+
+    proj = lambda t, w: jnp.einsum("bsd,dhk->bshk", t, p[w].astype(h.dtype))
+    r = shd(proj(xr, "tm/wr"), "batch", "seq", "heads", "head_dim")
+    k = shd(proj(xk, "tm/wk"), "batch", "seq", "heads", "head_dim")
+    v = shd(proj(xv, "tm/wv"), "batch", "seq", "heads", "head_dim")
+    g = shd(proj(xg, "tm/wg"), "batch", "seq", "heads", "head_dim")
+    # data-dependent log-decay, guaranteed < 0: lw = -exp(w0 + lora)
+    dlo = jnp.einsum("bsd,dr->bsr", xw, p["tm/decay_a"].astype(h.dtype))
+    dexp = p["tm/w0"].astype(jnp.float32) + jnp.einsum(
+        "bsr,rhk->bshk", jnp.tanh(dlo), p["tm/decay_b"]).astype(jnp.float32)
+    lw = -jnp.exp(jnp.clip(dexp, -20.0, 10.0))
+    u = p["tm/u"].astype(jnp.float32)
+
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+    s0 = state["s"].astype(jnp.float32)
+    if mode == "decode":
+        y1, s_new = wkv_recurrent_step(rf[:, 0], kf[:, 0], vf[:, 0],
+                                       lw[:, 0], u, s0)
+        y = y1[:, None]
+    elif cfg.use_pallas:
+        from repro.kernels import ops
+        y, s_new = ops.rwkv6_scan(rf, kf, vf, lw, u, s0)
+    else:
+        y, s_new = wkv_chunked(rf, kf, vf, lw, u, s0, chunk=32)
+
+    # per-head group norm
+    mu = jnp.mean(y, axis=-1, keepdims=True)
+    var = jnp.var(y, axis=-1, keepdims=True)
+    yn = (y - mu) * jax.lax.rsqrt(var + 64e-5)
+    yn = yn * p["tm/ln_scale"].astype(jnp.float32) + \
+        p["tm/ln_bias"].astype(jnp.float32)
+    yn = (yn * jax.nn.silu(g.astype(jnp.float32))).astype(x.dtype)
+    out = jnp.einsum("bshk,hkd->bsd", yn, p["tm/wo"].astype(x.dtype))
+    new_state = {"x": h[:, -1].astype(state["x"].dtype), "s": s_new}
+    return out, new_state
+
+
+def _rms(cfg, p, prefix, x):
+    from repro.models.common import rms_norm
+    return rms_norm(x, p[prefix + "/scale"], cfg.norm_eps)
+
+
+def channel_mix(cfg: ModelConfig, p: Params, x: jax.Array, state, mode: str):
+    """RWKV6 FFN analogue. state = {"x": (B,d)}."""
+    from repro.models.common import apply_norm
+    h = apply_norm(cfg, p, "cm/norm", x)
+    xprev = _token_shift(h, state["x"]) if mode != "decode" else \
+        jnp.broadcast_to(state["x"][:, None].astype(h.dtype), h.shape)
+    dx = xprev - h
+    xk = h + dx * p["cm/mu_k"].astype(h.dtype)
+    xr = h + dx * p["cm/mu_r"].astype(h.dtype)
+    kh = jnp.einsum("bsd,df->bsf", xk, p["cm/wk"].astype(h.dtype))
+    kh = shd(kh, "batch", "seq", "ffn")
+    kh = jnp.square(jax.nn.relu(kh))
+    kv = jnp.einsum("bsf,fd->bsd", kh, p["cm/wv"].astype(h.dtype))
+    rgate = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr,
+                                      p["cm/wr"].astype(h.dtype)))
+    out = rgate * kv
+    return out, {"x": h[:, -1].astype(state["x"].dtype)}
+
+
+def rwkv_layer(cfg: ModelConfig, p: Params, x: jax.Array, positions: jax.Array,
+               cache, mode: str, layer_idx: Optional[int] = None, meta=None):
+    """cache = {"tm_x": (B,d), "tm_s": (B,H,D,D), "cm_x": (B,d)} or None."""
+    del positions, layer_idx
+    B = x.shape[0]
+    H, D = cfg.num_rwkv_heads, cfg.rwkv_head_dim
+    if cache is None:
+        st = init_layer_state(cfg, B)
+    else:
+        st = cache
+    tm_state = {"x": st["tm_x"], "s": st["tm_s"]}
+    a, tm_new = time_mix(cfg, p, x, tm_state, mode)
+    x = x + a
+    cm_state = {"x": st["cm_x"]}
+    m, cm_new = channel_mix(cfg, p, x, cm_state, mode)
+    x = x + m
+    x = shd(x, "batch", "seq", "embed")
+    new_cache = None if cache is None else {
+        "tm_x": tm_new["x"], "tm_s": tm_new["s"].astype(st["tm_s"].dtype),
+        "cm_x": cm_new["x"]}
+    return x, new_cache, {}
+
+
+def init_layer_state(cfg: ModelConfig, batch: int):
+    H, D = cfg.num_rwkv_heads, cfg.rwkv_head_dim
+    return {"tm_x": jnp.zeros((batch, cfg.d_model), cfg.compute_dtype),
+            "tm_s": jnp.zeros((batch, H, D, D), jnp.float32),
+            "cm_x": jnp.zeros((batch, cfg.d_model), cfg.compute_dtype)}
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               abstract: bool = False):
+    """State cache (constant size — no growth with context length)."""
+    del max_len
+    H, D, L, d = cfg.num_rwkv_heads, cfg.rwkv_head_dim, cfg.num_layers, cfg.d_model
+    shapes = {"tm_x": ((L, batch, d), cfg.compute_dtype),
+              "tm_s": ((L, batch, H, D, D), jnp.float32),
+              "cm_x": ((L, batch, d), cfg.compute_dtype)}
+    if abstract:
+        return {k: jax.ShapeDtypeStruct(s, t) for k, (s, t) in shapes.items()}
+    return {k: jnp.zeros(s, t) for k, (s, t) in shapes.items()}

@@ -1,0 +1,166 @@
+"""Selective state-space (Mamba-style S6) head — used by Hymba.
+
+Diagonal selective SSM:
+
+    dt_t = softplus(x_t @ W_dt + b_dt)            (B,S,I)   per-channel step
+    a_t  = exp(dt_t * A)                          (B,S,I,N) A < 0 (learned log)
+    h_t  = a_t . h_{t-1} + dt_t * x_t * B_t       (B,I,N)   B_t: (B,S,N)
+    y_t  = sum_N h_t * C_t + D . x_t              (B,S,I)
+
+Execution: chunked ``associative_scan`` — within a chunk the linear
+recurrence is solved in O(log c) parallel steps (TPU-friendly), states are
+carried across chunks with ``lax.scan`` so peak memory is O(chunk) not
+O(S). Decode is the O(1) recurrence (this is what makes hymba a long_500k
+arch). Oracle and Pallas kernel in ``kernels/ssd_scan.py``.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, ParamSpec, Params
+from repro.sharding import shd
+
+
+def ssm_specs(cfg: ModelConfig, d_in: int) -> Dict[str, ParamSpec]:
+    I, N, Kc = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_conv
+    return {
+        "in_proj": ParamSpec((d_in, 2 * I), ("embed", "ssm_inner")),
+        "conv_w": ParamSpec((Kc, I), (None, "ssm_inner"), "normal", 0.5),
+        "conv_b": ParamSpec((I,), ("ssm_inner",), "zeros"),
+        "wB": ParamSpec((I, N), ("ssm_inner", None), scale=0.5),
+        "wC": ParamSpec((I, N), ("ssm_inner", None), scale=0.5),
+        "wdt": ParamSpec((I, I), ("ssm_inner", "ssm_inner"), scale=0.1),
+        "dt_bias": ParamSpec((I,), ("ssm_inner",), "const", -2.0),
+        "A_log": ParamSpec((I, N), ("ssm_inner", None), "const", 0.0),
+        "Dskip": ParamSpec((I,), ("ssm_inner",), "ones"),
+        "out_proj": ParamSpec((I, d_in), ("ssm_inner", "embed")),
+    }
+
+
+def _scan_chunked_fused(a: jax.Array, b: jax.Array, C: jax.Array,
+                        h0: jax.Array, chunk: int):
+    """Like ``_scan_chunked`` but contracts each chunk's hidden states with
+    C on the spot: y_t = sum_N h_t * C_t.
+
+    The full (B,S,I,N) hidden-state tensor is never materialized -- per-
+    layer peak memory drops from O(S*I*N) to O(chunk*I*N), which is the
+    difference between ~6.7 GB and ~0.4 GB per hymba layer at train_4k
+    (EXPERIMENTS.md SPerf, cell C).
+
+    a, b: (B,S,I,N); C: (B,S,N); h0: (B,I,N).
+    Returns (y (B,S,I) fp32, h_final (B,I,N)).
+    """
+    B, S, I, N = a.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    n = S // chunk
+    ac = a.reshape(B, n, chunk, I, N).transpose(1, 0, 2, 3, 4)
+    bc = b.reshape(B, n, chunk, I, N).transpose(1, 0, 2, 3, 4)
+    Cc = C.reshape(B, n, chunk, N).transpose(1, 0, 2, 3)
+
+    def combine(x, y):
+        (ax, bx), (ay, by) = x, y
+        return ax * ay, bx * ay + by
+
+    def step(h, inp):
+        ab, bb, Cb = inp                                  # (B,c,I,N), (B,c,N)
+        aa, bb2 = jax.lax.associative_scan(combine, (ab, bb), axis=1)
+        hs = aa * h[:, None] + bb2                        # (B,c,I,N)
+        y = jnp.einsum("bcin,bcn->bci", hs, Cb)           # contract now
+        return hs[:, -1], y
+
+    h_fin, ys = jax.lax.scan(step, h0, (ac, bc, Cc))
+    return ys.transpose(1, 0, 2, 3).reshape(B, S, I), h_fin
+
+
+def _scan_chunked(a: jax.Array, b: jax.Array, h0: jax.Array, chunk: int):
+    """h_t = a_t * h_{t-1} + b_t over axis 1. a,b: (B,S,I,N); h0: (B,I,N)."""
+    B, S, I, N = a.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    n = S // chunk
+    ac = a.reshape(B, n, chunk, I, N).transpose(1, 0, 2, 3, 4)
+    bc = b.reshape(B, n, chunk, I, N).transpose(1, 0, 2, 3, 4)
+
+    def combine(x, y):
+        (ax, bx), (ay, by) = x, y
+        return ax * ay, bx * ay + by
+
+    def step(h, inp):
+        ab, bb = inp                                      # (B,c,I,N)
+        aa, bb2 = jax.lax.associative_scan(combine, (ab, bb), axis=1)
+        hs = aa * h[:, None] + bb2                        # (B,c,I,N)
+        return hs[:, -1], hs
+
+    h_fin, hs = jax.lax.scan(step, h0, (ac, bc))
+    return hs.transpose(1, 0, 2, 3, 4).reshape(B, S, I, N), h_fin
+
+
+def ssm_recurrent_step(a_t, b_t, h):
+    return a_t * h + b_t
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 conv_state: jax.Array):
+    """Depthwise causal conv. x: (B,S,I); w: (K,I); conv_state: (B,K-1,I).
+
+    Returns (y (B,S,I), new_state (B,K-1,I))."""
+    K = w.shape[0]
+    xp = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)  # (B,S+K-1,I)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype) for i in range(K))
+    y = y + b.astype(x.dtype)
+    new_state = xp[:, -(K - 1):] if K > 1 else conv_state
+    return y, new_state
+
+
+def ssm_block(cfg: ModelConfig, p: Params, x: jax.Array, state, mode: str,
+              prefix: str = "ssm/") -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x: (B,S,d) -> (B,S,d). state = {"h": (B,I,N) fp32, "conv": (B,K-1,I)}."""
+    B, S, _ = x.shape
+    I, N = cfg.ssm_d_inner, cfg.ssm_state
+    g = lambda k: p[prefix + k]
+    zx = jnp.einsum("bsd,di->bsi", x, g("in_proj").astype(x.dtype))
+    z, xin = jnp.split(zx, 2, axis=-1)                    # (B,S,I) each
+    xin = shd(xin, "batch", "seq", "ssm_inner")
+    xc, conv_new = _causal_conv(xin, g("conv_w"), g("conv_b"), state["conv"])
+    xc = jax.nn.silu(xc.astype(jnp.float32))              # (B,S,I) fp32
+
+    dt = jax.nn.softplus(jnp.einsum("bsi,ij->bsj", xc,
+                                    g("wdt").astype(jnp.float32))
+                         + g("dt_bias").astype(jnp.float32))       # (B,S,I)
+    Bmat = jnp.einsum("bsi,in->bsn", xc, g("wB").astype(jnp.float32))
+    Cmat = jnp.einsum("bsi,in->bsn", xc, g("wC").astype(jnp.float32))
+    A = -jnp.exp(g("A_log").astype(jnp.float32))                   # (I,N) < 0
+    a = jnp.exp(dt[..., None] * A)                                 # (B,S,I,N)
+    b = (dt * xc)[..., None] * Bmat[:, :, None, :]                 # (B,S,I,N)
+
+    if mode == "decode":
+        h = ssm_recurrent_step(a[:, 0], b[:, 0], state["h"])
+        y_core = jnp.einsum("bsin,bsn->bsi", h[:, None], Cmat)
+    elif cfg.opt_fused_ssm_y:
+        y_core, h = _scan_chunked_fused(a, b, Cmat, state["h"], chunk=256)
+    elif cfg.use_pallas:
+        from repro.kernels import ops
+        hs, h = ops.ssd_scan(a, b, state["h"])
+        y_core = jnp.einsum("bsin,bsn->bsi", hs, Cmat)
+    else:
+        hs, h = _scan_chunked(a, b, state["h"], chunk=256)
+        y_core = jnp.einsum("bsin,bsn->bsi", hs, Cmat)
+
+    y = y_core + g("Dskip").astype(jnp.float32) * xc
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = jnp.einsum("bsi,id->bsd", y, g("out_proj").astype(x.dtype))
+    return out, {"h": h, "conv": conv_new.astype(state["conv"].dtype)}
+
+
+def init_state(cfg: ModelConfig, batch: int, abstract: bool = False):
+    I, N, K = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_conv
+    shapes = {"h": ((batch, I, N), jnp.float32),
+              "conv": ((batch, K - 1, I), cfg.compute_dtype)}
+    if abstract:
+        return {k: jax.ShapeDtypeStruct(s, t) for k, (s, t) in shapes.items()}
+    return {k: jnp.zeros(s, t) for k, (s, t) in shapes.items()}

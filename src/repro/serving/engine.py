@@ -1,0 +1,130 @@
+"""Serving engine: jitted prefill/decode steps + a continuous-batching
+instance pool per tier.
+
+The engine is the *data plane* the paper's control plane routes to. One
+:class:`Endpoint` wraps a (config, params) pair with jitted ``prefill`` and
+``decode`` steps and a slot-based KV cache pool (continuous batching:
+requests claim/release slots independently; one decode step advances every
+active slot). Latency per request is what feeds the paper's Eq (1).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model_zoo
+from repro.models.common import ModelConfig
+
+
+@dataclasses.dataclass
+class Request:
+    """One inference request (token ids in, token ids out)."""
+    rid: int
+    tokens: np.ndarray            # (prompt_len,)
+    max_new: int = 8
+    arrival_s: float = 0.0
+    # filled by the engine:
+    output: Optional[np.ndarray] = None
+    t_first: float = 0.0
+    t_done: float = 0.0
+
+
+class Endpoint:
+    """A deployed model ("Knative Service" analogue) on one tier.
+
+    ``slots`` is the max concurrent sequences (the KV cache pool size);
+    requests batch up to ``slots`` per decode step — the TPU-idiomatic
+    version of request concurrency.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, *, slots: int = 8,
+                 max_len: int = 256, donate: bool = True):
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.cache = model_zoo.init_cache(cfg, slots, max_len)
+        self.slot_pos = np.zeros(slots, np.int32)          # next position
+        self.slot_free = [True] * slots
+
+        def _prefill(params, batch, cache):
+            return model_zoo.prefill(cfg, params, batch, cache)
+
+        def _decode(params, cache, tokens, t):
+            return model_zoo.decode(cfg, params, cache, tokens, t)
+
+        dn = (2,) if donate else ()
+        self._prefill = jax.jit(_prefill, donate_argnums=())
+        self._decode = jax.jit(_decode, donate_argnums=(1,) if donate else ())
+
+    # -- slot management ---------------------------------------------------
+    def try_claim(self) -> Optional[int]:
+        for i, free in enumerate(self.slot_free):
+            if free:
+                self.slot_free[i] = False
+                return i
+        return None
+
+    def release(self, slot: int) -> None:
+        self.slot_free[slot] = True
+        self.slot_pos[slot] = 0
+
+    @property
+    def active(self) -> int:
+        return sum(not f for f in self.slot_free)
+
+    # -- steps --------------------------------------------------------------
+    def prefill_one(self, slot: int, tokens: np.ndarray) -> int:
+        """Run prefill for a single request into its slot's cache rows.
+
+        For simplicity each prefill runs at batch=slots with only the target
+        row meaningful (single-program batching); production would pack
+        multiple prompts. Returns the first generated token.
+        """
+        L = len(tokens)
+        tok = np.zeros((self.slots, L), np.int32)
+        tok[slot] = tokens
+        logits, self.cache = self._prefill(self.params, {"tokens": jnp.asarray(tok)},
+                                           self.cache)
+        self.slot_pos[slot] = L
+        return int(np.argmax(np.asarray(logits)[slot]))
+
+    def decode_all(self, tokens_by_slot: Dict[int, int]) -> Dict[int, int]:
+        """One decode step for every active slot. tokens_by_slot maps
+        slot -> last emitted token. Returns slot -> next token."""
+        tok = np.zeros(self.slots, np.int32)
+        t = np.asarray(self.slot_pos, np.int32)
+        for s, v in tokens_by_slot.items():
+            tok[s] = v
+        logits, self.cache = self._decode(self.params, self.cache,
+                                          jnp.asarray(tok), jnp.asarray(t))
+        out = {}
+        lg = np.asarray(logits)
+        for s in tokens_by_slot:
+            self.slot_pos[s] += 1
+            out[s] = int(np.argmax(lg[s]))
+        return out
+
+
+def make_serve_step(cfg: ModelConfig,
+                    mode: str) -> Callable:
+    """The pure functions the dry-run lowers (no engine state).
+
+    mode="prefill": (params, batch, cache) -> (last_logits, cache)
+    mode="decode":  (params, cache, tokens, t) -> (logits, cache)
+    """
+    if mode == "prefill":
+        def serve_step(params, batch, cache):
+            return model_zoo.prefill(cfg, params, batch, cache)
+        return serve_step
+    if mode == "decode":
+        def serve_step(params, cache, tokens, t):
+            return model_zoo.decode(cfg, params, cache, tokens, t)
+        return serve_step
+    raise ValueError(mode)

@@ -1,0 +1,136 @@
+"""Logical-axis sharding: one vocabulary, three interpreters.
+
+Parameters and activations are annotated with *logical* axis names
+("embed", "heads", "ffn", "vocab", "batch", "cache_seq", ...). A
+:class:`AxisRules` object — built by the launcher for a concrete mesh and
+run mode — maps logical names to mesh axes. Three consumers:
+
+* ``shd(x, *axes)``      — in-graph ``with_sharding_constraint`` on
+  activations (no-op when no rules are installed, so unit tests and the
+  single-device smoke path run unchanged);
+* ``param_partition_spec(spec, rules)`` — PartitionSpec for a ParamSpec;
+* the launcher builds ``in_shardings``/``out_shardings`` for ``jax.jit``
+  from whole param/cache tables.
+
+Modes differ only in the mapping (see ``launch/sharding.py`` for the
+tables): training adds FSDP ("embed" -> "data"), serving keeps weights
+replicated across "data" and shards the KV cache sequence over "model"
+(flash-decode style), etc.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisRules:
+    """Logical-axis -> mesh-axis mapping bound to a mesh."""
+
+    mesh: Mesh
+    map: Dict[str, MeshAxes]
+
+    def spec(self, axes: Sequence[Optional[str]],
+             shape: Optional[Sequence[int]] = None) -> P:
+        """PartitionSpec for a tuple of logical axis names.
+
+        When ``shape`` is given, mesh axes that do not evenly divide the
+        dimension are dropped (trailing-first), so e.g. 8 KV heads on a
+        16-way "model" axis silently fall back to replication instead of
+        producing an invalid sharding. This makes one rule table valid
+        across all ten architectures.
+        """
+        entries = []
+        used: set = set()
+        for i, ax in enumerate(axes):
+            m = self.map.get(ax) if ax is not None else None
+            if m is None:
+                entries.append(None)
+                continue
+            ms = (m,) if isinstance(m, str) else tuple(m)
+            # A mesh axis may appear only once per spec; later dims lose.
+            ms = tuple(a for a in ms if a not in used and a in self.mesh.axis_names)
+            if shape is not None:
+                # Drop trailing mesh axes until the shard count divides.
+                def size(t):
+                    n = 1
+                    for a in t:
+                        n *= self.mesh.shape[a]
+                    return n
+                while ms and shape[i] % size(ms) != 0:
+                    ms = ms[:-1]
+            used.update(ms)
+            if not ms:
+                entries.append(None)
+            elif len(ms) == 1:
+                entries.append(ms[0])
+            else:
+                entries.append(ms)
+        while entries and entries[-1] is None:
+            entries.pop()
+        return P(*entries)
+
+    def sharding(self, axes: Sequence[Optional[str]],
+                 shape: Optional[Sequence[int]] = None) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(axes, shape))
+
+
+_local = threading.local()
+
+
+def set_rules(rules: Optional[AxisRules]) -> None:
+    _local.rules = rules
+
+
+def get_rules() -> Optional[AxisRules]:
+    return getattr(_local, "rules", None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[AxisRules]):
+    prev = get_rules()
+    set_rules(rules)
+    try:
+        yield
+    finally:
+        set_rules(prev)
+
+
+def set_param_rules(rules: Optional[AxisRules]) -> None:
+    _local.param_rules = rules
+
+
+def get_param_rules() -> Optional[AxisRules]:
+    return getattr(_local, "param_rules", None)
+
+
+@contextlib.contextmanager
+def use_param_rules(rules: Optional[AxisRules]):
+    """Install the *parameter* rule table (used by in-layer weight
+    constraints: pinning a weight's sharding at its use site also pins the
+    cotangent — the lever that turns per-layer grad all-reduces into
+    reduce-scatters under FSDP; see EXPERIMENTS.md §Perf cell B)."""
+    prev = get_param_rules()
+    set_param_rules(rules)
+    try:
+        yield
+    finally:
+        set_param_rules(prev)
+
+
+def shd(x: jax.Array, *axes: Optional[str]) -> jax.Array:
+    """Constrain an activation's sharding by logical axis names (no-op
+    outside an installed AxisRules context)."""
+    rules = get_rules()
+    if rules is None:
+        return x
+    assert len(axes) == x.ndim, (axes, x.shape)
+    return jax.lax.with_sharding_constraint(x, rules.sharding(axes, x.shape))

@@ -1,0 +1,105 @@
+"""AdamW + cosine schedule, as pure pytree transforms.
+
+No optax dependency: the optimizer is ~80 lines and owning it keeps the
+checkpoint layout and the dry-run's optimizer-state sharding fully under
+our control (optimizer moments inherit each parameter's PartitionSpec, so
+FSDP shards them identically to the weights).
+
+Moments are stored in fp32 regardless of param dtype (bf16 Adam moments
+lose the small-update tail); the update is computed in fp32 and cast back.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    peak_lr: float = 3e-4
+    end_lr_frac: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    # moment storage dtype. fp32 is the default; bf16 halves optimizer HBM
+    # for the >=100B archs (update math stays fp32 either way).
+    moment_dtype: Any = jnp.float32
+
+
+class OptState(NamedTuple):
+    step: jax.Array          # () int32
+    mu: PyTree               # first moment, fp32, same tree as params
+    nu: PyTree               # second moment, fp32
+
+
+def init(params: PyTree, cfg: OptimizerConfig = OptimizerConfig()) -> OptState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, cfg.moment_dtype), params)
+    return OptState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                    nu=jax.tree.map(jnp.copy, zeros))
+
+
+def abstract_state(params: PyTree,
+                   cfg: OptimizerConfig = OptimizerConfig()) -> OptState:
+    """ShapeDtypeStruct stand-ins (dry-run path)."""
+    z = jax.tree.map(lambda p: jax.ShapeDtypeStruct(p.shape, cfg.moment_dtype),
+                     params)
+    return OptState(step=jax.ShapeDtypeStruct((), jnp.int32), mu=z, nu=z)
+
+
+def schedule(cfg: OptimizerConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup -> cosine decay to end_lr_frac * peak."""
+    s = step.astype(jnp.float32)
+    warm = s / jnp.maximum(cfg.warmup_steps, 1)
+    total = jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1)
+    frac = jnp.clip((s - cfg.warmup_steps) / total, 0.0, 1.0)
+    cos = cfg.end_lr_frac + (1 - cfg.end_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return cfg.peak_lr * jnp.where(s < cfg.warmup_steps, warm, cos)
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def _decay_mask(path: str) -> bool:
+    """Weight decay applies to matrices, not norms/biases (standard rule)."""
+    leaf = path.split("/")[-1]
+    return not (leaf in ("scale", "bias") or leaf.startswith("b"))
+
+
+def apply_updates(cfg: OptimizerConfig, params: Dict[str, jax.Array],
+                  grads: Dict[str, jax.Array], state: OptState,
+                  ) -> Tuple[Dict[str, jax.Array], OptState, Dict[str, jax.Array]]:
+    """One AdamW step on the flat param dict. Returns (params', state', info)."""
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+    step = state.step + 1
+    lr = schedule(cfg, step)
+    b1t = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2t = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    new_params, new_mu, new_nu = {}, {}, {}
+    for path in params:
+        g = grads[path].astype(jnp.float32) * clip
+        mu = cfg.b1 * state.mu[path].astype(jnp.float32) + (1 - cfg.b1) * g
+        nu = (cfg.b2 * state.nu[path].astype(jnp.float32)
+              + (1 - cfg.b2) * jnp.square(g))
+        upd = (mu / b1t) / (jnp.sqrt(nu / b2t) + cfg.eps)
+        p32 = params[path].astype(jnp.float32)
+        if _decay_mask(path):
+            upd = upd + cfg.weight_decay * p32
+        new_params[path] = (p32 - lr * upd).astype(params[path].dtype)
+        new_mu[path] = mu.astype(cfg.moment_dtype)
+        new_nu[path] = nu.astype(cfg.moment_dtype)
+    info = {"grad_norm": gnorm, "lr": lr}
+    return new_params, OptState(step, new_mu, new_nu), info

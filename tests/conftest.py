@@ -1,0 +1,14 @@
+import os
+
+# Tests run on the single real CPU device — the dry-run (and only the
+# dry-run) forces placeholder devices. Keep any accidental inheritance out.
+os.environ.pop("XLA_FLAGS", None)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

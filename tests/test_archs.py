@@ -1,0 +1,154 @@
+"""Per-architecture smoke tests: reduced configs, one train + decode step.
+
+Each assigned arch instantiates its reduced-family config, runs one
+forward/train step and one prefill->decode step on CPU, and asserts output
+shapes + finiteness. The FULL configs are exercised only via the dry-run.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import model_zoo
+from repro.training import data as data_lib
+from repro.training.optimizer import OptimizerConfig
+from repro.training.train_loop import (TrainConfig, init_state,
+                                       make_train_step)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, B=2, S=32):
+    batch = {"tokens": jax.random.randint(KEY, (B, S), 0, cfg.vocab_size),
+             "labels": jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)}
+    if cfg.frontend == "vision":
+        batch["patches"] = jax.random.normal(
+            KEY, (B, cfg.num_patches, cfg.d_model), cfg.compute_dtype)
+    return batch
+
+
+@pytest.mark.parametrize("arch", configs.ARCHS)
+def test_smoke_forward_loss(arch):
+    cfg = configs.get_smoke_config(arch)
+    params = model_zoo.init(KEY, cfg)
+    loss, metrics = jax.jit(lambda p, b: model_zoo.loss(cfg, p, b))(
+        params, _batch(cfg))
+    assert np.isfinite(float(loss)), (arch, loss)
+    assert 1.0 < float(loss) < 20.0
+
+
+@pytest.mark.parametrize("arch", configs.ARCHS)
+def test_smoke_train_step(arch):
+    cfg = configs.get_smoke_config(arch)
+    tcfg = TrainConfig(opt=OptimizerConfig(peak_lr=1e-3, warmup_steps=2,
+                                           total_steps=10))
+    state = init_state(KEY, cfg, tcfg)
+    step = jax.jit(make_train_step(cfg, tcfg))
+    batch = _batch(cfg)
+    l0 = None
+    for i in range(3):
+        state, metrics = step(state, batch)
+        l = float(metrics["loss"])
+        assert np.isfinite(l), (arch, i)
+        l0 = l0 if l0 is not None else l
+    assert l < l0, f"{arch}: loss should drop on a repeated batch"
+
+
+@pytest.mark.parametrize("arch", configs.ARCHS)
+def test_smoke_prefill_decode(arch):
+    cfg = configs.get_smoke_config(arch)
+    params = model_zoo.init(KEY, cfg)
+    B, S = 2, 16
+    extra = cfg.num_patches if cfg.frontend == "vision" else 0
+    batch = {k: v for k, v in _batch(cfg, B, S).items() if k != "labels"}
+    cache = model_zoo.init_cache(cfg, B, S + extra + 4)
+    logits, cache = jax.jit(
+        lambda p, b, c: model_zoo.prefill(cfg, p, b, c))(params, batch, cache)
+    assert logits.shape == (B, cfg.vocab_size)
+    assert np.all(np.isfinite(np.asarray(logits, np.float32)))
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    t = jnp.full((B,), S + extra, jnp.int32)
+    logits2, cache = jax.jit(
+        lambda p, c, tk, tt: model_zoo.decode(cfg, p, c, tk, tt))(
+        params, cache, tok, t)
+    assert logits2.shape == (B, cfg.vocab_size)
+    assert np.all(np.isfinite(np.asarray(logits2, np.float32)))
+
+
+@pytest.mark.parametrize("arch", ["stablelm-1.6b", "rwkv6-7b", "hymba-1.5b",
+                                  "mixtral-8x7b"])
+def test_prefill_decode_consistency(arch):
+    """decode(t=S) after prefill(S) == prefill(S+1)'s last logits."""
+    cfg = configs.get_smoke_config(arch)
+    cfg = dataclasses.replace(cfg, capacity_factor=8.0)
+    params = model_zoo.init(jax.random.fold_in(KEY, 1), cfg)
+    B, S = 2, 24
+    toks = jax.random.randint(KEY, (B, S + 1), 0, cfg.vocab_size)
+    cache = model_zoo.init_cache(cfg, B, S + 8)
+    _, cache = model_zoo.prefill(cfg, params, {"tokens": toks[:, :S]}, cache)
+    lgA, _ = model_zoo.decode(cfg, params, cache, toks[:, S],
+                              jnp.full((B,), S, jnp.int32))
+    cacheB = model_zoo.init_cache(cfg, B, S + 8)
+    lgB, _ = model_zoo.prefill(cfg, params, {"tokens": toks}, cacheB)
+    a = np.asarray(lgA, np.float32)
+    b = np.asarray(lgB, np.float32)
+    rel = np.max(np.abs(a - b)) / (np.max(np.abs(b)) + 1e-9)
+    assert rel < 2e-3, (arch, rel)
+
+
+@pytest.mark.parametrize("arch", configs.ARCHS)
+def test_full_config_matches_assignment(arch):
+    """Pin the full configs to the assigned hyperparameters."""
+    cfg = configs.get_config(arch)
+    expected = {
+        "qwen2.5-14b": dict(num_layers=48, d_model=5120, num_heads=40,
+                            num_kv_heads=8, d_ff=13824, vocab_size=152064),
+        "llama3-405b": dict(num_layers=126, d_model=16384, num_heads=128,
+                            num_kv_heads=8, d_ff=53248, vocab_size=128256),
+        "stablelm-1.6b": dict(num_layers=24, d_model=2048, num_heads=32,
+                              num_kv_heads=32, d_ff=5632, vocab_size=100352),
+        "nemotron-4-340b": dict(num_layers=96, d_model=18432, num_heads=96,
+                                num_kv_heads=8, d_ff=73728, vocab_size=256000,
+                                activation="relu2"),
+        "hymba-1.5b": dict(num_layers=32, d_model=1600, num_heads=25,
+                           num_kv_heads=5, d_ff=5504, vocab_size=32001,
+                           ssm_state=16),
+        "musicgen-medium": dict(num_layers=48, d_model=1536, num_heads=24,
+                                num_kv_heads=24, d_ff=6144, vocab_size=2048),
+        "internvl2-1b": dict(num_layers=24, d_model=896, num_heads=14,
+                             num_kv_heads=2, d_ff=4864, vocab_size=151655),
+        "rwkv6-7b": dict(num_layers=32, d_model=4096, d_ff=14336,
+                         vocab_size=65536),
+        "qwen2-moe-a2.7b": dict(num_layers=24, d_model=2048, num_heads=16,
+                                num_kv_heads=16, moe_d_ff=1408,
+                                vocab_size=151936, num_experts=60, top_k=4),
+        "mixtral-8x7b": dict(num_layers=32, d_model=4096, num_heads=32,
+                             num_kv_heads=8, d_ff=14336, vocab_size=32000,
+                             num_experts=8, top_k=2),
+    }[arch]
+    for k, v in expected.items():
+        assert getattr(cfg, k) == v, (arch, k, getattr(cfg, k), v)
+
+
+def test_qwen_bias_and_gqa():
+    cfg = configs.get_config("qwen2.5-14b")
+    assert cfg.qkv_bias is True
+    table = model_zoo.param_table(cfg)
+    assert "layers/attn/bq" in table
+
+
+def test_moe_active_params_below_total():
+    cfg = configs.get_config("qwen2-moe-a2.7b")
+    assert cfg.active_param_count() < 0.3 * cfg.param_count()
+
+
+def test_long_context_cells_only_for_subquadratic():
+    assert not configs.cell_is_valid("qwen2.5-14b", "long_500k")
+    assert not configs.cell_is_valid("llama3-405b", "long_500k")
+    for a in ("rwkv6-7b", "hymba-1.5b", "mixtral-8x7b"):
+        assert configs.cell_is_valid(a, "long_500k")
+    assert len(configs.valid_cells()) == 33

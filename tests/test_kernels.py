@@ -1,0 +1,196 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret mode)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels import flash_attention as fa_mod
+from repro.kernels import decode_attention as dec_mod
+from repro.kernels import rwkv6_scan as rwkv_mod
+from repro.kernels import ssd_scan as ssd_mod
+
+KEY = jax.random.PRNGKey(42)
+
+
+def _tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(atol=2e-5, rtol=2e-4)
+
+
+def _assert_close(a, b, dtype):
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32), **_tol(dtype))
+
+
+# ---- flash attention --------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,T,Hq,Hkv,D", [
+    (1, 16, 16, 2, 2, 8),        # MHA tiny
+    (2, 64, 64, 4, 2, 16),       # GQA
+    (1, 40, 72, 6, 3, 32),       # ragged (padding paths)
+    (2, 128, 128, 8, 1, 64),     # MQA, aligned
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(B, S, T, Hq, Hkv, D, dtype):
+    ks = jax.random.split(jax.random.fold_in(KEY, S * T + Hq), 3)
+    q = jax.random.normal(ks[0], (B, S, Hq, D), dtype)
+    k = jax.random.normal(ks[1], (B, T, Hkv, D), dtype)
+    v = jax.random.normal(ks[2], (B, T, Hkv, D), dtype)
+    qp = jnp.broadcast_to(jnp.arange(T - S, T)[None], (B, S)).astype(jnp.int32)
+    kp = jnp.broadcast_to(jnp.arange(T)[None], (B, T)).astype(jnp.int32)
+    out = fa_mod.flash_attention(q, k, v, qp, kp, blk_q=32, blk_k=32,
+                                 interpret=True)
+    want = ref.flash_attention(q, k, v, qp, kp)
+    _assert_close(out, want, dtype)
+
+
+@pytest.mark.parametrize("window", [4, 16])
+@pytest.mark.parametrize("softcap", [None, 20.0])
+def test_flash_attention_window_softcap(window, softcap):
+    B, S, Hq, Hkv, D = 2, 48, 4, 4, 16
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, S, Hq, D))
+    k = jax.random.normal(ks[1], (B, S, Hkv, D))
+    v = jax.random.normal(ks[2], (B, S, Hkv, D))
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S)).astype(jnp.int32)
+    out = fa_mod.flash_attention(q, k, v, pos, pos, window=window,
+                                 softcap=softcap, blk_q=16, blk_k=16,
+                                 interpret=True)
+    want = ref.flash_attention(q, k, v, pos, pos, window=window,
+                               softcap=softcap)
+    _assert_close(out, want, jnp.float32)
+
+
+def test_flash_attention_grad_matches_oracle():
+    B, S, Hq, Hkv, D = 1, 32, 4, 2, 8
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, S, Hq, D))
+    k = jax.random.normal(ks[1], (B, S, Hkv, D))
+    v = jax.random.normal(ks[2], (B, S, Hkv, D))
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S)).astype(jnp.int32)
+    g1 = jax.grad(lambda q, k, v: ops.flash_attention(
+        q, k, v, pos, pos).sum(), argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(lambda q, k, v: ref.flash_attention(
+        q, k, v, pos, pos).sum(), argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        _assert_close(a, b, jnp.float32)
+
+
+# ---- decode attention -------------------------------------------------------
+
+@pytest.mark.parametrize("B,T,Hq,Hkv,D,blk", [
+    (2, 64, 4, 2, 16, 32),
+    (1, 100, 8, 8, 32, 32),      # padded T
+    (3, 256, 8, 2, 64, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_sweep(B, T, Hq, Hkv, D, blk, dtype):
+    ks = jax.random.split(jax.random.fold_in(KEY, T + Hkv), 4)
+    q = jax.random.normal(ks[0], (B, Hq, D), dtype)
+    k = jax.random.normal(ks[1], (B, T, Hkv, D), dtype)
+    v = jax.random.normal(ks[2], (B, T, Hkv, D), dtype)
+    # rolling-cache style: shuffled positions, some empty slots
+    perm = jax.random.permutation(ks[3], jnp.arange(T))
+    kp = jnp.where(perm > int(T * 0.9), -1, perm)[None].repeat(B, 0).astype(jnp.int32)
+    qp = jnp.full((B,), int(T * 0.8), jnp.int32)
+    out = dec_mod.decode_attention(q, k, v, qp, kp, blk_k=blk, interpret=True)
+    want = ref.decode_attention(q, k, v, qp, kp)
+    _assert_close(out, want, dtype)
+
+
+def test_decode_attention_sliding_window():
+    B, T, Hq, Hkv, D = 2, 96, 4, 2, 16
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, Hq, D))
+    k = jax.random.normal(ks[1], (B, T, Hkv, D))
+    v = jax.random.normal(ks[2], (B, T, Hkv, D))
+    kp = jnp.broadcast_to(jnp.arange(T)[None], (B, T)).astype(jnp.int32)
+    qp = jnp.full((B,), T - 1, jnp.int32)
+    out = dec_mod.decode_attention(q, k, v, qp, kp, window=24, blk_k=32,
+                                   interpret=True)
+    want = ref.decode_attention(q, k, v, qp, kp, window=24)
+    _assert_close(out, want, jnp.float32)
+
+
+# ---- rwkv6 ------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,H,D,chunk", [
+    (1, 32, 2, 8, 16),
+    (2, 128, 4, 16, 32),
+    (2, 64, 1, 64, 64),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rwkv6_scan_sweep(B, S, H, D, chunk, dtype):
+    ks = jax.random.split(jax.random.fold_in(KEY, S + D), 6)
+    r = jax.random.normal(ks[0], (B, S, H, D), dtype)
+    k = jax.random.normal(ks[1], (B, S, H, D), dtype)
+    v = jax.random.normal(ks[2], (B, S, H, D), dtype)
+    lw = -jnp.abs(jax.random.normal(ks[3], (B, S, H, D), jnp.float32)) * 0.4
+    u = (jax.random.normal(ks[4], (H, D), jnp.float32) * 0.3)
+    s0 = jax.random.normal(ks[5], (B, H, D, D), jnp.float32) * 0.1
+    y, sf = rwkv_mod.rwkv6_scan(r.astype(jnp.float32), k.astype(jnp.float32),
+                                v.astype(jnp.float32), lw, u, s0,
+                                chunk=chunk, interpret=True)
+    yr, sfr = ref.rwkv6_scan(r, k, v, lw, u, s0)
+    tol = dict(atol=5e-2, rtol=5e-2) if dtype == jnp.bfloat16 else \
+        dict(atol=5e-4, rtol=5e-3)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32), **tol)
+    np.testing.assert_allclose(np.asarray(sf), np.asarray(sfr), **tol)
+
+
+def test_rwkv6_state_carry_composes():
+    """scan(S) == scan(S/2) ∘ scan(S/2) via the carried state."""
+    B, S, H, D = 1, 64, 2, 8
+    ks = jax.random.split(KEY, 6)
+    r, k, v = (jax.random.normal(ks[i], (B, S, H, D)) for i in range(3))
+    lw = -jnp.abs(jax.random.normal(ks[3], (B, S, H, D))) * 0.3
+    u = jax.random.normal(ks[4], (H, D)) * 0.2
+    s0 = jnp.zeros((B, H, D, D))
+    y_all, s_all = rwkv_mod.rwkv6_scan(r, k, v, lw, u, s0, chunk=16,
+                                       interpret=True)
+    h = S // 2
+    y1, s1 = rwkv_mod.rwkv6_scan(r[:, :h], k[:, :h], v[:, :h], lw[:, :h],
+                                 u, s0, chunk=16, interpret=True)
+    y2, s2 = rwkv_mod.rwkv6_scan(r[:, h:], k[:, h:], v[:, h:], lw[:, h:],
+                                 u, s1, chunk=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(y_all), atol=2e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(s_all),
+                               atol=2e-4, rtol=1e-3)
+
+
+# ---- ssd --------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,I,N,chunk,blk_i", [
+    (1, 32, 16, 8, 16, 16),
+    (2, 128, 40, 16, 32, 32),    # I padded to blk_i
+    (1, 64, 256, 16, 64, 128),
+])
+def test_ssd_scan_sweep(B, S, I, N, chunk, blk_i):
+    ks = jax.random.split(jax.random.fold_in(KEY, I + S), 3)
+    a = jax.nn.sigmoid(jax.random.normal(ks[0], (B, S, I, N)) * 2.0)
+    b = jax.random.normal(ks[1], (B, S, I, N)) * 0.5
+    h0 = jax.random.normal(ks[2], (B, I, N)) * 0.2
+    hs, hf = ssd_mod.ssd_scan(a, b, h0, chunk=chunk, blk_i=blk_i,
+                              interpret=True)
+    hsr, hfr = ref.ssd_scan(a, b, h0)
+    np.testing.assert_allclose(np.asarray(hs), np.asarray(hsr),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(hf), np.asarray(hfr),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_ssd_strong_decay_stable():
+    """Near-zero decay (the cumprod-underflow regime) stays exact."""
+    B, S, I, N = 1, 128, 8, 4
+    ks = jax.random.split(KEY, 2)
+    a = jnp.full((B, S, I, N), 0.01)
+    b = jax.random.normal(ks[0], (B, S, I, N))
+    h0 = jax.random.normal(ks[1], (B, I, N))
+    hs, hf = ssd_mod.ssd_scan(a, b, h0, chunk=64, blk_i=8, interpret=True)
+    hsr, hfr = ref.ssd_scan(a, b, h0)
+    np.testing.assert_allclose(np.asarray(hs), np.asarray(hsr),
+                               atol=1e-5, rtol=1e-4)

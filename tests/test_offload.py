@@ -1,0 +1,182 @@
+"""Unit + property tests for the paper's Eqs (1)-(4) controller."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import offload
+from repro.core.offload import OffloadConfig, OffloadState
+
+
+def _steady(cfg, lat, steps=50, F=1, W=32):
+    state = OffloadState.init(F, cfg)
+    windows = jnp.asarray(np.tile(lat, (F, 1)), jnp.float32)
+    R = None
+    for _ in range(steps):
+        state, R = offload.offload_update(state, windows, cfg)
+    return np.asarray(R)
+
+
+# ---- Eq (1) -----------------------------------------------------------------
+
+def test_latency_ratio_uniform_is_one():
+    lat = jnp.full((3, 64), 0.25)
+    r = offload.latency_ratio(lat)
+    np.testing.assert_allclose(np.asarray(r), 1.0, rtol=1e-6)
+
+
+def test_latency_ratio_matches_numpy_percentiles():
+    rng = np.random.default_rng(1)
+    lat = rng.lognormal(-2, 0.7, size=(4, 128)).astype(np.float32)
+    r = np.asarray(offload.latency_ratio(jnp.asarray(lat)))
+    want = np.percentile(lat, 95, axis=-1) / np.percentile(lat, 50, axis=-1)
+    np.testing.assert_allclose(r, np.maximum(want, 1.0), rtol=1e-4)
+
+
+def test_latency_ratio_masked():
+    lat = np.full((1, 8), 1.0, np.float32)
+    lat[0, :2] = 100.0                      # only the masked slots are heavy
+    valid = np.ones((1, 8), bool)
+    valid[0, :2] = False
+    r = np.asarray(offload.latency_ratio(jnp.asarray(lat), jnp.asarray(valid)))
+    np.testing.assert_allclose(r, 1.0, rtol=1e-5)
+
+
+# ---- Eq (2) -----------------------------------------------------------------
+
+def test_decay_weights_normalized_and_monotone():
+    cfg = OffloadConfig(c_decay=0.7, c_t=12)
+    w = np.asarray(cfg.decay_weights())
+    assert w.shape == (13,)
+    np.testing.assert_allclose(w.sum(), 1.0, rtol=1e-6)
+    assert np.all(np.diff(w) < 0)           # newest first
+
+def test_eq2_matches_hand_rolled():
+    cfg = OffloadConfig(c_decay=0.5, c_t=3, c_in=0.0, c_soft=0.0, c_hard=100.0)
+    state = OffloadState.init(1, cfg)
+    ratios = [2.0, 3.0, 5.0, 7.0, 11.0]
+    for r in ratios:
+        state = offload.push_ratio(state, jnp.asarray([r], jnp.float32))
+    r_prime = np.asarray(offload._decayed_ratio(state, cfg))[0]
+    w = np.array([0.5 ** k for k in range(4)])
+    newest_first = np.array(ratios[::-1][:4])
+    want = float((w * newest_first).sum() / w.sum())
+    np.testing.assert_allclose(r_prime, want, rtol=1e-5)
+
+
+# ---- Eq (3) -----------------------------------------------------------------
+
+@pytest.mark.parametrize("rp,want", [
+    (1.0, 0.0),          # below soft limit
+    (1.25, 0.0),         # at soft limit
+    (2.5, 100.0),        # at hard limit
+    (3.0, 100.0),        # above hard
+    (1.875, 50.0),       # midpoint
+])
+def test_eq3_piecewise(rp, want):
+    cfg = OffloadConfig(c_soft=1.25, c_hard=2.5)
+    got = float(offload.target_percentage(jnp.asarray([rp]), cfg)[0])
+    np.testing.assert_allclose(got, want, atol=1e-4)
+
+
+# ---- Eq (4) -----------------------------------------------------------------
+
+def test_eq4_inertia_first_step():
+    cfg = OffloadConfig(c_in=0.6, c_soft=1.0, c_hard=2.0, c_t=0)
+    state = OffloadState.init(1, cfg)
+    # one update with ratio 2.0 -> r_t = 100; R = 0*0.6 + 100*0.4 = 40
+    lat = np.ones((1, 64), np.float32)
+    lat[0, -5:] = 10.0                      # >5% heavy => p95/p50 >> hard
+    state, R = offload.offload_update(state, jnp.asarray(lat), cfg)
+    np.testing.assert_allclose(np.asarray(R), [40.0], atol=1.0)
+
+
+def test_controller_engages_and_disengages():
+    cfg = OffloadConfig()
+    heavy = np.ones((1, 64), np.float32)
+    heavy[0, -6:] = 50.0
+    R_hot = _steady(cfg, heavy[0], steps=40)
+    assert R_hot[0] > 95.0
+    # now the edge drains: uniform latencies -> R decays toward 0
+    state = OffloadState.init(1, cfg)
+    for _ in range(40):
+        state, _ = offload.offload_update(state, jnp.asarray(heavy), cfg)
+    uniform = jnp.ones((1, 64), jnp.float32)
+    for _ in range(60):
+        state, R = offload.offload_update(state, uniform, cfg)
+    assert float(R[0]) < 1.0
+
+
+def test_vectorized_over_functions():
+    cfg = OffloadConfig()
+    lat = np.ones((3, 64), np.float32)
+    lat[1, -6:] = 40.0                      # only fn 1 is tail-heavy
+    state = OffloadState.init(3, cfg)
+    for _ in range(30):
+        state, R = offload.offload_update(state, jnp.asarray(lat), cfg)
+    R = np.asarray(R)
+    assert R[1] > 90 and R[0] < 1 and R[2] < 1
+
+
+def test_scan_controller_matches_loop():
+    cfg = OffloadConfig()
+    rng = np.random.default_rng(3)
+    trace = rng.lognormal(-2, 0.5, size=(20, 2, 32)).astype(np.float32)
+    Rs = np.asarray(offload.scan_controller(cfg, jnp.asarray(trace)))
+    state = OffloadState.init(2, cfg)
+    for t in range(20):
+        state, R = offload.offload_update(state, jnp.asarray(trace[t]), cfg)
+        np.testing.assert_allclose(Rs[t], np.asarray(R), rtol=1e-5)
+
+
+def test_controller_jit_and_grad_safe():
+    cfg = OffloadConfig()
+    state = OffloadState.init(2, cfg)
+    lat = jnp.ones((2, 16))
+    f = jax.jit(lambda s, l: offload.offload_update(s, l, cfg))
+    state, R = f(state, lat)
+    assert R.shape == (2,)
+
+
+# ---- properties -------------------------------------------------------------
+
+@hypothesis.given(
+    st.lists(st.floats(0.001, 10.0), min_size=8, max_size=64),
+    st.floats(0.1, 0.99), st.integers(1, 16))
+@hypothesis.settings(max_examples=40, deadline=None)
+def test_R_always_in_range(lats, c_decay, c_t):
+    cfg = OffloadConfig(c_decay=c_decay, c_t=c_t)
+    lat = np.asarray(lats, np.float32)[None]
+    state = OffloadState.init(1, cfg)
+    for _ in range(10):
+        state, R = offload.offload_update(state, jnp.asarray(lat), cfg)
+        assert 0.0 <= float(R[0]) <= 100.0
+        assert np.isfinite(float(R[0]))
+
+
+@hypothesis.given(st.floats(1.0, 5.0), st.floats(0.0, 0.95))
+@hypothesis.settings(max_examples=30, deadline=None)
+def test_R_monotone_in_ratio(scale, c_in):
+    """A strictly heavier tail never lowers the steady-state percentage."""
+    cfg = OffloadConfig(c_in=c_in)
+    base = np.ones(64, np.float32)
+    tail_a = base.copy(); tail_a[-6:] = 1.0 + scale
+    tail_b = base.copy(); tail_b[-6:] = 1.0 + scale * 2
+    Ra = _steady(cfg, tail_a, steps=30)[0]
+    Rb = _steady(cfg, tail_b, steps=30)[0]
+    assert Rb >= Ra - 1e-4
+
+
+def test_net_aware_caps_by_link():
+    # demand 100 rps x 1 MB = 100 MB/s; link 50 MB/s -> cap 50%
+    cfg = OffloadConfig(net_aware=True, link_bytes_per_s=50e6, req_bytes=1e6,
+                        demand_rps=100.0)
+    heavy = np.ones(64, np.float32); heavy[-8:] = 100.0
+    R = _steady(cfg, heavy, steps=50)[0]
+    assert R <= 50.0 + 1e-3
+    # paper-faithful config saturates to ~100 on the same trace
+    R0 = _steady(OffloadConfig(), heavy, steps=50)[0]
+    assert R0 > 95.0

@@ -1,0 +1,105 @@
+"""Histogram quantile sketch error bounds + router distribution tests."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import offload, quantile, router
+
+
+# ---- quantile sketch --------------------------------------------------------
+
+def test_sketch_error_bound_lognormal():
+    """Relative error of sketch quantiles <= one geometric bucket width."""
+    rng = np.random.default_rng(0)
+    hist = quantile.Histogram.init(1, num_buckets=64, lo=1e-4, hi=1e3)
+    data = rng.lognormal(-2.0, 1.0, size=4096).astype(np.float32)
+    hist = quantile.update(hist, jnp.asarray(data[None]))
+    # bucket width in log space
+    width = (np.log(1e3) - np.log(1e-4)) / 64
+    for q in (0.5, 0.9, 0.95, 0.99):
+        got = float(quantile.quantile(hist, q)[0])
+        want = float(np.quantile(data, q))
+        assert abs(np.log(got) - np.log(want)) <= width + 1e-6, (q, got, want)
+
+
+def test_sketch_ratio_close_to_exact():
+    rng = np.random.default_rng(1)
+    data = rng.lognormal(-2.0, 0.6, size=(3, 2048)).astype(np.float32)
+    hist = quantile.Histogram.init(3, num_buckets=128)
+    hist = quantile.update(hist, jnp.asarray(data))
+    r_sketch = np.asarray(offload.latency_ratio_from_sketch(hist))
+    r_exact = np.asarray(offload.latency_ratio(jnp.asarray(data)))
+    np.testing.assert_allclose(r_sketch, r_exact, rtol=0.25)
+
+
+def test_sketch_decay_forgets():
+    hist = quantile.Histogram.init(1, num_buckets=64)
+    slow = jnp.full((1, 256), 10.0)
+    fast = jnp.full((1, 256), 0.01)
+    hist = quantile.update(hist, slow)
+    for _ in range(40):
+        hist = quantile.update(hist, fast, decay=0.7)
+    p95 = float(quantile.quantile(hist, 0.95)[0])
+    assert p95 < 0.1        # the old slow regime is forgotten
+
+
+@hypothesis.given(st.floats(0.05, 0.99))
+@hypothesis.settings(max_examples=25, deadline=None)
+def test_sketch_quantile_monotone(q):
+    rng = np.random.default_rng(7)
+    data = rng.lognormal(-1, 0.8, size=2048).astype(np.float32)
+    hist = quantile.Histogram.init(1, num_buckets=64)
+    hist = quantile.update(hist, jnp.asarray(data[None]))
+    lo = float(quantile.quantile(hist, q * 0.5)[0])
+    hi = float(quantile.quantile(hist, q)[0])
+    assert hi >= lo - 1e-9
+
+
+# ---- router -----------------------------------------------------------------
+
+def test_route_batch_expectation():
+    key = jax.random.PRNGKey(0)
+    pct = jnp.asarray([30.0, 80.0])
+    fn_ids = jnp.asarray([0] * 100 + [1] * 50, jnp.int32)
+    counts = np.zeros(2)
+    trials = 200
+    for t in range(trials):
+        mask = np.asarray(router.route_batch(jax.random.fold_in(key, t), pct,
+                                             fn_ids, 2))
+        counts[0] += mask[:100].sum()
+        counts[1] += mask[100:].sum()
+    np.testing.assert_allclose(counts[0] / trials, 30.0, atol=1.0)
+    np.testing.assert_allclose(counts[1] / trials, 40.0, atol=1.0)
+
+
+def test_route_batch_low_variance_vs_bernoulli():
+    key = jax.random.PRNGKey(1)
+    pct = jnp.asarray([50.0])
+    fn_ids = jnp.zeros(64, jnp.int32)
+    nb, nB = [], []
+    for t in range(120):
+        k = jax.random.fold_in(key, t)
+        nb.append(int(np.asarray(router.route_batch(k, pct, fn_ids, 1)).sum()))
+        nB.append(int(np.asarray(router.route_bernoulli(k, pct, fn_ids)).sum()))
+    assert np.var(nb) < np.var(nB)
+    assert abs(np.mean(nb) - 32) < 1.5
+
+
+def test_route_batch_extremes():
+    key = jax.random.PRNGKey(2)
+    fn_ids = jnp.zeros(32, jnp.int32)
+    all_edge = np.asarray(router.route_batch(key, jnp.asarray([0.0]), fn_ids, 1))
+    all_cloud = np.asarray(router.route_batch(key, jnp.asarray([100.0]), fn_ids, 1))
+    assert all_edge.sum() == 0 and all_cloud.sum() == 32
+
+
+def test_hedged_mask_targets_stragglers():
+    key = jax.random.PRNGKey(3)
+    lat = jnp.asarray([0.1, 0.1, 5.0, 0.1, 7.0, 0.1])
+    p99 = jnp.asarray([1.0])
+    fn_ids = jnp.zeros(6, jnp.int32)
+    mask = np.asarray(router.hedged_mask(key, lat, p99, fn_ids))
+    assert mask[2] and mask[4] and mask.sum() == 2

@@ -1,0 +1,99 @@
+"""Replication merge invariants (paper §3.3.1 anti-feedback-loop)."""
+
+import dataclasses
+
+import hypothesis
+import hypothesis.strategies as st
+
+from repro.core.replication import (EDGE_ANNOTATION_PREFIX, AutoscalingPolicy,
+                                    EdgeServiceState, FunctionSpec,
+                                    ReplicationController, merge)
+
+ann_key = st.text(alphabet="abcdefgh/.-", min_size=1, max_size=12)
+ann_val = st.text(max_size=8)
+
+
+def mk_spec(name="fn", rev=1, ann=None, ckpt=""):
+    return FunctionSpec(name=name, arch="stablelm-1.6b", revision=rev,
+                        checkpoint_ref=ckpt, annotations=ann or {})
+
+
+def test_merge_idempotent():
+    cloud = mk_spec(rev=3, ann={"a": "1"})
+    edge = EdgeServiceState(spec=mk_spec(rev=1), traffic_pct_to_cloud=37.5)
+    once, ch1 = merge(edge, cloud)
+    twice, ch2 = merge(once, cloud)
+    assert ch1 is True and ch2 is False
+    assert twice == once
+
+
+def test_merge_preserves_edge_owned_fields():
+    cloud = mk_spec(rev=5)
+    edge = EdgeServiceState(spec=mk_spec(rev=1), ready_instances=2,
+                            traffic_pct_to_cloud=80.0, status="Ready")
+    merged, _ = merge(edge, cloud)
+    assert merged.ready_instances == 2
+    assert merged.traffic_pct_to_cloud == 80.0
+    assert merged.status == "Ready"
+    assert merged.spec.revision == 5
+
+
+def test_merge_preserves_edge_annotations():
+    cloud = mk_spec(rev=2, ann={"cloud.key": "c"})
+    e_ann = {EDGE_ANNOTATION_PREFIX + "state": "warm"}
+    edge = EdgeServiceState(spec=mk_spec(rev=2, ann=e_ann))
+    merged, changed = merge(edge, cloud)
+    assert merged.spec.annotations[EDGE_ANNOTATION_PREFIX + "state"] == "warm"
+    assert merged.spec.annotations["cloud.key"] == "c"
+
+
+def test_no_writes_in_steady_state():
+    """The paper's feedback loop = writes growing without cloud changes."""
+    rc = ReplicationController()
+    view = {"f1": mk_spec("f1", rev=1), "f2": mk_spec("f2", rev=4)}
+    rc.reconcile(view)
+    w0 = rc.writes
+    for _ in range(25):
+        rc.reconcile(view)
+    assert rc.writes == w0
+
+
+def test_edge_state_writes_do_not_trigger_replication():
+    rc = ReplicationController()
+    view = {"f1": mk_spec("f1")}
+    rc.reconcile(view)
+    w0 = rc.writes
+    rc.set_edge_state("f1", traffic_pct_to_cloud=66.0, status="Ready")
+    rc.reconcile(view)
+    assert rc.writes == w0
+    assert rc.get("f1").traffic_pct_to_cloud == 66.0
+
+
+def test_revision_bump_redeploys_and_gc():
+    rc = ReplicationController()
+    rc.reconcile({"f1": mk_spec("f1", rev=1)})
+    out = rc.reconcile({"f1": mk_spec("f1", rev=2)})
+    assert out["f1"] is True
+    out = rc.reconcile({})
+    assert out["f1"] is True and rc.get("f1") is None
+
+
+@hypothesis.given(
+    st.dictionaries(ann_key, ann_val, max_size=4),
+    st.dictionaries(ann_key.map(lambda k: EDGE_ANNOTATION_PREFIX + k),
+                    ann_val, max_size=4),
+    st.integers(1, 9))
+@hypothesis.settings(max_examples=60, deadline=None)
+def test_merge_properties(cloud_ann, edge_ann, rev):
+    """idempotence + edge-ownership for arbitrary annotation sets."""
+    cloud = mk_spec(rev=rev, ann=cloud_ann)
+    edge = EdgeServiceState(spec=mk_spec(rev=1, ann=edge_ann),
+                            traffic_pct_to_cloud=12.0)
+    m1, _ = merge(edge, cloud)
+    m2, changed2 = merge(m1, cloud)
+    assert m2 == m1 and changed2 is False
+    # every edge-prefixed annotation of the edge copy survives
+    for k, v in edge_ann.items():
+        assert m1.spec.annotations.get(k) == v
+    # edge-owned scalar survives
+    assert m1.traffic_pct_to_cloud == 12.0

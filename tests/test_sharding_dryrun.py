@@ -1,0 +1,237 @@
+"""Distribution-layer tests: axis rules, spec builders, and a reduced
+dry-run (4 placeholder devices via subprocess so the main test process
+keeps its single real device)."""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro import configs
+from repro.launch import hlo_analysis, hlo_cost
+from repro.launch import sharding as rules_lib
+from repro.models import model_zoo
+from repro.sharding import AxisRules
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _mesh22():
+    # a fake 2x2 mesh built on one device is enough for spec construction
+    dev = np.array(jax.devices()[:1] * 4).reshape(2, 2)
+    return Mesh(dev, ("data", "model"))
+
+
+def test_axis_rules_divisibility_fallback():
+    mesh = _mesh22()
+    rules = AxisRules(mesh, {"heads": "model", "embed": "data"})
+    # 8 heads on a 2-way axis shard; 7 heads fall back to replication
+    assert rules.spec(("embed", "heads"), (8, 8)) == P("data", "model")
+    assert rules.spec(("embed", "heads"), (8, 7)) == P("data")
+    # tuple mapping drops trailing axes until it divides
+    rules2 = AxisRules(mesh, {"batch": ("data", "model")})
+    assert rules2.spec(("batch",), (4,)) == P(("data", "model"))
+    assert rules2.spec(("batch",), (2,)) == P(("data",))
+    assert rules2.spec(("batch",), (1,)) == P()
+
+
+def test_axis_rules_no_axis_reuse():
+    mesh = _mesh22()
+    rules = AxisRules(mesh, {"a": "model", "b": "model"})
+    # the same mesh axis can't shard two dims; the later one loses
+    assert rules.spec(("a", "b"), (4, 4)) == P("model")
+
+
+def test_param_shardings_cover_every_param():
+    mesh = _mesh22()
+    for arch in ("qwen2.5-14b", "rwkv6-7b", "qwen2-moe-a2.7b", "hymba-1.5b"):
+        cfg = configs.get_config(arch)
+        sh = rules_lib.param_shardings(cfg, mesh, "train")
+        table = model_zoo.param_table(cfg)
+        assert set(sh) == set(table)
+        for path, spec in table.items():
+            nd = len(spec.shape)
+            assert len(sh[path].spec) <= nd, path
+
+
+def test_cache_shardings_match_cache_tree():
+    mesh = _mesh22()
+    for arch in ("qwen2.5-14b", "rwkv6-7b", "hymba-1.5b"):
+        cfg = configs.get_config(arch)
+        cache = model_zoo.init_cache(cfg, 4, 128, abstract=True)
+        sh = rules_lib.cache_shardings(cfg, cache, mesh, "serve")
+        assert jax.tree.structure(sh) == jax.tree.structure(
+            cache, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def test_batch_shardings_long500k_replicated():
+    mesh = _mesh22()
+    spec = configs.SHAPES["long_500k"]
+    cfg = configs.get_config("rwkv6-7b")
+    batch = configs.input_specs(cfg, spec)
+    sh = rules_lib.batch_shardings(batch, mesh)
+    assert sh["tokens"].spec == P()           # B=1 cannot shard
+
+
+# ---- HLO cost model unit tests ----------------------------------------------
+
+def test_hlo_cost_counts_loop_trips():
+    hlo = textwrap.dedent("""\
+    HloModule m
+
+    %body (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+      %p = (s32[], f32[8,8]) parameter(0)
+      %i = s32[] get-tuple-element(%p), index=0
+      %x = f32[8,8] get-tuple-element(%p), index=1
+      %d = f32[8,8] dot(%x, %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+      %one = s32[] constant(1)
+      %i2 = s32[] add(%i, %one)
+      ROOT %t = (s32[], f32[8,8]) tuple(%i2, %d)
+    }
+
+    %cond (p: (s32[], f32[8,8])) -> pred[] {
+      %p = (s32[], f32[8,8]) parameter(0)
+      %i = s32[] get-tuple-element(%p), index=0
+      %n = s32[] constant(10)
+      ROOT %lt = pred[] compare(%i, %n), direction=LT
+    }
+
+    ENTRY %main (a: f32[8,8]) -> (s32[], f32[8,8]) {
+      %a = f32[8,8] parameter(0)
+      %z = s32[] constant(0)
+      %t0 = (s32[], f32[8,8]) tuple(%z, %a)
+      ROOT %w = (s32[], f32[8,8]) while(%t0), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"10"}}
+    }
+    """)
+    res = hlo_cost.analyze_hlo(hlo)
+    # dot: 2*8*8*8 = 1024 flops x 10 trips
+    assert res["mxu_flops"] == 1024 * 10
+
+
+def test_hlo_cost_collective_accounting():
+    hlo = textwrap.dedent("""\
+    HloModule m
+
+    ENTRY %main (a: f32[4,8]) -> f32[64,8] {
+      %a = f32[4,8] parameter(0)
+      ROOT %ag = f32[64,8] all-gather(%a), replica_groups=[16,16]<=[256], dimensions={0}
+    }
+    """)
+    res = hlo_cost.analyze_hlo(hlo)
+    R = 64 * 8 * 4
+    assert res["collective_operand_bytes"]["all-gather"] == R / 16
+    np.testing.assert_allclose(res["collective_wire_bytes"], R * 15 / 16)
+
+
+def test_roofline_terms_and_dominance():
+    r = hlo_analysis.Roofline(flops_per_device=197e12, bytes_per_device=0.0,
+                              collective_bytes_per_device=0.0, chips=256,
+                              mxu_flops_per_device=197e12)
+    np.testing.assert_allclose(r.compute_s, 1.0)
+    assert r.dominant == "compute"
+    r2 = hlo_analysis.Roofline(0.0, 819e9, 0.0, 256)
+    np.testing.assert_allclose(r2.memory_s, 1.0)
+    assert r2.dominant == "memory"
+
+
+def test_model_flops_shapes():
+    cfg = configs.get_config("qwen2.5-14b")
+    tr = hlo_analysis.model_flops(cfg, "train", 4096 * 256, seq_len=4096,
+                                  batch=256)
+    assert tr > 6 * cfg.param_count() * 4096 * 256 * 0.9
+    de = hlo_analysis.model_flops(cfg, "decode", 128, seq_len=32768, batch=128)
+    assert de > 2 * cfg.active_param_count() * 128
+
+
+# ---- reduced dry-run in a subprocess (4 placeholder devices) ---------------
+
+@pytest.mark.slow
+def test_dryrun_small_mesh_subprocess():
+    code = textwrap.dedent("""\
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import json, jax, jax.numpy as jnp
+        from repro import configs, sharding as shlib
+        from repro.launch import sharding as rules_lib
+        from repro.launch import hlo_analysis
+        from repro.models import model_zoo
+        from repro.training import train_loop
+
+        mesh = jax.make_mesh((2, 2), ("data", "model"))
+        cfg = configs.get_smoke_config("qwen2.5-14b")
+        import dataclasses
+        cfg = dataclasses.replace(cfg, num_layers=2, d_model=64, num_heads=4,
+                                  num_kv_heads=2, head_dim=16, d_ff=128,
+                                  vocab_size=256)
+        tcfg = train_loop.TrainConfig()
+        state = train_loop.abstract_state(cfg, tcfg)
+        state_sh = rules_lib.train_state_shardings(cfg, mesh)
+        batch = {"tokens": jax.ShapeDtypeStruct((8, 32), jnp.int32),
+                 "labels": jax.ShapeDtypeStruct((8, 32), jnp.int32)}
+        batch_sh = rules_lib.batch_shardings(batch, mesh)
+        arules = rules_lib.act_rules(mesh, "train")
+        step = train_loop.make_train_step(cfg, tcfg,
+                                          grad_shardings=state_sh.params)
+        def wrapped(s, b):
+            with shlib.use_rules(arules):
+                return step(s, b)
+        with mesh:
+            lowered = jax.jit(wrapped, in_shardings=(state_sh, batch_sh),
+                              out_shardings=(state_sh, None),
+                              donate_argnums=(0,)).lower(state, batch)
+            compiled = lowered.compile()
+        roof, detail = hlo_analysis.roofline_from_compiled(compiled, 4)
+        assert roof.flops_per_device > 0
+        assert detail["collectives"]["total"] >= 0
+        print(json.dumps({"ok": True,
+                          "ndev": len(jax.devices()),
+                          "flops": roof.flops_per_device}))
+    """)
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=420)
+    assert out.returncode == 0, out.stderr[-2000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res["ok"] and res["ndev"] == 4
+
+
+@pytest.mark.slow
+def test_ring_allreduce_int8_4dev_subprocess():
+    """The int8 ring matches psum on a real 4-device (host) mesh."""
+    code = textwrap.dedent("""\
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import functools, json
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import Mesh, PartitionSpec as P
+        from jax import shard_map
+        from repro.training import compression
+
+        mesh = jax.make_mesh((4,), ("data",))
+        x = jnp.arange(4 * 16, dtype=jnp.int8).reshape(4, 16) % 11 - 5
+
+        @functools.partial(shard_map, mesh=mesh, in_specs=P("data"),
+                           out_specs=P("data"), check_vma=False)
+        def ring(x):
+            return compression.ring_allreduce_int8(x[0], "data")[None]
+
+        got = np.asarray(ring(x))
+        want = np.sum(np.asarray(x, np.int32), axis=0)
+        for d in range(4):
+            np.testing.assert_array_equal(got[d], want)
+        print(json.dumps({"ok": True}))
+    """)
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=420)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert json.loads(out.stdout.strip().splitlines()[-1])["ok"]
