@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import offload, quantile
+from repro.core import offload, quantile, router
 
 
 def _time(f, *args, n=50):
@@ -47,6 +47,23 @@ def main(out_dir: str | None = None):
     dt = _time(scan, trace, n=10)
     results["scan_steps_per_s"] = T / dt
     print(f"scan_controller: {T/dt:,.0f} controller steps/s")
+
+    # router: sort-based O(B log B) route_batch vs the O(B^2) dense rank
+    # matrix it replaced — the gap is what makes large-batch routing viable.
+    for B in (256, 1024, 4096):
+        F = 16
+        key = jax.random.PRNGKey(3)
+        fn_ids = jax.random.randint(jax.random.PRNGKey(4), (B,), 0, F)
+        pct = jnp.linspace(0.0, 100.0, F)
+        fast = jax.jit(lambda k, p, f: router.route_batch(k, p, f, F))
+        dt_s = _time(fast, key, pct, fn_ids)
+        results[f"route_batch_B{B}_us"] = dt_s * 1e6
+        dense = jax.jit(
+            lambda k, p, f: router.route_batch_dense(k, p, f, F))
+        dt_d = _time(dense, key, pct, fn_ids, n=10 if B >= 1024 else 50)
+        results[f"route_batch_dense_B{B}_us"] = dt_d * 1e6
+        print(f"route_batch      B={B:5d}: {dt_s*1e6:8.1f} us   "
+              f"dense: {dt_d*1e6:10.1f} us   ({dt_d/dt_s:6.1f}x)")
 
     # sketch path
     hist = quantile.Histogram.init(16, num_buckets=64)

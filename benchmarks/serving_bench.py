@@ -1,9 +1,12 @@
 """Serving-path microbench: tokens/s through the two-tier continuum on the
-smoke configs + offload-policy comparison at fixed wall budget.
+smoke configs, offload-policy comparison at fixed wall budget, and the
+batched-vs-serial scheduler comparison.
 
 This is the live-engine counterpart of the simulator benches: real jitted
 prefill/decode steps, real controller, one CPU device — numbers are
-CPU-relative but the POLICY ordering mirrors the paper's Table 2.
+CPU-relative but the POLICY ordering mirrors the paper's Table 2, and the
+batched wave scheduler (shared ``decode_all`` stream per wave) beats the
+serial ``serve_one``-per-request baseline on the same workload.
 """
 
 from __future__ import annotations
@@ -19,44 +22,61 @@ from repro import configs
 from repro.core import offload
 from repro.core.replication import FunctionSpec
 from repro.models import model_zoo
-from repro.serving.engine import Endpoint, Request
-from repro.serving.tiers import EdgeCloudContinuum, TierConfig
+from repro.platform import Continuum, Request, TierConfig
+from repro.serving.engine import Endpoint
 
 
 def bench_engine(arch: str = "stablelm-1.6b", steps: int = 30):
     cfg = configs.get_smoke_config(arch)
     params = model_zoo.init(jax.random.PRNGKey(0), cfg)
     ep = Endpoint(cfg, params, slots=4, max_len=128)
-    ep.prefill_one(0, np.arange(16, dtype=np.int32))
-    toks = {0: 1}
+    slot = ep.try_claim()
+    ep.prefill_one(slot, np.arange(16, dtype=np.int32))
+    toks = {slot: 1}
     t0 = time.perf_counter()
     for _ in range(steps):
-        toks = {0: ep.decode_all(toks)[0]}
+        toks = {slot: ep.decode_all(toks)[slot]}
     dt = (time.perf_counter() - t0) / steps
     return {"arch": arch, "decode_step_ms": dt * 1e3,
             "tokens_per_s_per_slot": 1.0 / dt}
 
 
-def bench_policies(rounds: int = 12, seed: int = 0):
+def _workload(rounds: int, seed: int):
+    """The shared request schedule: (round, tokens, max_new) triples."""
+    rng = np.random.default_rng(seed)
+    sched = []
+    for rnd in range(rounds):
+        for _ in range(2 if rnd < 3 else 8):
+            sched.append((rnd, rng.integers(0, 128, 6).astype(np.int32), 2))
+    return sched
+
+
+def _mk_continuum(policy_cfg: offload.OffloadConfig, seed: int) -> Continuum:
     cfg = configs.get_smoke_config("stablelm-1.6b")
     params = model_zoo.init(jax.random.PRNGKey(seed), cfg)
+    cc = Continuum(edge=TierConfig(slots=2, max_len=64),
+                   cloud=TierConfig(slots=8, max_len=64),
+                   policy="auto", offload_cfg=policy_cfg, seed=seed)
+    cc.deploy(FunctionSpec(name="fn", arch="stablelm-1.6b"), cfg, params)
+    return cc
+
+
+def bench_policies(rounds: int = 12, seed: int = 0):
+    """Offload-policy comparison at fixed workload (Table-2 ordering)."""
+    sched = _workload(rounds, seed)
     out = {}
     for policy in ("edge_only", "auto"):
         ocfg = offload.OffloadConfig(
             c_soft=999.0 if policy == "edge_only" else 1.25)
-        cc = EdgeCloudContinuum(edge=TierConfig(slots=2, max_len=64),
-                                cloud=TierConfig(slots=8, max_len=64),
-                                offload_cfg=ocfg, seed=seed)
-        cc.deploy(FunctionSpec(name="fn", arch="stablelm-1.6b"), cfg, params)
-        rng = np.random.default_rng(seed)
+        cc = _mk_continuum(ocfg, seed)
         rid = 0
         t0 = time.perf_counter()
         for rnd in range(rounds):
-            for _ in range(2 if rnd < 3 else 8):
-                cc.submit("fn", Request(
-                    rid=rid, tokens=rng.integers(0, 128, 6).astype(np.int32),
-                    max_new=2))
-                rid += 1
+            for r, toks, max_new in sched:
+                if r == rnd:
+                    cc.submit("fn", Request(rid=rid, tokens=toks,
+                                            max_new=max_new))
+                    rid += 1
             cc.tick()
         wall = time.perf_counter() - t0
         lat, valid = cc.edge.metrics.latency_windows(256)
@@ -71,6 +91,83 @@ def bench_policies(rounds: int = 12, seed: int = 0):
     return out
 
 
+def bench_scheduler(rounds: int = 12, seed: int = 0):
+    """Same workload through (a) the batched wave scheduler and (b) the
+    serial ``serve_one``-per-request baseline.
+
+    The batched path packs each wave into one prefill + one shared
+    ``decode_all`` stream, so B co-scheduled requests cost ~max_new decode
+    steps instead of B * max_new — that is the req/s win reported here.
+    """
+    sched = _workload(rounds, seed)
+    out = {}
+
+    def _warmup(cc):
+        """Compile prefill/decode on both tiers before timing, then drop
+        the (compile-skewed) warmup latencies from the scraped metrics."""
+        for tier in (cc.edge, cc.cloud):
+            req = Request(rid=-1, tokens=np.zeros(6, np.int32), max_new=2)
+            tier.serve_one("fn", req)
+            tier.metrics.clear()
+
+    # (a) batched: submit per round, tick drains in waves
+    cc = _mk_continuum(offload.OffloadConfig(), seed)
+    _warmup(cc)
+    rid = 0
+    t0 = time.perf_counter()
+    for rnd in range(rounds):
+        for r, toks, max_new in sched:
+            if r == rnd:
+                cc.submit("fn", Request(rid=rid, tokens=toks,
+                                        max_new=max_new))
+                rid += 1
+        cc.tick()
+    wall_batched = time.perf_counter() - t0
+    lat, valid = cc.edge.metrics.latency_windows(256)
+    lats = lat[0][valid[0]]
+    out["batched"] = {
+        "served": int(sum(r["edge"] + r["cloud"] for r in cc.log)),
+        "cloud_frac": float(sum(r["cloud"] for r in cc.log) / max(rid, 1)),
+        "waves": int(sum(r["waves"] for r in cc.log)),
+        "wall_s": wall_batched,
+        "req_per_s": rid / wall_batched,
+        "edge_p50_ms": float(np.percentile(lats, 50) * 1e3) if len(lats) else None,
+        "edge_p95_ms": float(np.percentile(lats, 95) * 1e3) if len(lats) else None,
+    }
+
+    # (b) serial: identical requests + routing policy, but each request is
+    # served alone (serve_one) — the pre-batching code path.
+    cc = _mk_continuum(offload.OffloadConfig(), seed)
+    _warmup(cc)
+    rid = 0
+    served_edge = served_cloud = 0
+    t0 = time.perf_counter()
+    for rnd in range(rounds):
+        batch = [(toks, max_new) for r, toks, max_new in sched if r == rnd]
+        R = cc.controller_update()
+        fn_ids = np.zeros(len(batch), np.int32)
+        cc.key, sub = jax.random.split(cc.key)
+        to_cloud = cc.control.route(sub, fn_ids)
+        for (toks, max_new), cloudward in zip(batch, to_cloud):
+            req = Request(rid=rid, tokens=toks, max_new=max_new)
+            tier = cc.cloud if bool(cloudward) else cc.edge
+            tier.serve_one("fn", req)
+            if bool(cloudward):
+                served_cloud += 1
+            else:
+                served_edge += 1
+            rid += 1
+    wall_serial = time.perf_counter() - t0
+    out["serial"] = {
+        "served": served_edge + served_cloud,
+        "cloud_frac": served_cloud / max(rid, 1),
+        "wall_s": wall_serial,
+        "req_per_s": rid / wall_serial,
+    }
+    out["batched_speedup"] = wall_serial / wall_batched
+    return out
+
+
 def main(out_dir: str | None = None):
     eng = bench_engine()
     print(f"engine decode: {eng['decode_step_ms']:.1f} ms/step "
@@ -79,7 +176,14 @@ def main(out_dir: str | None = None):
     for k, v in pol.items():
         print(f"{k:10s} served={v['served']} cloud_frac={v['cloud_frac']:.2f} "
               f"wall={v['wall_s']:.1f}s p95={v['edge_p95_ms']}")
-    res = {"engine": eng, "policies": pol}
+    sched = bench_scheduler()
+    for k in ("batched", "serial"):
+        v = sched[k]
+        print(f"{k:8s} served={v['served']} wall={v['wall_s']:.1f}s "
+              f"req/s={v['req_per_s']:.2f}")
+    print(f"batched speedup over serial serve_one: "
+          f"{sched['batched_speedup']:.2f}x")
+    res = {"engine": eng, "policies": pol, "scheduler": sched}
     if out_dir:
         os.makedirs(out_dir, exist_ok=True)
         with open(os.path.join(out_dir, "serving_bench.json"), "w") as f:

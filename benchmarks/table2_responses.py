@@ -1,8 +1,10 @@
 """Paper Table 2: successful responses per (workload x traffic policy).
 
-Runs the deterministic continuum simulator for the paper's four workloads
-under the six traffic policies and prints the table in the paper's format.
-The 'auto' column exercises the real Eqs (1)-(4) controller.
+Runs the deterministic continuum simulator (via the
+``repro.platform.Continuum`` facade) for the paper's four workloads under
+the six traffic policies and prints the table in the paper's format.  The
+'auto' column exercises the real Eqs (1)-(4) controller through
+``Policy.parse`` — the same objects the live runtime schedules with.
 """
 
 from __future__ import annotations
@@ -11,7 +13,7 @@ import json
 import os
 from typing import Dict
 
-from repro.core.simulator import ContinuumSimulator, SimConfig
+from repro.platform import Continuum, SimConfig
 
 POLICIES = (0.0, 25.0, 50.0, 75.0, 100.0, "auto")
 WORKLOADS = ("matmult", "image_proc", "io", "mixed")
@@ -22,10 +24,8 @@ LABELS = {"matmult": "MatMult", "image_proc": "Image Proc.",
 def run(cfg: SimConfig = SimConfig(duration_s=300.0)) -> Dict[str, Dict[str, int]]:
     table: Dict[str, Dict[str, int]] = {}
     for wl in WORKLOADS:
-        table[wl] = {}
-        for pol in POLICIES:
-            res = ContinuumSimulator(wl, pol, cfg).run()
-            table[wl][str(pol)] = res.successes
+        sweep = Continuum.sweep(wl, POLICIES, cfg)
+        table[wl] = {pol: res.successes for pol, res in sweep.items()}
     return table
 
 

@@ -10,12 +10,9 @@ Runs the MatMult workload (the paper's network-bottleneck case) under:
     PYTHONPATH=src python examples/offload_sim.py
 """
 
-import dataclasses
-
 import numpy as np
 
-from repro.core import offload
-from repro.core.simulator import ContinuumSimulator, SimConfig
+from repro.platform import Continuum, SimConfig
 
 # push the ramp high enough that the paper controller wants ~100% offload
 # while the 100 MB/s link can only carry part of it — the regime where the
@@ -29,8 +26,7 @@ for label, policy in (
     ("auto (paper)", "auto"),
     ("auto+net-aware", "auto+net"),     # beyond-paper extension
 ):
-    res = ContinuumSimulator("matmult", policy, cfg).run()
-    rows.append((label, res))
+    rows.append((label, Continuum.simulate("matmult", policy, cfg)))
 
 print(f"{'policy':>16} {'ok':>6} {'fail':>5} {'lat(s)':>8} {'net peak':>9} "
       f"{'off peak':>8}")

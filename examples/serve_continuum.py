@@ -1,9 +1,11 @@
 """End-to-end driver: serve a small LM across the Edge-Cloud continuum.
 
 Deploys TWO model endpoints (a dense LM and an SSM LM) through the
-replication controller, pushes a ramped request stream at the edge
-gateway, and shows the full paper loop live: latency scrape -> Eq (1)-(4)
-controller -> weighted batch routing -> per-tier serving with KV caches.
+``repro.platform.Continuum`` facade, pushes a ramped request stream at the
+edge gateway, and shows the full paper loop live: latency scrape ->
+Policy (Eqs (1)-(4)) -> weighted batch routing -> *batched* per-tier
+serving — each scheduler wave packs the admitted requests into one
+prefill + a shared ``decode_all`` stream per endpoint.
 
     PYTHONPATH=src python examples/serve_continuum.py
 """
@@ -14,15 +16,14 @@ import numpy as np
 from repro import configs
 from repro.core.replication import FunctionSpec
 from repro.models import model_zoo
-from repro.serving.engine import Request
-from repro.serving.tiers import EdgeCloudContinuum, TierConfig
+from repro.platform import Continuum, Request, TierConfig
 
 ARCHS = ("stablelm-1.6b", "rwkv6-7b")
 
-cc = EdgeCloudContinuum(edge=TierConfig(slots=2, max_len=64),
-                        cloud=TierConfig(slots=12, max_len=64,
-                                         extra_latency_s=0.02),
-                        seed=0)
+cc = Continuum(edge=TierConfig(slots=2, max_len=64),
+               cloud=TierConfig(slots=12, max_len=64,
+                                extra_latency_s=0.02),
+               policy="auto", seed=0)
 for arch in ARCHS:
     cfg = configs.get_smoke_config(arch)
     params = model_zoo.init(jax.random.PRNGKey(hash(arch) % 2**31), cfg)
@@ -32,7 +33,8 @@ for arch in ARCHS:
 
 rng = np.random.default_rng(0)
 rid = 0
-print(f"\n{'round':>5} {'rps':>4} {'edge':>5} {'cloud':>5} {'R_t%':>6}")
+print(f"\n{'round':>5} {'rps':>4} {'edge':>5} {'cloud':>5} {'waves':>6} "
+      f"{'R_t%':>6}")
 for rnd in range(18):
     rps = 2 if rnd < 4 else 10          # ramp: overload the 2-slot edge
     for _ in range(rng.poisson(rps)):
@@ -44,11 +46,15 @@ for rnd in range(18):
         rid += 1
     rec = cc.tick()
     print(f"{rnd:>5} {rps:>4} {rec['edge']:>5} {rec['cloud']:>5} "
-          f"{rec['R']:>6.1f}")
+          f"{rec['waves']:>6} {rec['R']:>6.1f}")
 
 edge_n = sum(r["edge"] for r in cc.log)
 cloud_n = sum(r["cloud"] for r in cc.log)
+waves = sum(r["waves"] for r in cc.log)
 print(f"\nserved {rid} requests: edge={edge_n}, cloud={cloud_n} "
       f"({100 * cloud_n / max(rid, 1):.0f}% offloaded under overload)")
+print(f"batching: {rid} requests packed into {waves} waves "
+      f"({rid / max(waves, 1):.1f} requests sharing each prefill+decode "
+      f"stream on average)")
 print("steady-state replication writes:", cc.replicator.writes,
       "(no feedback loop)")

@@ -1,2 +1,3 @@
-"""Core paper technique: offloading controller (Eqs 1-4), quantile sketch,
-router, cloud->edge replication, autoscaler, and the evaluation simulator."""
+"""Core paper technique: the Policy/ControlLoop control plane, offloading
+controller (Eqs 1-4), quantile sketch, router, cloud->edge replication,
+autoscaler, and the evaluation simulator."""

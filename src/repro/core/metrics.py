@@ -58,6 +58,13 @@ class MetricsRegistry:
     def record_latency(self, fn: str, latency_s: float) -> None:
         self.latency[fn].record(latency_s)
 
+    def clear(self) -> None:
+        """Drop all recorded observations (e.g. after a warmup phase)."""
+        for w in self.latency.values():
+            w._buf.clear()
+        self.counters.clear()
+        self.gauges.clear()
+
     def inc(self, name: str, v: float = 1.0) -> None:
         self.counters[name] += v
 

@@ -1,0 +1,313 @@
+"""First-class traffic policies + the shared control loop.
+
+The paper's offloading strategy (Eqs (1)-(4)) is one algorithm that must
+govern *any* deployment of the platform.  Historically the repo had two
+divergent, stringly-typed copies of the scrape-and-update cycle — one
+inlined in :class:`repro.core.simulator.ContinuumSimulator`, one in the
+live :class:`repro.serving.tiers.EdgeCloudContinuum`.  This module is the
+single control plane both now consume:
+
+  * :class:`Policy` — the protocol every traffic policy implements
+    (``init_state / observe / update / route``), plus :meth:`Policy.parse`
+    so the established shorthands (``0.0``..``100.0``, ``"auto"``,
+    ``"auto+net"``, ``"auto+hedge"``) keep working everywhere.
+  * Concrete policies wrapping the existing primitives:
+      - :class:`StaticSplit`     — fixed percentage (paper Table 2 columns);
+      - :class:`AutoOffload`     — the paper's Eqs (1)-(4) controller;
+      - :class:`NetAwareOffload` — beyond-paper link-capacity cap (§4.2);
+      - :class:`HedgedOffload`   — auto + p99 straggler hedging on top of
+        :func:`repro.core.router.hedged_mask`.
+  * :class:`ControlLoop` — one scrape-and-update cycle: latency windows,
+    in-flight queue-age mixing, demand RPS, policy update.  The simulator
+    and the live continuum drive the *same* code, so their R_t
+    trajectories on a shared trace are identical (pinned by tests).
+
+Policies are control-plane objects (host-side numpy in/out); the heavy
+math inside ``AutoOffload.update`` stays jitted.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import offload, router
+
+PolicySpec = Union[float, int, str, "Policy"]
+
+
+class Policy:
+    """Protocol + shared plumbing for traffic policies.
+
+    A policy answers two questions each control interval:
+      * ``update``: given the scraped latency windows, what percentage R_t
+        of each function's traffic goes cloud-ward?
+      * ``route``:  given R_t, which of the queued requests cross?
+
+    ``init_state``/``observe`` let stateful policies carry their own state
+    pytree through the loop without the harness knowing its shape.
+    """
+
+    #: canonical shorthand (used by ``parse`` round-trips and logs)
+    spec: str = "policy"
+    #: lazily-built jitted router (shared by all route() calls)
+    _route_jit = None
+
+    # -- state ------------------------------------------------------------
+    def init_state(self, num_functions: int) -> Any:
+        return None
+
+    def initial_R(self, num_functions: int) -> np.ndarray:
+        """R_t before the first update (Eq (4): R_t(0) = 0)."""
+        return np.zeros(num_functions, np.float32)
+
+    def observe(self, state: Any, latencies: np.ndarray,
+                valid: np.ndarray) -> Any:
+        """Optional scrape-time hook (e.g. feed a quantile sketch)."""
+        return state
+
+    # -- control ----------------------------------------------------------
+    def update(self, state: Any, latencies: np.ndarray, valid: np.ndarray,
+               demand_rps: np.ndarray) -> Tuple[Any, np.ndarray]:
+        """One controller step -> (new_state, (F,) percentages)."""
+        raise NotImplementedError
+
+    def route(self, key: jax.Array, R: np.ndarray, fn_ids: np.ndarray,
+              num_functions: int) -> np.ndarray:
+        """Split a batch by R_t -> (B,) bool mask, True = cloud.
+
+        The batch is padded to a power-of-two bucket under one jitted
+        ``route_batch`` (padding rows carry a void function id with pct 0),
+        so live ticks with ever-changing queue depths reuse a handful of
+        compiled shapes instead of recompiling the sort every tick.
+        """
+        B = len(fn_ids)
+        if B == 0:
+            return np.zeros(0, bool)
+        if self._route_jit is None:
+            self._route_jit = jax.jit(router.route_batch,
+                                      static_argnums=(3,))
+        Bp = max(1, 1 << (B - 1).bit_length())
+        ids = np.full(Bp, num_functions, np.int32)
+        ids[:B] = fn_ids
+        pct = np.zeros(num_functions + 1, np.float32)
+        pct[:num_functions] = R
+        mask = self._route_jit(key, jnp.asarray(pct), jnp.asarray(ids),
+                               num_functions + 1)
+        return np.asarray(mask)[:B]
+
+    def hedge(self, key: jax.Array, ages_s: np.ndarray, fn_ids: np.ndarray,
+              latencies: np.ndarray, valid: np.ndarray) -> np.ndarray:
+        """Which waiting requests deserve a backup on the other tier."""
+        return np.zeros(len(fn_ids), bool)
+
+    # -- parsing ----------------------------------------------------------
+    @staticmethod
+    def parse(spec: PolicySpec,
+              offload_cfg: Optional[offload.OffloadConfig] = None,
+              link_bytes_per_s: Optional[float] = None,
+              req_bytes: Optional[float] = None) -> "Policy":
+        """Turn the established shorthands into Policy objects.
+
+        ``0.0``..``100.0`` (number or numeric string) -> StaticSplit;
+        ``"auto"`` -> AutoOffload; ``"auto+net"`` -> NetAwareOffload;
+        ``"auto+hedge"`` -> HedgedOffload.  Policy instances pass through
+        untouched, so callers can accept "policy-or-shorthand" uniformly.
+        """
+        if isinstance(spec, Policy):
+            return spec
+        cfg = offload_cfg or offload.OffloadConfig()
+        if isinstance(spec, (int, float)):
+            return StaticSplit(float(spec))
+        if isinstance(spec, str):
+            s = spec.strip().lower()
+            try:
+                return StaticSplit(float(s))
+            except ValueError:
+                pass
+            parts = s.split("+")
+            mods = set(parts[1:])
+            if parts[0] == "auto" and mods <= {"net", "hedge"}:
+                if "net" in mods:
+                    net = NetAwareOffload(cfg,
+                                          link_bytes_per_s=link_bytes_per_s,
+                                          req_bytes=req_bytes)
+                    if "hedge" in mods:
+                        pol = HedgedOffload(net.cfg)
+                        pol.spec = "auto+net+hedge"
+                        return pol
+                    return net
+                if "hedge" in mods:
+                    return HedgedOffload(cfg)
+                return AutoOffload(cfg)
+        raise ValueError(f"unknown policy spec {spec!r}")
+
+
+class StaticSplit(Policy):
+    """Fixed percentage of traffic to the cloud (the 0/25/50/75/100 columns
+    of the paper's Table 2)."""
+
+    def __init__(self, pct: float):
+        if not 0.0 <= pct <= 100.0:
+            raise ValueError(f"static split must be in [0, 100], got {pct}")
+        self.pct = float(pct)
+        self.spec = str(self.pct)
+
+    def initial_R(self, num_functions: int) -> np.ndarray:
+        return np.full(num_functions, self.pct, np.float32)
+
+    def update(self, state, latencies, valid, demand_rps):
+        return state, np.full(latencies.shape[0], self.pct, np.float32)
+
+
+class AutoOffload(Policy):
+    """The paper's adaptive controller: Eqs (1)-(4) on edge latency windows."""
+
+    spec = "auto"
+
+    def __init__(self, cfg: Optional[offload.OffloadConfig] = None):
+        self.cfg = cfg or offload.OffloadConfig()
+        self._update = jax.jit(
+            lambda s, lat, v, rps: offload.offload_update(
+                s, lat, self.cfg, valid=v, demand_rps=rps))
+
+    def init_state(self, num_functions: int) -> offload.OffloadState:
+        return offload.OffloadState.init(num_functions, self.cfg)
+
+    def update(self, state, latencies, valid, demand_rps):
+        state, R = self._update(state, latencies, valid,
+                                np.asarray(demand_rps, np.float32))
+        return state, np.asarray(R, np.float32)
+
+
+class NetAwareOffload(AutoOffload):
+    """Beyond-paper §4.2 extension: cap the offloaded fraction by what the
+    edge->cloud link can absorb at the current demand."""
+
+    spec = "auto+net"
+
+    def __init__(self, cfg: Optional[offload.OffloadConfig] = None,
+                 link_bytes_per_s: Optional[float] = None,
+                 req_bytes: Optional[float] = None):
+        cfg = cfg or offload.OffloadConfig()
+        repl: Dict[str, Any] = {"net_aware": True}
+        if link_bytes_per_s is not None:
+            repl["link_bytes_per_s"] = link_bytes_per_s
+        if req_bytes is not None:
+            repl["req_bytes"] = req_bytes
+        super().__init__(dataclasses.replace(cfg, **repl))
+
+
+class HedgedOffload(AutoOffload):
+    """Auto controller + request-level straggler mitigation: a queued
+    request whose age already exceeds its function's p99 gets a backup
+    issued on the other tier (``router.hedged_mask``)."""
+
+    spec = "auto+hedge"
+
+    def __init__(self, cfg: Optional[offload.OffloadConfig] = None,
+                 hedge_quantile: float = 0.99):
+        super().__init__(cfg)
+        self.hedge_quantile = float(hedge_quantile)
+
+    def hedge(self, key, ages_s, fn_ids, latencies, valid):
+        if len(fn_ids) == 0:
+            return np.zeros(0, bool)
+        p = self._tail_estimate(latencies, valid)
+        return np.asarray(router.hedged_mask(
+            key, jnp.asarray(ages_s, jnp.float32), jnp.asarray(p),
+            jnp.asarray(fn_ids, jnp.int32)))
+
+    def _tail_estimate(self, latencies, valid) -> np.ndarray:
+        """(F,) per-function tail latency; +inf where nothing was observed
+        yet (never hedge blind)."""
+        lat = np.where(valid, np.asarray(latencies, np.float32), np.nan)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", RuntimeWarning)  # all-NaN rows
+            p = np.nanpercentile(lat, self.hedge_quantile * 100.0, axis=-1)
+        return np.where(np.isfinite(p), p, np.inf).astype(np.float32)
+
+
+class ControlLoop:
+    """The shared scrape-and-update cycle (one per deployment).
+
+    Each :meth:`step` is exactly what the paper's controller does once per
+    Prometheus scrape: read the per-function latency windows, mix in the
+    ages of *in-flight* queued requests (Knative's queue-proxy exposes
+    queue depth/age gauges — the ages are what let Eq (1) fire during
+    onset, before slow completions drain out), derive demand RPS, and ask
+    the policy for fresh R_t percentages.
+
+    Both :class:`~repro.core.simulator.ContinuumSimulator` and the live
+    :class:`~repro.serving.tiers.EdgeCloudContinuum` drive this object, so
+    a shared latency trace yields bit-identical R_t trajectories.
+    """
+
+    def __init__(self, policy: PolicySpec, num_functions: int,
+                 window: int = 64, control_interval_s: float = 1.0):
+        self.policy = Policy.parse(policy)
+        self.num_functions = num_functions
+        self.window = window
+        self.control_interval_s = control_interval_s
+        self.state = self.policy.init_state(num_functions)
+        self.R = self.policy.initial_R(num_functions)
+        self.steps = 0
+
+    @staticmethod
+    def mix_queue_ages(lat: np.ndarray, valid: np.ndarray, fn: int,
+                       ages: Sequence[float], window: int) -> None:
+        """Displace the oldest completions of function ``fn`` with a spread
+        of in-flight queue ages (in place).
+
+        Sampling is even across the queue: the age spread (new arrivals vs
+        head-of-line) is the bimodality Eq (1) keys on.  Ages overwrite the
+        *oldest* window entries so fresh queue state dominates stale (often
+        timeout-censored) history.
+        """
+        k = min(len(ages), window // 2)
+        sel = [ages[int(i * len(ages) / k)] for i in range(k)] if k else []
+        if sel:
+            lat[fn, :len(sel)] = sel
+            valid[fn, :len(sel)] = True
+
+    def step(self, latencies: np.ndarray, valid: np.ndarray,
+             queue_ages: Optional[Sequence[Sequence[float]]] = None,
+             arrivals: Optional[Sequence[float]] = None) -> np.ndarray:
+        """One control interval -> (F,) R_t percentages.
+
+        Args:
+          latencies, valid: (F, W) scraped windows (oldest entry first).
+          queue_ages: per-function ages (seconds) of requests still
+            waiting at the gateway, head-of-line first.
+          arrivals: per-function request count seen this interval.
+        """
+        lat = np.array(latencies, np.float32, copy=True)
+        val = np.array(valid, bool, copy=True)
+        if queue_ages is not None:
+            for fn, ages in enumerate(queue_ages):
+                if ages:
+                    self.mix_queue_ages(lat, val, fn, ages, self.window)
+        if arrivals is None:
+            arrivals = [0.0] * self.num_functions
+        rps = np.asarray(
+            [max(a / self.control_interval_s, 1e-3) for a in arrivals],
+            np.float32)
+        self.state = self.policy.observe(self.state, lat, val)
+        if val.any():
+            self.state, R = self.policy.update(self.state, lat, val, rps)
+            self.R = np.asarray(R, np.float32)
+        self.steps += 1
+        return self.R
+
+    def route(self, key: jax.Array, fn_ids: np.ndarray) -> np.ndarray:
+        """Split a queued batch by the current R_t."""
+        return self.policy.route(key, self.R, fn_ids, self.num_functions)
+
+    def hedge(self, key: jax.Array, ages_s: np.ndarray, fn_ids: np.ndarray,
+              latencies: np.ndarray, valid: np.ndarray) -> np.ndarray:
+        return self.policy.hedge(key, ages_s, fn_ids, latencies, valid)

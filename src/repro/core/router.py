@@ -40,8 +40,40 @@ def route_batch(key: jax.Array, pct: jnp.ndarray, fn_ids: jnp.ndarray,
     """Expectation-matched split: per function, exactly ``round-ish(B_f * p_f)``
     requests go to the cloud (floor + Bernoulli(frac) extra).
 
+    Within each function, requests are ranked by i.i.d. uniform noise and
+    the ``n_cloud[f]`` lowest-ranked cross — computed with one lexsort plus
+    a segmented cummax, O(B log B) (the naive (B, B) same-function rank
+    matrix lives on as :func:`route_batch_dense` for the microbenchmark).
+
     Returns (B,) bool mask, True = cloud.
     """
+    B = fn_ids.shape[0]
+    p = jnp.clip(pct / 100.0, 0.0, 1.0)                       # (F,)
+    per_fn = jnp.zeros(num_functions, jnp.float32).at[fn_ids].add(1.0)
+    want = per_fn * p                                         # (F,) expected cloud
+    base = jnp.floor(want)
+    frac = want - base
+    extra = (jax.random.uniform(key, (num_functions,)) < frac).astype(jnp.float32)
+    n_cloud = base + extra                                    # (F,)
+    noise = jax.random.uniform(jax.random.fold_in(key, 1), (B,))
+    # Sort by (function, noise); a request's rank within its function is its
+    # sorted position minus the start of its function's segment.
+    order = jnp.lexsort((noise, fn_ids))
+    sorted_fn = fn_ids[order]
+    pos = jnp.arange(B, dtype=jnp.int32)
+    seg_start = jnp.where(
+        jnp.concatenate([jnp.ones(1, bool), sorted_fn[1:] != sorted_fn[:-1]]),
+        pos, 0)
+    seg_start = jax.lax.associative_scan(jnp.maximum, seg_start)
+    rank = jnp.zeros(B, jnp.int32).at[order].set(pos - seg_start)
+    return rank < n_cloud[fn_ids]
+
+
+def route_batch_dense(key: jax.Array, pct: jnp.ndarray, fn_ids: jnp.ndarray,
+                      num_functions: int) -> jnp.ndarray:
+    """Reference O(B^2) implementation of :func:`route_batch` (same
+    distribution; kept for equivalence tests and the controller
+    microbenchmark)."""
     B = fn_ids.shape[0]
     p = jnp.clip(pct / 100.0, 0.0, 1.0)                       # (F,)
     onehot = jax.nn.one_hot(fn_ids, num_functions, dtype=jnp.float32)  # (B,F)
@@ -51,8 +83,6 @@ def route_batch(key: jax.Array, pct: jnp.ndarray, fn_ids: jnp.ndarray,
     frac = want - base
     extra = (jax.random.uniform(key, (num_functions,)) < frac).astype(jnp.float32)
     n_cloud = base + extra                                    # (F,)
-    # Within each function, rank its requests by a random permutation value
-    # and send the lowest-ranked n_cloud[f] to the cloud.
     noise = jax.random.uniform(jax.random.fold_in(key, 1), (B,))
     # rank of request i among same-function requests
     same = onehot @ onehot.T                                  # (B,B) 1 if same fn

@@ -18,13 +18,13 @@ import dataclasses
 import heapq
 import itertools
 from collections import deque
-from typing import Deque, Dict, List, Optional, Tuple, Union
+from typing import Deque, Dict, List, Optional, Tuple
 
-import jax
 import numpy as np
 
 from repro.core import offload
 from repro.core.metrics import MetricsRegistry
+from repro.core.policy import AutoOffload, ControlLoop, Policy, PolicySpec
 from repro.core.workloads import PROFILES, WorkloadProfile
 
 
@@ -91,7 +91,7 @@ def _service_sample(rng: np.random.Generator, mean: float, cv: float) -> float:
 class ContinuumSimulator:
     """One workload, one policy, one run."""
 
-    def __init__(self, workload: str, policy: Union[float, str],
+    def __init__(self, workload: str, policy: PolicySpec,
                  cfg: SimConfig = SimConfig(),
                  offload_cfg: Optional[offload.OffloadConfig] = None):
         if workload not in PROFILES:
@@ -101,17 +101,17 @@ class ContinuumSimulator:
         self.policy = policy
         self.rng = np.random.default_rng(cfg.seed)
         self.metrics = MetricsRegistry([workload], capacity=max(cfg.window * 4, 256))
-        self.offload_cfg = offload_cfg or offload.OffloadConfig()
-        self._auto = isinstance(policy, str) and policy.startswith("auto")
-        if self._auto and "net" in policy:
-            self.offload_cfg = dataclasses.replace(
-                self.offload_cfg, net_aware=True,
-                link_bytes_per_s=cfg.link_bandwidth_Bps,
-                req_bytes=self.profile.payload_bytes)
-        self._ctrl_state = offload.OffloadState.init(1, self.offload_cfg)
-        self._update = jax.jit(
-            lambda s, lat, v, rps: offload.offload_update(
-                s, lat, self.offload_cfg, valid=v, demand_rps=rps))
+        # The same Policy/ControlLoop objects the live runtime drives —
+        # the simulator is the calibration harness, not a reimplementation.
+        self.policy_obj = Policy.parse(
+            policy, offload_cfg=offload_cfg or offload.OffloadConfig(),
+            link_bytes_per_s=cfg.link_bandwidth_Bps,
+            req_bytes=self.profile.payload_bytes)
+        self.offload_cfg = (self.policy_obj.cfg
+                            if isinstance(self.policy_obj, AutoOffload)
+                            else offload_cfg or offload.OffloadConfig())
+        self.control = ControlLoop(self.policy_obj, 1, window=cfg.window,
+                                   control_interval_s=cfg.control_interval_s)
 
     # ------------------------------------------------------------------
     def _rate(self, t: float) -> float:
@@ -138,7 +138,7 @@ class ContinuumSimulator:
         cloud_busy = 0
         cloud_queue: Deque[Tuple[float]] = deque()
         link_free_at = 0.0
-        pct = float(self.policy) if not self._auto else 0.0
+        pct = float(self.control.R[0])
         successes = failures = 0
         arrivals_in_interval = 0
         bytes_in_interval = 0.0
@@ -246,33 +246,14 @@ class ContinuumSimulator:
                     break
 
             elif kind == _CONTROL:
-                if self._auto:
-                    lat, valid = self.metrics.latency_windows(cfg.window)
-                    # The scrape also sees *in-flight* request ages (Knative's
-                    # queue-proxy exposes queue depth/age gauges). Mixing the
-                    # ages of waiting requests into X_l(t) is what lets Eq (1)
-                    # fire during onset, before slow completions drain out.
-                    q = list(edge_queue)
-                    k = min(len(q), cfg.window // 2)
-                    # Sample evenly across the queue: the age spread (new
-                    # arrivals vs head-of-line) is the bimodality Eq (1) keys on.
-                    sel = [q[int(i * len(q) / k)] for i in range(k)] if k else []
-                    ages = [t - qarr for (qarr,) in sel]
-                    if ages:
-                        k = len(ages)
-                        lat = lat.copy(); valid = valid.copy()
-                        # Ages displace the *oldest* completions so the fresh
-                        # queue state dominates stale (often timeout-censored)
-                        # history.
-                        lat[0, :k] = ages
-                        valid[0, :k] = True
-                    if valid.any():
-                        rps = np.asarray(
-                            [max(arrivals_in_interval / cfg.control_interval_s, 1e-3)],
-                            np.float32)
-                        self._ctrl_state, R = self._update(
-                            self._ctrl_state, lat, valid, rps)
-                        pct = float(R[0])
+                # One shared scrape-and-update cycle (ControlLoop): latency
+                # windows + in-flight queue-age mixing + demand RPS — the
+                # same code path the live EdgeCloudContinuum ticks.
+                lat, valid = self.metrics.latency_windows(cfg.window)
+                ages = [t - qarr for (qarr,) in edge_queue]
+                R = self.control.step(lat, valid, queue_ages=[ages],
+                                      arrivals=[arrivals_in_interval])
+                pct = float(R[0])
                 push(t + cfg.control_interval_s, _CONTROL)
                 arrivals_in_interval = 0
 

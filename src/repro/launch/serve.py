@@ -1,13 +1,14 @@
 """Two-tier serving driver (``python -m repro.launch.serve``).
 
-Boots the Edge-Cloud continuum with a weak edge tier and a strong cloud
-tier, deploys one or more (smoke-size) model endpoints via the replication
-controller, pushes a ramped open-loop request stream through the edge
-gateway, and reports how the offloading controller reacted — a live,
-CPU-runnable version of the paper's testbed experiment.
+Boots the Edge-Cloud continuum through the ``repro.platform.Continuum``
+facade with a weak edge tier and a strong cloud tier, deploys one or more
+(smoke-size) model endpoints via the replication controller, pushes a
+ramped open-loop request stream through the edge gateway, and reports how
+the traffic policy reacted — a live, CPU-runnable version of the paper's
+testbed experiment, served by the batched wave scheduler.
 
     PYTHONPATH=src python -m repro.launch.serve --arch stablelm-1.6b \
-        --rounds 30 --rps-low 2 --rps-high 12
+        --rounds 30 --rps-low 2 --rps-high 12 --policy auto
 """
 
 from __future__ import annotations
@@ -21,8 +22,7 @@ from repro import configs
 from repro.core import offload
 from repro.core.replication import AutoscalingPolicy, FunctionSpec
 from repro.models import model_zoo
-from repro.serving.engine import Request
-from repro.serving.tiers import EdgeCloudContinuum, TierConfig
+from repro.platform import Continuum, Request, TierConfig
 
 
 def main():
@@ -35,20 +35,24 @@ def main():
     ap.add_argument("--edge-slots", type=int, default=2)
     ap.add_argument("--cloud-slots", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=4)
+    ap.add_argument("--policy", default="auto",
+                    help="traffic policy: 0..100 | auto | auto+net | "
+                         "auto+hedge")
     ap.add_argument("--net-aware", action="store_true",
-                    help="beyond-paper network-aware offloading")
+                    help="shorthand for --policy auto+net")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = configs.get_smoke_config(args.arch)
     params = model_zoo.init(jax.random.PRNGKey(args.seed), cfg)
 
-    ocfg = offload.OffloadConfig(net_aware=args.net_aware)
-    cc = EdgeCloudContinuum(
+    policy = "auto+net" if args.net_aware else args.policy
+    cc = Continuum(
         edge=TierConfig(slots=args.edge_slots, max_len=64),
         cloud=TierConfig(slots=args.cloud_slots, max_len=64,
                          extra_latency_s=0.02),
-        offload_cfg=ocfg, seed=args.seed)
+        policy=policy, offload_cfg=offload.OffloadConfig(),
+        seed=args.seed)
     spec = FunctionSpec(name=args.arch, arch=args.arch, revision=1,
                         autoscaling=AutoscalingPolicy())
     cc.deploy(spec, cfg, params)
@@ -67,12 +71,14 @@ def main():
         rec = cc.tick()
         print(f"round={rnd:3d} rps={rps:5.1f} queued={n:3d} "
               f"edge={rec['edge']:3d} cloud={rec['cloud']:3d} "
-              f"R_t={rec['R']:5.1f}%")
+              f"waves={rec['waves']:2d} R_t={rec['R']:5.1f}%")
 
     total_edge = sum(r["edge"] for r in cc.log)
     total_cloud = sum(r["cloud"] for r in cc.log)
+    waves = sum(r["waves"] for r in cc.log)
     print(f"\nserved edge={total_edge} cloud={total_cloud} "
-          f"offload_frac={total_cloud / max(total_edge + total_cloud, 1):.2f}")
+          f"offload_frac={total_cloud / max(total_edge + total_cloud, 1):.2f} "
+          f"reqs_per_wave={(total_edge + total_cloud) / max(waves, 1):.1f}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,71 @@
+"""``repro.platform`` — the one front door to the continuum.
+
+Every deployment of the paper's platform — the discrete-event simulator
+(§4, Table 2 / Figure 2) and the live two-tier serving runtime — is
+driven by the same :class:`repro.core.policy.Policy` objects through the
+same :class:`repro.core.policy.ControlLoop`.  This facade is the single
+entry point the launchers, examples and benchmarks use:
+
+    from repro.platform import Continuum, TierConfig
+
+    # live: deploy models, submit requests, tick the batched scheduler
+    cc = Continuum(edge=TierConfig(slots=2), cloud=TierConfig(slots=16),
+                   policy="auto")
+    cc.deploy(spec, model_cfg, params)
+    cc.submit("fn", request)
+    cc.tick()
+
+    # simulated: the paper's testbed, same policy objects
+    res = Continuum.simulate("matmult", policy="auto+net")
+    table = Continuum.sweep("matmult", policies=(0.0, 50.0, "auto"))
+
+Policy shorthands accepted everywhere: a number in [0, 100] (static
+split), ``"auto"`` (paper Eqs (1)-(4)), ``"auto+net"`` (link-capacity
+cap), ``"auto+hedge"`` (p99 straggler hedging), or any
+:class:`~repro.core.policy.Policy` instance.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence
+
+from repro.core import offload
+from repro.core.policy import (AutoOffload, ControlLoop, HedgedOffload,
+                               NetAwareOffload, Policy, PolicySpec,
+                               StaticSplit)
+from repro.core.simulator import ContinuumSimulator, SimConfig, SimResult
+from repro.serving.engine import Request
+from repro.serving.tiers import EdgeCloudContinuum, TierConfig
+
+__all__ = [
+    "Continuum", "TierConfig", "SimConfig", "SimResult", "Request",
+    "Policy", "StaticSplit", "AutoOffload", "NetAwareOffload",
+    "HedgedOffload", "ControlLoop",
+]
+
+
+class Continuum(EdgeCloudContinuum):
+    """Unified control plane over both deployments.
+
+    Instances are the live batched runtime (see
+    :class:`~repro.serving.tiers.EdgeCloudContinuum`); the classmethods run
+    the same policies through the calibrated simulator.
+    """
+
+    @classmethod
+    def simulate(cls, workload: str, policy: PolicySpec,
+                 cfg: Optional[SimConfig] = None,
+                 offload_cfg: Optional[offload.OffloadConfig] = None
+                 ) -> SimResult:
+        """One simulator run of ``workload`` under ``policy``."""
+        return ContinuumSimulator(workload, policy, cfg or SimConfig(),
+                                  offload_cfg=offload_cfg).run()
+
+    @classmethod
+    def sweep(cls, workload: str,
+              policies: Sequence[PolicySpec] = (0.0, 25.0, 50.0, 75.0,
+                                                100.0, "auto"),
+              cfg: Optional[SimConfig] = None) -> Dict[str, SimResult]:
+        """The paper's Table 2 row for one workload."""
+        cfg = cfg or SimConfig()
+        return {str(p): cls.simulate(workload, p, cfg) for p in policies}

@@ -35,6 +35,38 @@ class Request:
     t_done: float = 0.0
 
 
+def _cache_batch_axes(cfg: ModelConfig, slots: int, max_len: int) -> list:
+    """Per-leaf slot-axis of the cache pytree, or None for leaves that do
+    not depend on the batch size.
+
+    Derived exactly (not guessed from shapes, which is ambiguous when e.g.
+    num_layers == slots): the slot axis is wherever the abstract cache
+    shape changes when the batch size does.
+    """
+    a = jax.tree_util.tree_leaves(
+        model_zoo.init_cache(cfg, slots, max_len, abstract=True))
+    b = jax.tree_util.tree_leaves(
+        model_zoo.init_cache(cfg, slots + 1, max_len, abstract=True))
+    axes = []
+    for la, lb in zip(a, b):
+        axis = None
+        for i, (x, y) in enumerate(zip(la.shape, lb.shape)):
+            if x != y:
+                axis = i
+                break
+        axes.append(axis)
+    return axes
+
+
+def _copy_slot_row(dst: jax.Array, src: jax.Array, slot: jax.Array,
+                   axis) -> jax.Array:
+    """Copy one slot's row of ``src`` into ``dst`` along ``axis``."""
+    if axis is None:
+        return dst
+    idx = (slice(None),) * axis + (slot,)
+    return dst.at[idx].set(src[idx])
+
+
 class Endpoint:
     """A deployed model ("Knative Service" analogue) on one tier.
 
@@ -59,17 +91,55 @@ class Endpoint:
         def _decode(params, cache, tokens, t):
             return model_zoo.decode(cfg, params, cache, tokens, t)
 
+        batch_axes = _cache_batch_axes(cfg, slots, max_len)
+
+        def _rows(cache, src, slot):
+            leaves, treedef = jax.tree_util.tree_flatten(cache)
+            src_leaves = jax.tree_util.tree_leaves(src)
+            out = [_copy_slot_row(c, s, slot, ax)
+                   for c, s, ax in zip(leaves, src_leaves, batch_axes)]
+            return jax.tree_util.tree_unflatten(treedef, out)
+
+        def _reset_slot(cache, slot):
+            return _rows(cache, model_zoo.init_cache(cfg, slots, max_len),
+                         slot)
+
+        def _restore_slot(cache, snap, slot):
+            return _rows(cache, snap, slot)
+
+        # ``donate`` governs both jitted steps: each call consumes the old
+        # cache buffer (we always rebind ``self.cache`` to the result).
         dn = (2,) if donate else ()
-        self._prefill = jax.jit(_prefill, donate_argnums=())
+        self._prefill = jax.jit(_prefill, donate_argnums=dn)
         self._decode = jax.jit(_decode, donate_argnums=(1,) if donate else ())
+        self._reset = jax.jit(_reset_slot, donate_argnums=(0,) if donate else ())
+        self._restore = jax.jit(_restore_slot,
+                                donate_argnums=(0,) if donate else ())
+        # Attention caches are self-healing on slot reuse (a cache index is
+        # always overwritten at position == index before any query can
+        # attend it), so only families that thread recurrent state through
+        # prefill need their rows scrubbed between requests.
+        self._reset_on_claim = cfg.family not in ("dense", "moe")
 
     # -- slot management ---------------------------------------------------
     def try_claim(self) -> Optional[int]:
         for i, free in enumerate(self.slot_free):
             if free:
                 self.slot_free[i] = False
+                if self._reset_on_claim:
+                    self.reset_slot(i)
                 return i
         return None
+
+    def reset_slot(self, slot: int) -> None:
+        """Restore one slot's cache rows to their init values.
+
+        Required between requests for recurrent families (rwkv6 / hymba's
+        SSM lanes), whose prefill starts from the row's *current* state — a
+        reused slot would otherwise leak the previous request's state into
+        the next prompt.
+        """
+        self.cache = self._reset(self.cache, jnp.asarray(slot, jnp.int32))
 
     def release(self, slot: int) -> None:
         self.slot_free[slot] = True
@@ -83,17 +153,55 @@ class Endpoint:
     def prefill_one(self, slot: int, tokens: np.ndarray) -> int:
         """Run prefill for a single request into its slot's cache rows.
 
-        For simplicity each prefill runs at batch=slots with only the target
-        row meaningful (single-program batching); production would pack
-        multiple prompts. Returns the first generated token.
+        Returns the first generated token.
         """
-        L = len(tokens)
-        tok = np.zeros((self.slots, L), np.int32)
-        tok[slot] = tokens
-        logits, self.cache = self._prefill(self.params, {"tokens": jnp.asarray(tok)},
-                                           self.cache)
-        self.slot_pos[slot] = L
-        return int(np.argmax(np.asarray(logits)[slot]))
+        return self.prefill_batch({slot: tokens})[slot]
+
+    def prefill_batch(self, prompts: Dict[int, np.ndarray]) -> Dict[int, int]:
+        """Pack multiple claimed slots' prompts into shared prefill calls.
+
+        Prompts of equal length share one jitted prefill at batch=slots
+        (continuous batching's admission step); distinct lengths run one
+        call per length — recurrent families thread per-row state token by
+        token, so rows cannot be padded to a common length without
+        polluting that state. Returns slot -> first generated token.
+        """
+        by_len: Dict[int, List[Tuple[int, np.ndarray]]] = {}
+        for slot, toks in prompts.items():
+            by_len.setdefault(len(toks), []).append((slot, toks))
+        out: Dict[int, int] = {}
+        # A prefill call writes cache rows for *every* batch row, so it
+        # would clobber busy rows outside the current length group: slots
+        # mid-decode, rows an earlier group just filled, and — for
+        # recurrent families, whose state a zero-token prefill advances —
+        # claimed rows a later group has yet to fill.  (Attention rows of
+        # later groups need no protection: groups run shortest-first, so
+        # their own prefill fully overwrites the polluted positions.)
+        external = [s for s in range(self.slots)
+                    if not self.slot_free[s] and s not in prompts]
+        done: List[int] = []
+        for L, group in sorted(by_len.items()):
+            group_slots = {slot for slot, _ in group}
+            protect = external + done
+            if self._reset_on_claim:            # recurrent state families
+                protect = [s for s in range(self.slots)
+                           if not self.slot_free[s] and s not in group_slots]
+            snap = (jax.tree_util.tree_map(jnp.copy, self.cache)
+                    if protect else None)
+            tok = np.zeros((self.slots, L), np.int32)
+            for slot, toks in group:
+                tok[slot] = toks
+            logits, self.cache = self._prefill(
+                self.params, {"tokens": jnp.asarray(tok)}, self.cache)
+            for s in protect:
+                self.cache = self._restore(self.cache, snap,
+                                           jnp.asarray(s, jnp.int32))
+            lg = np.asarray(logits)
+            for slot, _ in group:
+                self.slot_pos[slot] = L
+                out[slot] = int(np.argmax(lg[slot]))
+                done.append(slot)
+        return out
 
     def decode_all(self, tokens_by_slot: Dict[int, int]) -> Dict[int, int]:
         """One decode step for every active slot. tokens_by_slot maps

@@ -4,17 +4,23 @@ This is the live (non-simulated) integration of every paper component:
 
     EdgeCloudContinuum
       ├── edge tier:  Endpoint pool (small slots/model) + MetricsRegistry
-      ├── cloud tier: Endpoint pool (large slots)       + MetricsRegistry
+      │               + per-function Autoscaler (Knative-KPA concurrency)
+      ├── cloud tier: Endpoint pool (large slots)       + same
       ├── ReplicationController  (cloud spec -> edge, selective merge)
-      ├── OffloadController      (Eqs (1)-(4) on edge latency windows)
-      ├── Router                 (batch split by R_t percentage)
-      └── Autoscaler per tier    (Knative-KPA-style concurrency scaling)
+      ├── ControlLoop + Policy   (Eqs (1)-(4) / static / net-aware / hedged —
+      │                           the same loop the simulator drives)
+      └── Router                 (batch split by R_t percentage)
 
-Requests enter at the edge gateway (``submit``); each scheduler tick
-drains the queue, routes a fraction to the cloud per the controller, runs
-prefill+decode on both tiers, and records per-request latency back into
-the metrics that drive the next controller update — the same closed loop
-as the paper's Knative Edge, at batch granularity.
+Requests enter at the edge gateway (``submit``); each scheduler tick runs
+one scrape-and-update cycle through the shared
+:class:`repro.core.policy.ControlLoop` (latency windows + in-flight
+queue ages + demand RPS), routes the queued batch by R_t, and drains it
+in autoscaler-budgeted *waves*: every wave packs up to a tier's admitted
+concurrency into one ``Endpoint`` prefill + a shared ``decode_all``
+stream, so co-scheduled requests advance together (continuous batching)
+instead of being served one ``serve_one`` at a time.  Completed latencies
+feed the metrics that drive the next controller update — the same closed
+loop as the paper's Knative Edge, at batch granularity.
 
 Everything model-related goes through ``serving.engine.Endpoint``; tier
 capacities are expressed in concurrent slots, so the same runtime works
@@ -26,15 +32,16 @@ from __future__ import annotations
 import dataclasses
 import time
 from collections import deque
-from typing import Callable, Deque, Dict, List, Optional, Tuple
+from typing import Deque, Dict, List, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import offload, router
+from repro.core import offload
+from repro.core.autoscaler import Autoscaler
 from repro.core.metrics import MetricsRegistry
-from repro.core.replication import (EdgeServiceState, FunctionSpec,
+from repro.core.policy import ControlLoop, Policy, PolicySpec
+from repro.core.replication import (AutoscalingPolicy, FunctionSpec,
                                     ReplicationController)
 from repro.models.common import ModelConfig
 from repro.serving.engine import Endpoint, Request
@@ -46,113 +53,305 @@ class TierConfig:
     max_len: int = 256
     # synthetic per-request overhead (edge->cloud WAN RTT), seconds
     extra_latency_s: float = 0.0
+    # default KPA bounds for functions deployed without an explicit policy
+    autoscaling: Optional[AutoscalingPolicy] = None
+    stable_window_s: float = 60.0
+    panic_window_s: float = 6.0
+
+
+@dataclasses.dataclass
+class _Queued:
+    """One gateway queue entry (+ hedge bookkeeping)."""
+    fn: str
+    req: Request
+    t_submit: float
+    tick_no: int = 0
+    hedge: bool = False
 
 
 class Tier:
-    """One serving location: endpoints by function name + metrics."""
+    """One serving location: endpoints by function name + metrics +
+    per-function KPA autoscalers."""
 
     def __init__(self, name: str, cfg: TierConfig):
         self.name = name
         self.cfg = cfg
         self.endpoints: Dict[str, Endpoint] = {}
+        self.autoscalers: Dict[str, Autoscaler] = {}
         self.metrics = MetricsRegistry([])
 
-    def deploy(self, fn_name: str, model_cfg: ModelConfig, params) -> None:
+    def deploy(self, fn_name: str, model_cfg: ModelConfig, params,
+               autoscaling: Optional[AutoscalingPolicy] = None) -> None:
         self.endpoints[fn_name] = Endpoint(
             model_cfg, params, slots=self.cfg.slots, max_len=self.cfg.max_len)
         self.metrics.register(fn_name)
+        self.autoscalers[fn_name] = Autoscaler(
+            autoscaling or self.cfg.autoscaling or AutoscalingPolicy(),
+            stable_window_s=self.cfg.stable_window_s,
+            panic_window_s=self.cfg.panic_window_s)
 
-    def serve_one(self, fn_name: str, req: Request, now_s: float) -> Tuple[np.ndarray, float]:
-        """Prefill + greedy decode for one request; returns (tokens, latency)."""
+    # -- capacity ----------------------------------------------------------
+    def free_slots(self, fn_name: str) -> int:
         ep = self.endpoints[fn_name]
-        t0 = time.perf_counter()
-        slot = ep.try_claim()
-        if slot is None:
-            # queue-free fallback: serve anyway at batch position 0 cost —
-            # the scheduler above is responsible for not oversubscribing.
-            slot = 0
+        return ep.slots - ep.active
+
+    def capacity(self, fn_name: str) -> int:
+        """Admitted concurrency right now: replicas x target concurrency,
+        bounded by the KV-cache pool. 0 when scaled to zero."""
+        asc = self.autoscalers[fn_name]
+        want = int(asc.replicas * max(asc.policy.target_concurrency, 1.0))
+        return min(self.endpoints[fn_name].slots, want)
+
+    def replicas(self, fn_name: str) -> int:
+        return self.autoscalers[fn_name].replicas
+
+    # -- serving -----------------------------------------------------------
+    def serve_batch(self, fn_name: str,
+                    items: List[Tuple[Request, float]]
+                    ) -> List[Tuple[np.ndarray, float]]:
+        """Serve a wave of requests together on one endpoint.
+
+        All prompts share packed prefill calls and one ``decode_all``
+        stream; each request's latency is measured from its submit
+        timestamp to the decode step that finished it. The caller is
+        responsible for sizing waves within ``free_slots`` — admission
+        past the pool raises instead of silently corrupting a live slot's
+        KV cache (the old ``slot = 0`` fallback).
+        """
+        ep = self.endpoints[fn_name]
+        claimed: List[Tuple[Request, float, int]] = []
+        for req, t_submit in items:
+            slot = ep.try_claim()
+            if slot is None:
+                for _, _, s in claimed:
+                    ep.release(s)
+                raise RuntimeError(
+                    f"{self.name}/{fn_name}: wave of {len(items)} exceeds "
+                    f"free slots — scheduler admitted past capacity")
+            claimed.append((req, t_submit, slot))
+
         try:
-            tok = ep.prefill_one(slot, req.tokens)
-            out = [tok]
-            for _ in range(req.max_new - 1):
-                nxt = ep.decode_all({slot: out[-1]})
-                out.append(nxt[slot])
-        finally:
+            firsts = ep.prefill_batch(
+                {slot: req.tokens for req, _, slot in claimed})
+            now = time.perf_counter()
+            outs: Dict[int, List[int]] = {}
+            need: Dict[int, int] = {}
+            done_at: Dict[int, float] = {}
+            active: Dict[int, int] = {}
+            for req, _, slot in claimed:
+                outs[slot] = [firsts[slot]]
+                need[slot] = max(req.max_new, 1)
+                done_at[slot] = now
+                req.t_first = now
+                if need[slot] > 1:
+                    active[slot] = firsts[slot]
+            while active:
+                nxt = ep.decode_all(active)
+                now = time.perf_counter()
+                for s, tok in nxt.items():
+                    outs[s].append(tok)
+                    if len(outs[s]) >= need[s]:
+                        del active[s]
+                        done_at[s] = now
+                    else:
+                        active[s] = tok
+        except Exception:
+            for _, _, s in claimed:
+                ep.release(s)
+            raise
+
+        results: List[Tuple[np.ndarray, float]] = []
+        for req, t_submit, slot in claimed:
+            lat = done_at[slot] - t_submit + self.cfg.extra_latency_s
+            self.metrics.record_latency(fn_name, lat)
+            req.output = np.asarray(outs[slot], np.int32)
+            req.t_done = done_at[slot]
             ep.release(slot)
-        lat = time.perf_counter() - t0 + self.cfg.extra_latency_s
-        self.metrics.record_latency(fn_name, lat)
-        return np.asarray(out, np.int32), lat
+            results.append((req.output, lat))
+        return results
+
+    def serve_one(self, fn_name: str, req: Request,
+                  now_s: float = 0.0) -> Tuple[np.ndarray, float]:
+        """Serial single-request path (the pre-batching baseline)."""
+        del now_s
+        [(out, lat)] = self.serve_batch(fn_name, [(req, time.perf_counter())])
+        return out, lat
 
 
 class EdgeCloudContinuum:
-    """The full platform: replication + offloading across two tiers."""
+    """The full platform: replication + policy-driven offloading across two
+    tiers, with a batched wave scheduler."""
 
     def __init__(self, edge: TierConfig, cloud: TierConfig,
-                 offload_cfg: offload.OffloadConfig = offload.OffloadConfig(),
-                 window: int = 64, seed: int = 0):
+                 policy: PolicySpec = "auto",
+                 offload_cfg: Optional[offload.OffloadConfig] = None,
+                 window: int = 64, seed: int = 0,
+                 control_interval_s: float = 1.0,
+                 max_waves_per_tick: Optional[int] = None):
         self.edge = Tier("edge", edge)
         self.cloud = Tier("cloud", cloud)
-        self.offload_cfg = offload_cfg
+        self.offload_cfg = offload_cfg or offload.OffloadConfig()
+        self.policy = Policy.parse(policy, offload_cfg=self.offload_cfg)
         self.window = window
+        self.control_interval_s = control_interval_s
         self.replicator = ReplicationController()
         self.cloud_specs: Dict[str, FunctionSpec] = {}
         self.fn_names: List[str] = []
-        self.state: Optional[offload.OffloadState] = None
+        self.control: Optional[ControlLoop] = None
         self.key = jax.random.PRNGKey(seed)
-        self.queue: Deque[Tuple[str, Request]] = deque()
+        self.queue: Deque[_Queued] = deque()
+        self._arrivals: Dict[str, int] = {}
+        # None = drain the queue every tick; an int caps the batched waves
+        # per tick, so overload leaves a *backlog* whose in-flight ages the
+        # next scrape mixes into Eq (1) (the simulator's onset signal).
+        self.max_waves_per_tick = max_waves_per_tick
         self.log: List[Dict] = []
-        self._clock = 0.0
+        self._clock = 0.0          # logical control-plane time (scrapes)
+        self._tick_no = 0
 
     # -- deployment (paper §3.3.1) ------------------------------------------
     def deploy(self, spec: FunctionSpec, model_cfg: ModelConfig, params) -> None:
         """Deploy to the cloud; replication mirrors it to the edge."""
-        self.cloud.deploy(spec.name, model_cfg, params)
+        self.cloud.deploy(spec.name, model_cfg, params, spec.autoscaling)
         self.cloud_specs[spec.name] = spec
         changed = self.replicator.reconcile(self.cloud_specs)
         if changed.get(spec.name, True):
-            self.edge.deploy(spec.name, model_cfg, params)
+            self.edge.deploy(spec.name, model_cfg, params, spec.autoscaling)
         if spec.name not in self.fn_names:
             self.fn_names.append(spec.name)
-            self.state = offload.OffloadState.init(len(self.fn_names),
-                                                   self.offload_cfg)
+            self._arrivals[spec.name] = 0
+            self.control = ControlLoop(
+                self.policy, len(self.fn_names), window=self.window,
+                control_interval_s=self.control_interval_s)
 
     # -- request path (paper §3.3.2) ------------------------------------------
     def submit(self, fn_name: str, req: Request) -> None:
-        self.queue.append((fn_name, req))
+        req.arrival_s = time.perf_counter()
+        self.queue.append(_Queued(fn_name, req, req.arrival_s,
+                                  tick_no=self._tick_no))
+        self._arrivals[fn_name] = self._arrivals.get(fn_name, 0) + 1
 
     def controller_update(self) -> np.ndarray:
-        """One scrape-and-update cycle; returns R_t percentages."""
-        lats, valid = self._latency_windows()
-        self.state, R = offload.offload_update(
-            self.state, jnp.asarray(lats), self.offload_cfg,
-            valid=jnp.asarray(valid))
-        return np.asarray(R)
+        """One scrape-and-update cycle through the shared ControlLoop;
+        returns R_t percentages."""
+        lat, valid = self._latency_windows()
+        now = time.perf_counter()
+        ages: List[List[float]] = [[] for _ in self.fn_names]
+        for item in self.queue:
+            # Only true *backlog* counts as in-flight age: requests that
+            # survived a previous scheduler round. Fresh arrivals have
+            # waited ~0 s — mixing those into X_l(t) would drag p50 toward
+            # zero and fire Eq (1) spuriously. (The simulator's queue only
+            # ever holds requests the previous rounds could not place, so
+            # its mixing is backlog-only by construction.)
+            if item.tick_no < self._tick_no:
+                ages[self.fn_names.index(item.fn)].append(now - item.t_submit)
+        arrivals = [self._arrivals.get(fn, 0) for fn in self.fn_names]
+        R = self.control.step(lat, valid, queue_ages=ages, arrivals=arrivals)
+        for fn in self.fn_names:
+            self._arrivals[fn] = 0
+        return R
 
     def _latency_windows(self):
         """(F, W) edge-tier latency windows in deployment order."""
         return self.edge.metrics.latency_windows(self.window)
 
+    # -- scheduler ------------------------------------------------------------
     def tick(self) -> Dict[str, float]:
-        """One scheduler round: update controller, drain queue, serve."""
+        """One scheduler round: controller update, route, drain in waves."""
         R = self.controller_update()
-        served_edge = served_cloud = 0
+        self._clock += self.control_interval_s
+        self._tick_no += 1
+        served_edge = served_cloud = hedged = waves = 0
+
         n = len(self.queue)
-        if n:
-            fn_ids = np.asarray([self.fn_names.index(f) for f, _ in self.queue],
+        items = [self.queue.popleft() for _ in range(n)]
+        pending: Dict[Tuple[Tier, str], List[_Queued]] = {}
+        if items:
+            fn_ids = np.asarray([self.fn_names.index(it.fn) for it in items],
                                 np.int32)
             self.key, sub = jax.random.split(self.key)
-            to_cloud = np.asarray(router.route_batch(
-                sub, jnp.asarray(R), jnp.asarray(fn_ids), len(self.fn_names)))
-            items = [self.queue.popleft() for _ in range(n)]
-            for (fn, req), cloudward in zip(items, to_cloud):
-                tier = self.cloud if bool(cloudward) else self.edge
-                out, lat = tier.serve_one(fn, req, self._clock)
-                req.output = out
-                if cloudward:
-                    served_cloud += 1
-                else:
-                    served_edge += 1
+            to_cloud = self.control.route(sub, fn_ids)
+            now = time.perf_counter()
+            ages = np.asarray([now - it.t_submit for it in items], np.float32)
+            lat, valid = self._latency_windows()
+            self.key, hk = jax.random.split(self.key)
+            hedge = self.control.hedge(hk, ages, fn_ids, lat, valid)
+            for it, cloudward, hedge_it in zip(items, to_cloud, hedge):
+                primary = self.cloud if bool(cloudward) else self.edge
+                pending.setdefault((primary, it.fn), []).append(it)
+                if bool(hedge_it):
+                    # backup request on the other tier (straggler hedge);
+                    # the primary's output stays canonical.
+                    backup = self.edge if primary is self.cloud else self.cloud
+                    twin = Request(rid=it.req.rid, tokens=it.req.tokens,
+                                   max_new=it.req.max_new,
+                                   arrival_s=it.req.arrival_s)
+                    pending.setdefault((backup, it.fn), []).append(
+                        _Queued(it.fn, twin, it.t_submit, hedge=True))
+                    hedged += 1
+
+        # KPA scrape: every (tier, fn) observes its assigned concurrency
+        # (including zeros — that is what ages idle functions to zero).
+        for tier in (self.edge, self.cloud):
+            for fn, asc in tier.autoscalers.items():
+                asc.observe(self._clock, float(len(pending.get((tier, fn), []))))
+                asc.desired(self._clock)
+
+        def dispatch(tier: Tier, fn: str, batch: List[_Queued]) -> None:
+            nonlocal served_edge, served_cloud, waves
+            tier.serve_batch(fn, [(it.req, it.t_submit) for it in batch])
+            waves += 1
+            for it in batch:
+                if not it.hedge:
+                    if tier is self.cloud:
+                        served_cloud += 1
+                    else:
+                        served_edge += 1
+
+        def capped() -> bool:
+            return (self.max_waves_per_tick is not None
+                    and waves >= self.max_waves_per_tick)
+
+        # Drain in waves: each wave packs up to the autoscaler-admitted
+        # concurrency into one batched serve (shared prefill + decode_all).
+        while any(pending.values()) and not capped():
+            progress = False
+            for (tier, fn), lst in pending.items():
+                if not lst or capped():
+                    continue
+                budget = min(tier.free_slots(fn), tier.capacity(fn))
+                if budget <= 0:
+                    continue
+                batch, pending[(tier, fn)] = lst[:budget], lst[budget:]
+                dispatch(tier, fn, batch)
+                progress = True
+            if not progress:
+                # Scale-from-zero floor: a queued request implies >= 1
+                # desired replica next scrape; don't deadlock on degenerate
+                # autoscaling bounds in the meantime.
+                for (tier, fn), lst in pending.items():
+                    if lst and tier.free_slots(fn) > 0:
+                        dispatch(tier, fn, [lst.pop(0)])
+                        progress = True
+                        break
+                if not progress:
+                    raise RuntimeError("scheduler wedged: pending work but "
+                                       "no free slot on any tier")
+
+        # Wave budget exhausted: unserved primaries go back to the gateway
+        # (keeping their submit time and tick stamp, so the next scrape
+        # sees their queue age); unserved hedge twins are just dropped.
+        leftovers = [it for lst in pending.values() for it in lst
+                     if not it.hedge]
+        for it in sorted(leftovers, key=lambda it: it.t_submit):
+            self.queue.append(it)
+
         rec = {"R": float(R.mean()) if len(R) else 0.0,
-               "edge": served_edge, "cloud": served_cloud}
+               "edge": served_edge, "cloud": served_cloud,
+               "hedged": hedged, "waves": waves,
+               "replicas": {t.name: {fn: t.replicas(fn)
+                                     for fn in t.autoscalers}
+                            for t in (self.edge, self.cloud)}}
         self.log.append(rec)
         return rec

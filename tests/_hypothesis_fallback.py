@@ -1,0 +1,114 @@
+"""Deterministic mini stand-in for ``hypothesis`` (not installable here).
+
+The property tests in this repo only use ``given``/``settings`` and five
+strategies (floats / integers / lists / text / dictionaries, plus
+``.map``).  This shim draws ``max_examples`` pseudo-random examples from
+a seed derived from the test name — no shrinking, no database — so the
+property tests still execute (deterministically) instead of erroring the
+whole module out at collection.
+
+Usage in a test module::
+
+    try:
+        import hypothesis
+        import hypothesis.strategies as st
+    except ImportError:
+        from _hypothesis_fallback import hypothesis, st
+"""
+
+from __future__ import annotations
+
+import types
+import zlib
+
+import numpy as np
+
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+class _Strategy:
+    """A strategy is just a draw function rng -> value."""
+
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng):
+        return self._draw(rng)
+
+    def map(self, f):
+        return _Strategy(lambda rng: f(self._draw(rng)))
+
+
+def floats(min_value=0.0, max_value=1.0, **_):
+    return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+
+def integers(min_value=0, max_value=100, **_):
+    return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def lists(elements, min_size=0, max_size=10, **_):
+    def draw(rng):
+        n = int(rng.integers(min_size, max_size + 1))
+        return [elements.example(rng) for _ in range(n)]
+    return _Strategy(draw)
+
+
+def text(alphabet="abcdefghijklmnopqrstuvwxyz", min_size=0, max_size=10, **_):
+    chars = list(alphabet)
+    def draw(rng):
+        n = int(rng.integers(min_size, max_size + 1))
+        return "".join(chars[int(i)] for i in rng.integers(0, len(chars), n))
+    return _Strategy(draw)
+
+
+def dictionaries(keys, values, min_size=0, max_size=10, **_):
+    def draw(rng):
+        n = int(rng.integers(min_size, max_size + 1))
+        return {keys.example(rng): values.example(rng) for _ in range(n)}
+    return _Strategy(draw)
+
+
+def settings(max_examples=_DEFAULT_MAX_EXAMPLES, **_):
+    def deco(f):
+        f._shim_max_examples = max_examples
+        return f
+    return deco
+
+
+def given(*strategies):
+    def deco(f):
+        # NB: deliberately no functools.wraps — pytest must see a zero-arg
+        # signature, not the wrapped function's strategy parameters.
+        def wrapper():
+            n = (getattr(wrapper, "_shim_max_examples", None)
+                 or getattr(f, "_shim_max_examples", None)
+                 or _DEFAULT_MAX_EXAMPLES)
+            seed = zlib.crc32(f.__qualname__.encode())
+            rng = np.random.default_rng(seed)
+            for _ in range(n):
+                f(*(s.example(rng) for s in strategies))
+        wrapper.__name__ = f.__name__
+        wrapper.__doc__ = f.__doc__
+        return wrapper
+    return deco
+
+
+def assume(condition):
+    if not condition:
+        raise AssertionError("assumption failed (shim has no rejection "
+                             "sampling; loosen the strategy instead)")
+
+
+st = types.ModuleType("hypothesis.strategies")
+st.floats = floats
+st.integers = integers
+st.lists = lists
+st.text = text
+st.dictionaries = dictionaries
+
+hypothesis = types.ModuleType("hypothesis")
+hypothesis.given = given
+hypothesis.settings = settings
+hypothesis.assume = assume
+hypothesis.strategies = st

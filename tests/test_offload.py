@@ -1,7 +1,10 @@
 """Unit + property tests for the paper's Eqs (1)-(4) controller."""
 
-import hypothesis
-import hypothesis.strategies as st
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+except ImportError:      # not installable here; deterministic shim
+    from _hypothesis_fallback import hypothesis, st
 import jax
 import jax.numpy as jnp
 import numpy as np

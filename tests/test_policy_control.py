@@ -1,0 +1,330 @@
+"""The unified Policy/ControlPlane API: parse round-trips, simulator/live
+ControlLoop equivalence, hedging semantics, batched serving, and the live
+autoscaler path."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core import offload, router
+from repro.core.policy import (AutoOffload, ControlLoop, HedgedOffload,
+                               NetAwareOffload, Policy, StaticSplit)
+from repro.core.replication import AutoscalingPolicy, FunctionSpec
+from repro.core.simulator import ContinuumSimulator, SimConfig
+from repro.models import model_zoo
+from repro.platform import Continuum
+from repro.serving.engine import Endpoint, Request
+from repro.serving.tiers import TierConfig
+
+
+# ---- Policy.parse -----------------------------------------------------------
+
+def test_parse_static_from_number_and_string():
+    for spec in (0.0, 25, 50.0, "75", "100.0"):
+        pol = Policy.parse(spec)
+        assert isinstance(pol, StaticSplit)
+        assert pol.pct == float(spec)
+
+
+def test_parse_auto_variants():
+    assert type(Policy.parse("auto")) is AutoOffload
+    net = Policy.parse("auto+net")
+    assert isinstance(net, NetAwareOffload) and net.cfg.net_aware
+    assert isinstance(Policy.parse("auto+hedge"), HedgedOffload)
+
+
+def test_parse_roundtrips_via_spec():
+    for spec in ("auto", "auto+net", "auto+hedge", 37.5):
+        pol = Policy.parse(spec)
+        again = Policy.parse(pol.spec)
+        assert type(again) is type(pol)
+        if isinstance(pol, StaticSplit):
+            assert again.pct == pol.pct
+
+
+def test_parse_passthrough_and_errors():
+    pol = AutoOffload()
+    assert Policy.parse(pol) is pol
+    with pytest.raises(ValueError):
+        Policy.parse("definitely-not-a-policy")
+    with pytest.raises(ValueError):
+        Policy.parse(150.0)
+    with pytest.raises(ValueError):
+        Policy.parse("auto+warp")
+
+
+def test_parse_net_aware_takes_link_parameters():
+    pol = Policy.parse("auto+net", link_bytes_per_s=5e6, req_bytes=2e5)
+    assert pol.cfg.link_bytes_per_s == 5e6 and pol.cfg.req_bytes == 2e5
+
+
+def test_parse_net_plus_hedge_composes():
+    pol = Policy.parse("auto+net+hedge", link_bytes_per_s=1e6)
+    assert isinstance(pol, HedgedOffload)
+    assert pol.cfg.net_aware and pol.cfg.link_bytes_per_s == 1e6
+    assert type(Policy.parse(pol.spec)) is HedgedOffload  # round-trips
+
+
+# ---- ControlLoop ------------------------------------------------------------
+
+def test_static_control_loop_holds_percentage():
+    loop = ControlLoop(StaticSplit(40.0), 2, window=16)
+    np.testing.assert_allclose(loop.R, 40.0)
+    lat = np.random.default_rng(0).lognormal(-2, 1, (2, 16)).astype(np.float32)
+    R = loop.step(lat, np.ones_like(lat, bool))
+    np.testing.assert_allclose(R, 40.0)
+
+
+def test_queue_age_mixing_displaces_oldest():
+    lat = np.full((1, 8), 0.5, np.float32)
+    valid = np.zeros((1, 8), bool)
+    ControlLoop.mix_queue_ages(lat, valid, 0, [3.0, 2.0, 1.0], window=8)
+    # window//2 = 4 >= len(ages): all three ages land on the oldest slots
+    np.testing.assert_allclose(lat[0, :3], [3.0, 2.0, 1.0])
+    assert valid[0, :3].all() and not valid[0, 3:].any()
+
+
+def test_route_matches_router_extremes():
+    loop = ControlLoop(StaticSplit(0.0), 2)
+    fn_ids = np.asarray([0, 1, 0, 1, 0], np.int32)
+    key = jax.random.PRNGKey(0)
+    R = np.asarray([100.0, 0.0], np.float32)
+    mask = loop.policy.route(key, R, fn_ids, 2)
+    assert mask.shape == (5,)
+    assert mask[fn_ids == 0].all() and not mask[fn_ids == 1].any()
+
+
+# ---- live harness (module-scoped: one deploy) -------------------------------
+
+@pytest.fixture(scope="module")
+def continuum():
+    cfg = configs.get_smoke_config("stablelm-1.6b")
+    params = model_zoo.init(jax.random.PRNGKey(0), cfg)
+    cc = Continuum(edge=TierConfig(slots=2, max_len=64),
+                   cloud=TierConfig(slots=8, max_len=64),
+                   policy="auto", seed=0)
+    cc.deploy(FunctionSpec(name="fn", arch="stablelm-1.6b"), cfg, params)
+    return cc
+
+
+def test_sim_and_live_control_loops_identical(continuum):
+    """The tentpole claim: simulator and live runtime run the SAME control
+    loop — a shared latency trace yields identical R_t trajectories."""
+    sim = ContinuumSimulator("matmult", "auto", SimConfig(duration_s=10.0))
+    live_loop = continuum.control
+    assert isinstance(sim.control, ControlLoop)
+    assert isinstance(live_loop, ControlLoop)
+    rng = np.random.default_rng(42)
+    R_sim, R_live = [], []
+    for t in range(25):
+        lat = rng.lognormal(-2, 0.8, (1, 64)).astype(np.float32)
+        valid = rng.uniform(size=(1, 64)) < 0.9
+        ages = list(rng.uniform(0.1, 4.0, size=t % 5))
+        arr = [float(t % 7)]
+        R_sim.append(sim.control.step(lat, valid, [ages], arr).copy())
+        R_live.append(live_loop.step(lat, valid, [ages], arr).copy())
+    np.testing.assert_array_equal(np.asarray(R_sim), np.asarray(R_live))
+    assert np.asarray(R_sim).max() > 0.0     # the trace actually engages
+
+
+def test_batched_tick_shares_decode_stream(continuum):
+    rid0 = 1000
+    for i in range(4):
+        continuum.submit("fn", Request(
+            rid=rid0 + i, tokens=np.arange(1, 7, dtype=np.int32) + i,
+            max_new=3))
+    rec = continuum.tick()
+    assert rec["edge"] + rec["cloud"] == 4      # nothing dropped or stolen
+    assert rec["waves"] < 4                     # requests shared waves
+
+
+def test_batched_matches_serial_streams(continuum):
+    """Co-scheduled decode must emit the same tokens as serial serving."""
+    ep: Endpoint = continuum.cloud.endpoints["fn"]
+    prompts = {0: np.arange(5, 13, dtype=np.int32),
+               1: np.arange(40, 48, dtype=np.int32)}
+    s0, s1 = ep.try_claim(), ep.try_claim()
+    firsts = ep.prefill_batch({s0: prompts[0], s1: prompts[1]})
+    batched = {s0: [firsts[s0]], s1: [firsts[s1]]}
+    toks = dict(firsts)
+    for _ in range(3):
+        toks = ep.decode_all(toks)
+        for s in (s0, s1):
+            batched[s].append(toks[s])
+    ep.release(s0), ep.release(s1)
+    for i, prompt in prompts.items():
+        slot = ep.try_claim()
+        serial = [ep.prefill_one(slot, prompt)]
+        tk = {slot: serial[0]}
+        for _ in range(3):
+            tk = ep.decode_all(tk)
+            serial.append(tk[slot])
+        ep.release(slot)
+        assert serial == batched[(s0, s1)[i]], f"prompt {i} diverged"
+
+
+def test_no_slot_stealing(continuum):
+    """Oversubscribing a tier raises instead of clobbering slot 0."""
+    tier = continuum.edge                       # 2 slots
+    reqs = [(Request(rid=2000 + i, tokens=np.arange(6, dtype=np.int32),
+                     max_new=1), 0.0) for i in range(3)]
+    with pytest.raises(RuntimeError):
+        tier.serve_batch("fn", reqs)
+    assert tier.endpoints["fn"].active == 0     # claims were rolled back
+
+
+# ---- recurrent-state families ----------------------------------------------
+
+@pytest.fixture(scope="module")
+def rwkv_endpoint():
+    cfg = configs.get_smoke_config("rwkv6-7b")
+    params = model_zoo.init(jax.random.PRNGKey(2), cfg)
+    return Endpoint(cfg, params, slots=2, max_len=32)
+
+
+def _serve_alone(ep, prompt, steps=3):
+    slot = ep.try_claim()
+    out = [ep.prefill_one(slot, prompt)]
+    tk = {slot: out[0]}
+    for _ in range(steps):
+        tk = ep.decode_all(tk)
+        out.append(tk[slot])
+    ep.release(slot)
+    return out
+
+
+def test_recurrent_slot_reuse_is_stateless(rwkv_endpoint):
+    """Reusing a slot must not leak the previous request's RWKV state.
+
+    Note the rwkv6 smoke config has num_layers == slots == 2, so this also
+    pins the per-leaf batch-axis detection (a leading layer axis must not
+    be mistaken for the slot axis)."""
+    ep = rwkv_endpoint
+    a = np.arange(3, 9, dtype=np.int32)
+    b = np.arange(20, 26, dtype=np.int32)
+    first = _serve_alone(ep, a)
+    _serve_alone(ep, b)                      # pollute the slot
+    again = _serve_alone(ep, a)
+    assert first == again
+
+
+def test_recurrent_mixed_length_wave_matches_serial(rwkv_endpoint):
+    """A later length group's packed prefill must not advance the state of
+    same-wave rows that were prefilled earlier (or are still waiting)."""
+    ep = rwkv_endpoint
+    short = np.arange(2, 6, dtype=np.int32)
+    long = np.arange(7, 15, dtype=np.int32)
+    s0, s1 = ep.try_claim(), ep.try_claim()
+    firsts = ep.prefill_batch({s0: short, s1: long})
+    streams = {s0: [firsts[s0]], s1: [firsts[s1]]}
+    tk = dict(firsts)
+    for _ in range(3):
+        tk = ep.decode_all(tk)
+        for s in (s0, s1):
+            streams[s].append(tk[s])
+    ep.release(s0), ep.release(s1)
+    assert streams[s0] == _serve_alone(ep, short)
+    assert streams[s1] == _serve_alone(ep, long)
+
+
+# ---- hedging ----------------------------------------------------------------
+
+def test_hedged_offload_targets_stragglers():
+    pol = HedgedOffload()
+    lat = np.full((1, 64), 0.1, np.float32)
+    valid = np.ones((1, 64), bool)
+    ages = np.asarray([0.01, 5.0, 0.02, 0.3], np.float32)
+    fn_ids = np.zeros(4, np.int32)
+    mask = pol.hedge(jax.random.PRNGKey(0), ages, fn_ids, lat, valid)
+    np.testing.assert_array_equal(mask, [False, True, False, True])
+
+
+def test_hedged_offload_never_hedges_blind():
+    pol = HedgedOffload()
+    lat = np.zeros((1, 64), np.float32)
+    valid = np.zeros((1, 64), bool)             # nothing observed yet
+    ages = np.asarray([100.0], np.float32)
+    mask = pol.hedge(jax.random.PRNGKey(0), ages, np.zeros(1, np.int32),
+                     lat, valid)
+    assert not mask.any()
+
+
+def test_hedged_mask_is_deterministic_rule():
+    key = jax.random.PRNGKey(3)
+    lat = np.asarray([0.1, 5.0, 0.1], np.float32)
+    p99 = np.asarray([1.0], np.float32)
+    fn_ids = np.zeros(3, np.int32)
+    m1 = np.asarray(router.hedged_mask(key, lat, p99, fn_ids))
+    m2 = np.asarray(router.hedged_mask(jax.random.PRNGKey(9), lat, p99,
+                                       fn_ids))
+    np.testing.assert_array_equal(m1, m2)       # key is API symmetry only
+    np.testing.assert_array_equal(m1, [False, True, False])
+
+
+# ---- live autoscaler --------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def scaled_continuum():
+    cfg = configs.get_smoke_config("stablelm-1.6b")
+    params = model_zoo.init(jax.random.PRNGKey(1), cfg)
+    tier = dict(slots=4, max_len=64, stable_window_s=3.0, panic_window_s=1.0)
+    cc = Continuum(edge=TierConfig(**tier), cloud=TierConfig(**tier),
+                   policy=0.0, seed=0)
+    cc.deploy(FunctionSpec(
+        name="fn", arch="stablelm-1.6b",
+        autoscaling=AutoscalingPolicy(min_scale=0, max_scale=4,
+                                      target_concurrency=1.0,
+                                      scale_to_zero_grace_s=2.0)),
+        cfg, params)
+    return cc
+
+
+def test_autoscaler_scales_up_under_load(scaled_continuum):
+    cc = scaled_continuum
+    assert cc.edge.replicas("fn") == 0          # starts scaled to zero
+    for i in range(4):
+        cc.submit("fn", Request(rid=i, tokens=np.arange(6, dtype=np.int32),
+                                max_new=1))
+    rec = cc.tick()
+    assert rec["edge"] == 4                     # scale-from-zero same tick
+    assert cc.edge.replicas("fn") >= 2
+    assert rec["replicas"]["edge"]["fn"] == cc.edge.replicas("fn")
+
+
+def test_autoscaler_scales_to_zero_when_idle(scaled_continuum):
+    cc = scaled_continuum
+    for _ in range(8):                          # > stable window + grace
+        cc.tick()
+    assert cc.edge.replicas("fn") == 0
+    assert cc.cloud.replicas("fn") == 0
+    # and wakes back up for a late request
+    cc.submit("fn", Request(rid=99, tokens=np.arange(6, dtype=np.int32),
+                            max_new=1))
+    rec = cc.tick()
+    assert rec["edge"] + rec["cloud"] == 1
+    assert cc.edge.replicas("fn") >= 1
+
+
+def test_wave_budget_leaves_backlog(scaled_continuum):
+    """Capping waves per tick leaves a backlog whose queue ages the next
+    scrape mixes into Eq (1) — the live onset signal."""
+    cc = scaled_continuum
+    cc.max_waves_per_tick = 1
+    try:
+        for i in range(6):
+            cc.submit("fn", Request(rid=200 + i,
+                                    tokens=np.arange(6, dtype=np.int32),
+                                    max_new=1))
+        served = cc.tick()
+        served_total = served["edge"] + served["cloud"]
+        assert served["waves"] == 1
+        assert len(cc.queue) == 6 - served_total > 0
+        for _ in range(10):
+            if not cc.queue:
+                break
+            rec = cc.tick()
+            served_total += rec["edge"] + rec["cloud"]
+        assert served_total == 6 and not cc.queue
+    finally:
+        cc.max_waves_per_tick = None

@@ -2,8 +2,11 @@
 
 import dataclasses
 
-import hypothesis
-import hypothesis.strategies as st
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+except ImportError:      # not installable here; deterministic shim
+    from _hypothesis_fallback import hypothesis, st
 
 from repro.core.replication import (EDGE_ANNOTATION_PREFIX, AutoscalingPolicy,
                                     EdgeServiceState, FunctionSpec,
