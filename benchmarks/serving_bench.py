@@ -1,6 +1,8 @@
-"""Serving-path microbench: tokens/s through the two-tier continuum on the
-smoke configs, offload-policy comparison at fixed wall budget, and the
-batched-vs-serial scheduler comparison.
+"""Serving-path microbench: tokens/s through the continuum on the smoke
+configs, offload-policy comparison at fixed wall budget, the
+batched-vs-serial scheduler comparison, the bucketed-vs-padded prefill
+comparison, a closed-loop (submit-while-serving) driver, and a 3-tier
+chain with per-tier request counts.
 
 This is the live-engine counterpart of the simulator benches: real jitted
 prefill/decode steps, real controller, one CPU device — numbers are
@@ -22,7 +24,8 @@ from repro import configs
 from repro.core import offload
 from repro.core.replication import FunctionSpec
 from repro.models import model_zoo
-from repro.platform import Continuum, Request, TierConfig
+from repro.platform import (Continuum, LinkSpec, Request, TierConfig,
+                            TierSpec, Topology)
 from repro.serving.engine import Endpoint
 
 
@@ -41,22 +44,28 @@ def bench_engine(arch: str = "stablelm-1.6b", steps: int = 30):
             "tokens_per_s_per_slot": 1.0 / dt}
 
 
-def _workload(rounds: int, seed: int):
-    """The shared request schedule: (round, tokens, max_new) triples."""
+def _workload(rounds: int, seed: int, max_new: int = 6):
+    """The shared request schedule: (round, tokens, max_new) triples.
+
+    ``max_new`` is large enough that decode dominates prefill, so the
+    scheduler comparison measures what continuous batching shares (the
+    ``decode_all`` stream), not just prefill admission cost."""
     rng = np.random.default_rng(seed)
     sched = []
     for rnd in range(rounds):
         for _ in range(2 if rnd < 3 else 8):
-            sched.append((rnd, rng.integers(0, 128, 6).astype(np.int32), 2))
+            sched.append((rnd, rng.integers(0, 128, 6).astype(np.int32),
+                          max_new))
     return sched
 
 
-def _mk_continuum(policy_cfg: offload.OffloadConfig, seed: int) -> Continuum:
+def _mk_continuum(policy_cfg: offload.OffloadConfig, seed: int,
+                  policy="auto") -> Continuum:
     cfg = configs.get_smoke_config("stablelm-1.6b")
     params = model_zoo.init(jax.random.PRNGKey(seed), cfg)
     cc = Continuum(edge=TierConfig(slots=2, max_len=64),
                    cloud=TierConfig(slots=8, max_len=64),
-                   policy="auto", offload_cfg=policy_cfg, seed=seed)
+                   policy=policy, offload_cfg=policy_cfg, seed=seed)
     cc.deploy(FunctionSpec(name="fn", arch="stablelm-1.6b"), cfg, params)
     return cc
 
@@ -93,7 +102,8 @@ def bench_policies(rounds: int = 12, seed: int = 0):
 
 def bench_scheduler(rounds: int = 12, seed: int = 0):
     """Same workload through (a) the batched wave scheduler and (b) the
-    serial ``serve_one``-per-request baseline.
+    serial ``serve_one``-per-request baseline, under an identical *fixed*
+    50% split (so routing cannot diverge between the two paths).
 
     The batched path packs each wave into one prefill + one shared
     ``decode_all`` stream, so B co-scheduled requests cost ~max_new decode
@@ -103,15 +113,26 @@ def bench_scheduler(rounds: int = 12, seed: int = 0):
     out = {}
 
     def _warmup(cc):
-        """Compile prefill/decode on both tiers before timing, then drop
-        the (compile-skewed) warmup latencies from the scraped metrics."""
+        """Compile prefill/decode on both tiers before timing — every
+        power-of-two wave shape the bucketed prefill can hit — plus the
+        router's padded batch shapes, then drop the (compile-skewed)
+        warmup latencies from the scraped metrics."""
         for tier in (cc.edge, cc.cloud):
-            req = Request(rid=-1, tokens=np.zeros(6, np.int32), max_new=2)
-            tier.serve_one("fn", req)
+            g = 1
+            while g <= tier.cfg.slots:
+                reqs = [(Request(rid=-1 - i, tokens=np.zeros(6, np.int32),
+                                 max_new=2), time.perf_counter())
+                        for i in range(g)]
+                tier.serve_batch("fn", reqs)
+                g *= 2
             tier.metrics.clear()
+        key = jax.random.PRNGKey(0)
+        for n in (1, 2, 4, 8, 16):
+            cc.control.route_tiers(key, np.zeros(n, np.int32))
+            cc.control.route(key, np.zeros(n, np.int32))
 
     # (a) batched: submit per round, tick drains in waves
-    cc = _mk_continuum(offload.OffloadConfig(), seed)
+    cc = _mk_continuum(offload.OffloadConfig(), seed, policy=50.0)
     _warmup(cc)
     rid = 0
     t0 = time.perf_counter()
@@ -137,7 +158,7 @@ def bench_scheduler(rounds: int = 12, seed: int = 0):
 
     # (b) serial: identical requests + routing policy, but each request is
     # served alone (serve_one) — the pre-batching code path.
-    cc = _mk_continuum(offload.OffloadConfig(), seed)
+    cc = _mk_continuum(offload.OffloadConfig(), seed, policy=50.0)
     _warmup(cc)
     rid = 0
     served_edge = served_cloud = 0
@@ -168,6 +189,111 @@ def bench_scheduler(rounds: int = 12, seed: int = 0):
     return out
 
 
+def bench_prefill_bucketing(arch: str = "stablelm-1.6b", slots: int = 8,
+                            reps: int = 20):
+    """Length-bucketed packed prefill vs the legacy pad-to-pool path.
+
+    A small wave (1-2 prompts) on a ``slots``-wide pool used to pay a
+    batch=slots prefill; the bucketed path runs it at the next
+    power-of-two batch on a fresh cache and scatters the rows back."""
+    cfg = configs.get_smoke_config(arch)
+    params = model_zoo.init(jax.random.PRNGKey(0), cfg)
+    out = {}
+    for mode, bucket in (("bucketed", True), ("padded", False)):
+        ep = Endpoint(cfg, params, slots=slots, max_len=128,
+                      bucket_prefill=bucket)
+        prompt = np.arange(12, dtype=np.int32)
+
+        def wave(n):
+            claimed = [ep.try_claim() for _ in range(n)]
+            ep.prefill_batch({s: prompt + s for s in claimed})
+            for s in claimed:
+                ep.release(s)
+
+        wave(1)                       # compile
+        wave(2)
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            wave(1)
+            wave(2)
+        dt = (time.perf_counter() - t0) / (2 * reps)
+        out[mode] = {"small_wave_prefill_ms": dt * 1e3}
+    out["bucketed_speedup"] = (out["padded"]["small_wave_prefill_ms"]
+                               / out["bucketed"]["small_wave_prefill_ms"])
+    return out
+
+
+def bench_closed_loop(rounds: int = 24, clients: int = 8, seed: int = 0):
+    """Closed-loop driver: a fixed client population resubmits as soon as
+    its previous request completes, so arrivals interleave with serving
+    instead of pre-loading the queue.  ``max_waves_per_tick`` throttles
+    the scheduler, leaving a live backlog whose queue ages the next scrape
+    mixes into Eq (1) — the live overload-onset signal."""
+    rng = np.random.default_rng(seed)
+    cc = _mk_continuum(offload.OffloadConfig(), seed)
+    cc.max_waves_per_tick = 1
+    rid = outstanding = 0
+    backlog_peak = 0
+    R_trace = []
+    for _ in range(rounds):
+        for _ in range(clients - outstanding):   # closed loop: top up
+            cc.submit("fn", Request(
+                rid=rid, tokens=rng.integers(0, 128, 6).astype(np.int32),
+                max_new=2))
+            rid += 1
+        outstanding = clients
+        rec = cc.tick()
+        outstanding -= rec["edge"] + rec["cloud"]
+        backlog_peak = max(backlog_peak, len(cc.queue))
+        R_trace.append(rec["R"])
+    served = sum(r["edge"] + r["cloud"] for r in cc.log)
+    return {
+        "submitted": rid,
+        "served": served,
+        "backlog_peak": backlog_peak,
+        "R_peak": float(max(R_trace)),
+        "R_final": float(R_trace[-1]),
+        # the point of the closed loop: backlog ages fire the controller
+        "onset_detected": bool(max(R_trace) > 0.0),
+    }
+
+
+def bench_three_tier(rounds: int = 12, seed: int = 0):
+    """The 3-tier device/edge/cloud chain end-to-end in the live runtime,
+    reporting per-tier request counts."""
+    cfg = configs.get_smoke_config("stablelm-1.6b")
+    params = model_zoo.init(jax.random.PRNGKey(seed), cfg)
+    topo = Topology(
+        tiers=(TierSpec("device", slots=1, max_len=64),
+               TierSpec("edge", slots=2, max_len=64,
+                        extra_latency_s=0.005),
+               TierSpec("cloud", slots=8, max_len=64,
+                        extra_latency_s=0.02)),
+        links=(LinkSpec(rtt_s=0.005, bandwidth_Bps=50e6),
+               LinkSpec(rtt_s=0.04, bandwidth_Bps=100e6)))
+    cc = Continuum.from_topology(topo, policy="auto", seed=seed)
+    cc.deploy(FunctionSpec(name="fn", arch="stablelm-1.6b"), cfg, params)
+    sched = _workload(rounds, seed)
+    rid = 0
+    t0 = time.perf_counter()
+    for rnd in range(rounds):
+        for r, toks, max_new in sched:
+            if r == rnd:
+                cc.submit("fn", Request(rid=rid, tokens=toks,
+                                        max_new=max_new))
+                rid += 1
+        cc.tick()
+    wall = time.perf_counter() - t0
+    tier_counts = {n: sum(r["tiers"][n] for r in cc.log) for n in topo.names}
+    return {
+        "tier_counts": tier_counts,
+        "served": sum(tier_counts.values()),
+        "submitted": rid,
+        "wall_s": wall,
+        "R_peak": float(max(r["R"] for r in cc.log)),
+    }
+
+
 def main(out_dir: str | None = None):
     eng = bench_engine()
     print(f"engine decode: {eng['decode_step_ms']:.1f} ms/step "
@@ -183,7 +309,22 @@ def main(out_dir: str | None = None):
               f"req/s={v['req_per_s']:.2f}")
     print(f"batched speedup over serial serve_one: "
           f"{sched['batched_speedup']:.2f}x")
-    res = {"engine": eng, "policies": pol, "scheduler": sched}
+    buck = bench_prefill_bucketing()
+    print(f"prefill  bucketed={buck['bucketed']['small_wave_prefill_ms']:.1f}ms "
+          f"padded={buck['padded']['small_wave_prefill_ms']:.1f}ms "
+          f"speedup={buck['bucketed_speedup']:.2f}x (small waves)")
+    closed = bench_closed_loop()
+    print(f"closed-loop: submitted={closed['submitted']} "
+          f"served={closed['served']} backlog_peak={closed['backlog_peak']} "
+          f"R_peak={closed['R_peak']:.1f}% "
+          f"onset_detected={closed['onset_detected']}")
+    three = bench_three_tier()
+    per = " ".join(f"{n}={c}" for n, c in three["tier_counts"].items())
+    print(f"3-tier: served={three['served']}/{three['submitted']} [{per}] "
+          f"R_peak={three['R_peak']:.1f}% wall={three['wall_s']:.1f}s")
+    res = {"engine": eng, "policies": pol, "scheduler": sched,
+           "prefill_bucketing": buck, "closed_loop": closed,
+           "three_tier": three}
     if out_dir:
         os.makedirs(out_dir, exist_ok=True)
         with open(os.path.join(out_dir, "serving_bench.json"), "w") as f:

@@ -12,7 +12,7 @@ Runs the MatMult workload (the paper's network-bottleneck case) under:
 
 import numpy as np
 
-from repro.platform import Continuum, SimConfig
+from repro.platform import Continuum, SimConfig, Topology
 
 # push the ramp high enough that the paper controller wants ~100% offload
 # while the 100 MB/s link can only carry part of it — the regime where the
@@ -44,3 +44,13 @@ Reading the table:
   * the paper's auto controller lands between the extremes;
   * the net-aware variant keeps offload below link saturation — the
     'more sophisticated strategy' the paper's §4.2 calls for.""")
+
+# ---- beyond two tiers: the same controller over a device/edge/cloud chain
+topo = Topology.device_edge_cloud(device_slots=2, edge_slots=4,
+                                  cloud_slots=64)
+print(f"\n3-tier continuum ({' -> '.join(topo.names)}, waterfall spill on):")
+print(f"{'policy':>16} {'ok':>6} {'fail':>5} {'spill':>6}  per-tier")
+for label, policy in (("auto (3-tier)", "auto"), ("static 50%", 50.0)):
+    r = Continuum.simulate("matmult", policy, cfg, topology=topo)
+    per = " ".join(f"{n}={c}" for n, c in r.tier_counts.items())
+    print(f"{label:>16} {r.successes:>6} {r.failures:>5} {r.spilled:>6}  {per}")

@@ -1,11 +1,13 @@
-"""End-to-end driver: serve a small LM across the Edge-Cloud continuum.
+"""End-to-end driver: serve small LMs across a 3-tier continuum.
 
-Deploys TWO model endpoints (a dense LM and an SSM LM) through the
-``repro.platform.Continuum`` facade, pushes a ramped request stream at the
-edge gateway, and shows the full paper loop live: latency scrape ->
-Policy (Eqs (1)-(4)) -> weighted batch routing -> *batched* per-tier
-serving — each scheduler wave packs the admitted requests into one
-prefill + a shared ``decode_all`` stream per endpoint.
+Declares a device -> edge -> cloud :class:`Topology`, deploys TWO model
+endpoints (a dense LM and an SSM LM) through the
+``repro.platform.Continuum`` facade, pushes a ramped request stream at
+the device gateway, and shows the full paper loop live, generalized to N
+tiers: per-tier latency scrape -> Policy (Eqs (1)-(4) per boundary) ->
+categorical batch routing over the tier distribution -> *batched*
+per-tier serving — each scheduler wave packs the admitted requests into
+one bucketed prefill + a shared ``decode_all`` stream.
 
     PYTHONPATH=src python examples/serve_continuum.py
 """
@@ -16,27 +18,31 @@ import numpy as np
 from repro import configs
 from repro.core.replication import FunctionSpec
 from repro.models import model_zoo
-from repro.platform import Continuum, Request, TierConfig
+from repro.platform import (Continuum, LinkSpec, Request, TierSpec, Topology)
 
 ARCHS = ("stablelm-1.6b", "rwkv6-7b")
 
-cc = Continuum(edge=TierConfig(slots=2, max_len=64),
-               cloud=TierConfig(slots=12, max_len=64,
-                                extra_latency_s=0.02),
-               policy="auto", seed=0)
+topo = Topology(
+    tiers=(TierSpec("device", slots=1, max_len=64),
+           TierSpec("edge", slots=2, max_len=64, extra_latency_s=0.005),
+           TierSpec("cloud", slots=12, max_len=64, extra_latency_s=0.02)),
+    links=(LinkSpec(rtt_s=0.005, bandwidth_Bps=50e6),
+           LinkSpec(rtt_s=0.04, bandwidth_Bps=100e6)))
+cc = Continuum.from_topology(topo, policy="auto", seed=0)
 for arch in ARCHS:
     cfg = configs.get_smoke_config(arch)
     params = model_zoo.init(jax.random.PRNGKey(hash(arch) % 2**31), cfg)
     cc.deploy(FunctionSpec(name=arch, arch=arch), cfg, params)
-    print(f"deployed {arch} to cloud; replicated to edge "
+    print(f"deployed {arch} to cloud; replicated down the chain "
           f"(writes={cc.replicator.writes})")
 
 rng = np.random.default_rng(0)
 rid = 0
-print(f"\n{'round':>5} {'rps':>4} {'edge':>5} {'cloud':>5} {'waves':>6} "
-      f"{'R_t%':>6}")
+names = topo.names
+print(f"\n{'round':>5} {'rps':>4} " +
+      " ".join(f"{n:>6}" for n in names) + f" {'waves':>6} {'R_t%':>6}")
 for rnd in range(18):
-    rps = 2 if rnd < 4 else 10          # ramp: overload the 2-slot edge
+    rps = 2 if rnd < 4 else 10          # ramp: overload the 1-slot device
     for _ in range(rng.poisson(rps)):
         arch = ARCHS[rid % 2]
         cfg = configs.get_smoke_config(arch)
@@ -45,16 +51,18 @@ for rnd in range(18):
             max_new=3))
         rid += 1
     rec = cc.tick()
-    print(f"{rnd:>5} {rps:>4} {rec['edge']:>5} {rec['cloud']:>5} "
-          f"{rec['waves']:>6} {rec['R']:>6.1f}")
+    row = " ".join(f"{rec['tiers'][n]:>6}" for n in names)
+    print(f"{rnd:>5} {rps:>4} {row} {rec['waves']:>6} {rec['R']:>6.1f}")
 
-edge_n = sum(r["edge"] for r in cc.log)
-cloud_n = sum(r["cloud"] for r in cc.log)
+totals = {n: sum(r["tiers"][n] for r in cc.log) for n in names}
+served = sum(totals.values())
 waves = sum(r["waves"] for r in cc.log)
-print(f"\nserved {rid} requests: edge={edge_n}, cloud={cloud_n} "
-      f"({100 * cloud_n / max(rid, 1):.0f}% offloaded under overload)")
-print(f"batching: {rid} requests packed into {waves} waves "
-      f"({rid / max(waves, 1):.1f} requests sharing each prefill+decode "
+per_tier = ", ".join(f"{n}={c}" for n, c in totals.items())
+off = served - totals[names[0]]
+print(f"\nserved {served}/{rid} requests: {per_tier} "
+      f"({100 * off / max(served, 1):.0f}% pushed off-device under overload)")
+print(f"batching: {served} requests packed into {waves} waves "
+      f"({served / max(waves, 1):.1f} requests sharing each prefill+decode "
       f"stream on average)")
 print("steady-state replication writes:", cc.replicator.writes,
       "(no feedback loop)")

@@ -55,8 +55,9 @@ class Policy:
 
     #: canonical shorthand (used by ``parse`` round-trips and logs)
     spec: str = "policy"
-    #: lazily-built jitted router (shared by all route() calls)
+    #: lazily-built jitted routers (shared by all route*() calls)
     _route_jit = None
+    _route_tiers_jit = None
 
     # -- state ------------------------------------------------------------
     def init_state(self, num_functions: int) -> Any:
@@ -100,6 +101,52 @@ class Policy:
         mask = self._route_jit(key, jnp.asarray(pct), jnp.asarray(ids),
                                num_functions + 1)
         return np.asarray(mask)[:B]
+
+    def tier_distribution(self, R_all: np.ndarray,
+                          num_tiers: int) -> np.ndarray:
+        """Compose per-boundary percentages into a tier distribution.
+
+        ``R_all`` is (num_tiers-1, F): boundary b's R_t is the percentage
+        of the traffic *reaching* tier b that continues to tier b+1 (the
+        waterfall reading of the paper's single edge->cloud R_t).  Returns
+        (F, num_tiers) percentages summing to 100; for two tiers this is
+        exactly ``[100 - R, R]``.
+        """
+        R_all = np.asarray(R_all, np.float32)
+        F = R_all.shape[1]
+        d = np.zeros((F, num_tiers), np.float32)
+        remain = np.full(F, 100.0, np.float32)
+        for b in range(num_tiers - 1):
+            d[:, b] = remain * (100.0 - R_all[b]) / 100.0
+            remain = remain * R_all[b] / 100.0
+        d[:, num_tiers - 1] = remain
+        return d
+
+    def route_tiers(self, key: jax.Array, dist: np.ndarray,
+                    fn_ids: np.ndarray, num_functions: int) -> np.ndarray:
+        """Assign a batch over N tiers by the (F, N) distribution.
+
+        Returns (B,) int tier indices.  Batches are padded to a
+        power-of-two bucket (padding rows carry a void function id that
+        routes 100% to tier 0) so live ticks reuse compiled shapes.
+        """
+        B = len(fn_ids)
+        num_tiers = dist.shape[1]
+        if B == 0:
+            return np.zeros(0, np.int32)
+        if num_tiers == 1:
+            return np.zeros(B, np.int32)
+        if self._route_tiers_jit is None:
+            self._route_tiers_jit = jax.jit(router.route_tiers)
+        Bp = max(1, 1 << (B - 1).bit_length())
+        ids = np.full(Bp, num_functions, np.int32)
+        ids[:B] = fn_ids
+        distp = np.zeros((num_functions + 1, num_tiers), np.float32)
+        distp[:num_functions] = dist
+        distp[num_functions, 0] = 100.0
+        tiers = self._route_tiers_jit(key, jnp.asarray(distp),
+                                      jnp.asarray(ids))
+        return np.asarray(tiers)[:B]
 
     def hedge(self, key: jax.Array, ages_s: np.ndarray, fn_ids: np.ndarray,
               latencies: np.ndarray, valid: np.ndarray) -> np.ndarray:
@@ -243,20 +290,66 @@ class ControlLoop:
     onset, before slow completions drain out), derive demand RPS, and ask
     the policy for fresh R_t percentages.
 
+    Over an N-tier :class:`~repro.core.topology.Topology`, the loop keeps
+    one controller *boundary* between each pair of adjacent tiers
+    (``num_tiers - 1`` of them).  Boundary b is driven by tier b's latency
+    windows and yields R_t[b] — the percentage of tier b's load to push
+    down the chain (waterfall offloading).  The classic two-tier continuum
+    is the single-boundary special case; :meth:`step` remains its
+    unchanged (bit-identical) code path.
+
     Both :class:`~repro.core.simulator.ContinuumSimulator` and the live
     :class:`~repro.serving.tiers.EdgeCloudContinuum` drive this object, so
     a shared latency trace yields bit-identical R_t trajectories.
     """
 
     def __init__(self, policy: PolicySpec, num_functions: int,
-                 window: int = 64, control_interval_s: float = 1.0):
-        self.policy = Policy.parse(policy)
+                 window: int = 64, control_interval_s: float = 1.0,
+                 num_tiers: int = 2,
+                 boundary_policies: Optional[Sequence[PolicySpec]] = None):
+        if num_tiers < 1:
+            raise ValueError(f"num_tiers must be >= 1, got {num_tiers}")
         self.num_functions = num_functions
         self.window = window
         self.control_interval_s = control_interval_s
-        self.state = self.policy.init_state(num_functions)
-        self.R = self.policy.initial_R(num_functions)
+        self.num_tiers = int(num_tiers)
+        self.num_boundaries = max(self.num_tiers - 1, 1)
+        if boundary_policies is None:
+            self.policy = Policy.parse(policy)
+            self.policies = [self.policy] * self.num_boundaries
+        else:
+            # Per-boundary policy objects (e.g. auto+net with each
+            # boundary's own link capacity); boundary 0 is canonical for
+            # routing/hedging.
+            if len(boundary_policies) != self.num_boundaries:
+                raise ValueError(
+                    f"{self.num_boundaries} boundaries need "
+                    f"{self.num_boundaries} policies, "
+                    f"got {len(boundary_policies)}")
+            self.policies = [Policy.parse(p) for p in boundary_policies]
+            self.policy = self.policies[0]
+        self.states = [self.policies[b].init_state(num_functions)
+                       for b in range(self.num_boundaries)]
+        self.R_all = np.stack([self.policies[b].initial_R(num_functions)
+                               for b in range(self.num_boundaries)])
         self.steps = 0
+
+    # 2-tier compatibility views: the ingress boundary's state and R_t.
+    @property
+    def state(self):
+        return self.states[0]
+
+    @state.setter
+    def state(self, v):
+        self.states[0] = v
+
+    @property
+    def R(self) -> np.ndarray:
+        return self.R_all[0]
+
+    @R.setter
+    def R(self, v):
+        self.R_all[0] = np.asarray(v, np.float32)
 
     @staticmethod
     def mix_queue_ages(lat: np.ndarray, valid: np.ndarray, fn: int,
@@ -275,10 +368,34 @@ class ControlLoop:
             lat[fn, :len(sel)] = sel
             valid[fn, :len(sel)] = True
 
+    def _rps(self, arrivals: Optional[Sequence[float]]) -> np.ndarray:
+        if arrivals is None:
+            arrivals = [0.0] * self.num_functions
+        return np.asarray(
+            [max(a / self.control_interval_s, 1e-3) for a in arrivals],
+            np.float32)
+
+    def _step_boundary(self, b: int, latencies: np.ndarray,
+                       valid: np.ndarray,
+                       queue_ages: Optional[Sequence[Sequence[float]]],
+                       rps: np.ndarray) -> np.ndarray:
+        pol = self.policies[b]
+        lat = np.array(latencies, np.float32, copy=True)
+        val = np.array(valid, bool, copy=True)
+        if queue_ages is not None:
+            for fn, ages in enumerate(queue_ages):
+                if ages:
+                    self.mix_queue_ages(lat, val, fn, ages, self.window)
+        self.states[b] = pol.observe(self.states[b], lat, val)
+        if val.any():
+            self.states[b], R = pol.update(self.states[b], lat, val, rps)
+            self.R_all[b] = np.asarray(R, np.float32)
+        return self.R_all[b]
+
     def step(self, latencies: np.ndarray, valid: np.ndarray,
              queue_ages: Optional[Sequence[Sequence[float]]] = None,
              arrivals: Optional[Sequence[float]] = None) -> np.ndarray:
-        """One control interval -> (F,) R_t percentages.
+        """One control interval on the ingress boundary -> (F,) R_t.
 
         Args:
           latencies, valid: (F, W) scraped windows (oldest entry first).
@@ -286,27 +403,54 @@ class ControlLoop:
             waiting at the gateway, head-of-line first.
           arrivals: per-function request count seen this interval.
         """
-        lat = np.array(latencies, np.float32, copy=True)
-        val = np.array(valid, bool, copy=True)
-        if queue_ages is not None:
-            for fn, ages in enumerate(queue_ages):
-                if ages:
-                    self.mix_queue_ages(lat, val, fn, ages, self.window)
-        if arrivals is None:
-            arrivals = [0.0] * self.num_functions
-        rps = np.asarray(
-            [max(a / self.control_interval_s, 1e-3) for a in arrivals],
-            np.float32)
-        self.state = self.policy.observe(self.state, lat, val)
-        if val.any():
-            self.state, R = self.policy.update(self.state, lat, val, rps)
-            self.R = np.asarray(R, np.float32)
+        rps = self._rps(arrivals)
+        out = self._step_boundary(0, latencies, valid, queue_ages, rps)
         self.steps += 1
-        return self.R
+        return out
+
+    def step_tiers(self, latencies: Sequence[np.ndarray],
+                   valid: Sequence[np.ndarray],
+                   queue_ages: Optional[Sequence] = None,
+                   arrivals: Optional[Sequence[float]] = None) -> np.ndarray:
+        """One control interval over every boundary of the chain.
+
+        Args:
+          latencies, valid: per-boundary (F, W) windows, one entry per
+            non-terminal tier (tier b feeds boundary b).
+          queue_ages: per-boundary, per-function in-flight ages (or None
+            per boundary).
+          arrivals: per-function request counts this interval — either
+            one flat sequence shared by every boundary (ingress demand),
+            or a per-boundary sequence of per-function counts (demand
+            that actually crossed boundary b-1, for net-aware caps).
+
+        Returns the (num_tiers-1, F) stack of R_t percentages.
+        """
+        if (arrivals is not None and len(arrivals)
+                and isinstance(arrivals[0], (list, tuple, np.ndarray))):
+            per_b = [self._rps(a) for a in arrivals]
+        else:
+            per_b = [self._rps(arrivals)] * self.num_boundaries
+        for b in range(self.num_boundaries):
+            qa = queue_ages[b] if queue_ages is not None else None
+            self._step_boundary(b, latencies[b], valid[b], qa, per_b[b])
+        self.steps += 1
+        return self.R_all
+
+    def dist(self) -> np.ndarray:
+        """The current (F, num_tiers) routing distribution."""
+        return self.policy.tier_distribution(self.R_all, self.num_tiers)
 
     def route(self, key: jax.Array, fn_ids: np.ndarray) -> np.ndarray:
-        """Split a queued batch by the current R_t."""
-        return self.policy.route(key, self.R, fn_ids, self.num_functions)
+        """Split a queued batch by the ingress boundary's R_t (2-tier
+        bool-mask path, True = deeper tier)."""
+        return self.policy.route(key, self.R_all[0], fn_ids,
+                                 self.num_functions)
+
+    def route_tiers(self, key: jax.Array, fn_ids: np.ndarray) -> np.ndarray:
+        """Assign a queued batch over all N tiers -> (B,) tier indices."""
+        return self.policy.route_tiers(key, self.dist(), fn_ids,
+                                       self.num_functions)
 
     def hedge(self, key: jax.Array, ages_s: np.ndarray, fn_ids: np.ndarray,
               latencies: np.ndarray, valid: np.ndarray) -> np.ndarray:

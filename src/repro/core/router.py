@@ -1,15 +1,18 @@
-"""Traffic splitting between the edge and cloud tiers.
+"""Traffic splitting across the tiers of the continuum.
 
 The paper's API gateway "makes the decision randomly, and only a percentage
 of traffic (decided by the offloading strategy) is being sent to the cloud".
-TPU serving is batched, so the router exposes both:
+TPU serving is batched, so the router exposes:
 
   * ``route_bernoulli`` — the paper-faithful per-request coin flip;
   * ``route_batch``     — expectation-matched batch split (deterministic
     count = floor(B*p) plus a Bernoulli remainder), which has the same mean
-    and strictly lower variance. This is the production path.
+    and strictly lower variance. This is the 2-tier production path.
+  * ``route_tiers``     — the N-tier generalization: vectorized,
+    expectation-matched categorical assignment of a batch over a
+    per-function tier *distribution* (see ``repro.core.topology``).
 
-Both are pure jnp and run under jit.
+All are pure jnp and run under jit.
 """
 
 from __future__ import annotations
@@ -67,6 +70,50 @@ def route_batch(key: jax.Array, pct: jnp.ndarray, fn_ids: jnp.ndarray,
     seg_start = jax.lax.associative_scan(jnp.maximum, seg_start)
     rank = jnp.zeros(B, jnp.int32).at[order].set(pos - seg_start)
     return rank < n_cloud[fn_ids]
+
+
+def route_tiers(key: jax.Array, dist: jnp.ndarray,
+                fn_ids: jnp.ndarray) -> jnp.ndarray:
+    """Expectation-matched categorical assignment over N tiers.
+
+    The N-tier generalization of :func:`route_batch`: per function, the
+    number of requests sent to tier >= j is ``floor(B_f * T_j)`` plus a
+    Bernoulli remainder, where ``T_j`` is the tail share of the
+    distribution; within a function, requests are ranked by i.i.d. noise
+    (one lexsort, O(B log B)) and the lowest-ranked cross deepest.  At
+    N=2 this has the same marginals as :func:`route_batch`.
+
+    Args:
+      dist: (F, N) per-function percentage split over tiers (rows sum
+        to 100; tier 0 = ingress).
+      fn_ids: (B,) function id of each request.
+
+    Returns:
+      (B,) int32 — tier index per request.
+    """
+    B = fn_ids.shape[0]
+    F, N = dist.shape
+    p = jnp.clip(dist / 100.0, 0.0, 1.0)                      # (F, N)
+    tail = jnp.cumsum(p[:, ::-1], axis=1)[:, ::-1]            # share to >= j
+    per_fn = jnp.zeros(F, jnp.float32).at[fn_ids].add(1.0)
+    want = per_fn[:, None] * tail                             # (F, N)
+    base = jnp.floor(want)
+    frac = want - base
+    extra = (jax.random.uniform(key, (F, N)) < frac).astype(jnp.float32)
+    n = base + extra
+    n = n.at[:, 0].set(per_fn)                                # all reach tier 0
+    # Independent Bernoullis can break monotonicity; clip to a staircase.
+    n = jax.lax.associative_scan(jnp.minimum, n, axis=1)
+    noise = jax.random.uniform(jax.random.fold_in(key, 1), (B,))
+    order = jnp.lexsort((noise, fn_ids))
+    sorted_fn = fn_ids[order]
+    pos = jnp.arange(B, dtype=jnp.int32)
+    seg_start = jnp.where(
+        jnp.concatenate([jnp.ones(1, bool), sorted_fn[1:] != sorted_fn[:-1]]),
+        pos, 0)
+    seg_start = jax.lax.associative_scan(jnp.maximum, seg_start)
+    rank = jnp.zeros(B, jnp.int32).at[order].set(pos - seg_start)
+    return jnp.sum(rank[:, None] < n[fn_ids, 1:], axis=1).astype(jnp.int32)
 
 
 def route_batch_dense(key: jax.Array, pct: jnp.ndarray, fn_ids: jnp.ndarray,

@@ -1,10 +1,20 @@
-"""Discrete-event simulator of the edge-cloud continuum testbed (§4 of the paper).
+"""Discrete-event simulator of the continuum testbed (§4 of the paper).
 
 Reproduces the paper's experimental apparatus — 4 Raspberry-Pi-class edge
 instances, an elastic cloud tier, a shared 100 MB/s edge->cloud link, a
 ramped open-loop request generator — so that Table 2 (successful responses
 per traffic policy) and Figure 2 (latency / CPU / memory / network time
 series) can be regenerated deterministically on this machine.
+
+The apparatus is no longer hardwired to two tiers: pass any
+:class:`~repro.core.topology.Topology` (an ordered chain of N tiers joined
+by N-1 links) and the same event loop runs it — per-tier service pools and
+bounded queues, per-link FIFO pipes, per-tier latency registries feeding
+one controller *boundary* each, and (with ``waterfall=True``) tier-by-tier
+overflow spill down the chain.  The default (no topology) is the paper's
+edge/cloud pair built from :class:`SimConfig`, which is bit-identical to
+the historical two-tier simulator: same RNG draw sequence, same event
+order, same R_t trajectory.
 
 Crucially the ``auto`` policy exercises the *real* controller from
 ``repro.core.offload`` (the same jitted code the live serving tier runs),
@@ -25,6 +35,7 @@ import numpy as np
 from repro.core import offload
 from repro.core.metrics import MetricsRegistry
 from repro.core.policy import AutoOffload, ControlLoop, Policy, PolicySpec
+from repro.core.topology import LinkSpec, TierSpec, Topology
 from repro.core.workloads import PROFILES, WorkloadProfile
 
 
@@ -53,6 +64,20 @@ class SimConfig:
     reject_latency_s: float = 0.005
     seed: int = 0
 
+    def default_topology(self) -> Topology:
+        """The paper's two-tier apparatus as a Topology (waterfall off:
+        edge overflow 503s, exactly the seed semantics)."""
+        return Topology(
+            tiers=(TierSpec("edge",
+                            slots=self.edge_instances
+                            * self.edge_slots_per_instance,
+                            queue_depth_per_slot=self.queue_depth_per_slot),
+                   TierSpec("cloud", slots=self.cloud_slots,
+                            queue_depth_per_slot=None)),
+            links=(LinkSpec(rtt_s=self.link_rtt_s,
+                            bandwidth_Bps=self.link_bandwidth_Bps),),
+            waterfall=False)
+
 
 @dataclasses.dataclass
 class SimResult:
@@ -62,23 +87,33 @@ class SimResult:
     failures: int
     times: np.ndarray              # (T,) metric timestamps
     latency_avg: np.ndarray        # (T,) mean completed latency per interval
-    cpu_util: np.ndarray           # (T,) edge busy fraction
-    mem_mb: np.ndarray             # (T,) edge resident memory
-    net_MBps: np.ndarray           # (T,) edge->cloud egress
-    offload_pct: np.ndarray        # (T,) controller output
+    cpu_util: np.ndarray           # (T,) ingress-tier busy fraction
+    mem_mb: np.ndarray             # (T,) ingress-tier resident memory
+    net_MBps: np.ndarray           # (T,) ingress link egress
+    offload_pct: np.ndarray        # (T,) ingress boundary controller output
+    # per-tier successful completions, in chain order
+    tier_counts: Dict[str, int] = dataclasses.field(default_factory=dict)
+    # requests that overflowed a tier and were spilled down the chain
+    spilled: int = 0
 
     def summary(self) -> Dict[str, float]:
-        return {
+        out = {
             "successes": self.successes,
             "failures": self.failures,
             "latency_avg": float(np.nanmean(self.latency_avg)),
             "cpu_peak": float(self.cpu_util.max(initial=0.0)),
             "net_peak_MBps": float(self.net_MBps.max(initial=0.0)),
         }
+        for name, n in self.tier_counts.items():
+            out[f"served_{name}"] = n
+        if self.spilled:
+            out["spilled"] = self.spilled
+        return out
 
 
-# Event kinds, ordered for deterministic tie-breaking.
-_ARRIVAL, _EDGE_DONE, _CLOUD_DONE, _CONTROL, _METRIC = range(5)
+# Event kinds, ordered for deterministic tie-breaking (ties never reach the
+# kind field — the monotone sequence number breaks them first).
+_ARRIVAL, _DONE, _CONTROL, _METRIC = range(4)
 
 
 def _service_sample(rng: np.random.Generator, mean: float, cv: float) -> float:
@@ -88,30 +123,89 @@ def _service_sample(rng: np.random.Generator, mean: float, cv: float) -> float:
     return float(rng.lognormal(mu, np.sqrt(sigma2)))
 
 
+def _tier_service_mean(prof: WorkloadProfile, topo: Topology, i: int) -> float:
+    """Resolve tier i's mean service time from the workload profile.
+
+    An explicit ``service_rate_mult`` scales relative to the profile's
+    edge speed; ``None`` means positional defaults — ingress runs at edge
+    speed, the deepest tier at cloud speed, intermediates interpolate
+    geometrically.
+    """
+    spec = topo.tiers[i]
+    if spec.service_rate_mult is not None:
+        return prof.edge_service_s / spec.service_rate_mult
+    if i == 0:
+        return prof.edge_service_s
+    last = len(topo.tiers) - 1
+    if i == last:
+        return prof.cloud_service_s
+    frac = i / last
+    return float(prof.edge_service_s
+                 * (prof.cloud_service_s / prof.edge_service_s) ** frac)
+
+
+class _SimTier:
+    """Mutable per-tier state inside one run."""
+
+    def __init__(self, spec: TierSpec, service_mean: float):
+        self.spec = spec
+        self.service_mean = service_mean
+        self.busy = 0
+        self.queue: Deque[Tuple[float]] = deque()   # (arrival_time,)
+        self.served = 0
+
+    @property
+    def queue_cap(self) -> Optional[int]:
+        if self.spec.queue_depth_per_slot is None:
+            return None
+        return self.spec.slots * self.spec.queue_depth_per_slot
+
+
 class ContinuumSimulator:
     """One workload, one policy, one run."""
 
     def __init__(self, workload: str, policy: PolicySpec,
                  cfg: SimConfig = SimConfig(),
-                 offload_cfg: Optional[offload.OffloadConfig] = None):
+                 offload_cfg: Optional[offload.OffloadConfig] = None,
+                 topology: Optional[Topology] = None):
         if workload not in PROFILES:
             raise ValueError(f"unknown workload {workload!r}")
         self.profile: WorkloadProfile = PROFILES[workload]
         self.cfg = cfg
         self.policy = policy
+        self.topology = topology or cfg.default_topology()
         self.rng = np.random.default_rng(cfg.seed)
-        self.metrics = MetricsRegistry([workload], capacity=max(cfg.window * 4, 256))
+        # One latency registry per non-terminal tier: registry b feeds
+        # controller boundary b.  (The deepest tier's latencies are not fed
+        # to Eq (1): the paper's strategy "uses the request latency metrics
+        # of all the functions running at the Edge".)
+        cap = max(cfg.window * 4, 256)
+        n_bounds = max(self.topology.num_tiers - 1, 1)
+        self.tier_metrics = [MetricsRegistry([workload], capacity=cap)
+                             for _ in range(n_bounds)]
+        self.metrics = self.tier_metrics[0]
         # The same Policy/ControlLoop objects the live runtime drives —
         # the simulator is the calibration harness, not a reimplementation.
-        self.policy_obj = Policy.parse(
-            policy, offload_cfg=offload_cfg or offload.OffloadConfig(),
-            link_bytes_per_s=cfg.link_bandwidth_Bps,
-            req_bytes=self.profile.payload_bytes)
+        # Each boundary parses the policy against ITS link's capacity, so
+        # auto+net caps offload by the link actually being crossed.
+        base_cfg = offload_cfg or offload.OffloadConfig()
+        links = (self.topology.links
+                 or (LinkSpec(rtt_s=cfg.link_rtt_s,
+                              bandwidth_Bps=cfg.link_bandwidth_Bps),))
+        boundary_policies = [
+            Policy.parse(policy, offload_cfg=base_cfg,
+                         link_bytes_per_s=links[min(b, len(links) - 1)]
+                         .bandwidth_Bps,
+                         req_bytes=self.profile.payload_bytes)
+            for b in range(max(self.topology.num_tiers - 1, 1))]
+        self.policy_obj = boundary_policies[0]
         self.offload_cfg = (self.policy_obj.cfg
                             if isinstance(self.policy_obj, AutoOffload)
-                            else offload_cfg or offload.OffloadConfig())
+                            else base_cfg)
         self.control = ControlLoop(self.policy_obj, 1, window=cfg.window,
-                                   control_interval_s=cfg.control_interval_s)
+                                   control_interval_s=cfg.control_interval_s,
+                                   num_tiers=self.topology.num_tiers,
+                                   boundary_policies=boundary_policies)
 
     # ------------------------------------------------------------------
     def _rate(self, t: float) -> float:
@@ -123,8 +217,28 @@ class ContinuumSimulator:
         frac = (t - c.ramp_start_s) / (c.ramp_end_s - c.ramp_start_s)
         return c.low_rps + frac * (c.high_rps - c.low_rps)
 
+    def _choose_tier(self, u: float, R_cur: np.ndarray) -> int:
+        """Pick a tier from one uniform draw and the per-boundary R_t.
+
+        Single-draw waterfall: cross boundary b iff ``u*100 < R_t[b]``,
+        then rescale u to the conditional uniform for the next boundary.
+        For two tiers this is exactly the historical coin flip
+        ``u * 100 < pct`` (bit-identical draw and comparison).
+        """
+        j, v = 0, u
+        for b in range(len(R_cur)):
+            pct = float(R_cur[b])
+            if v * 100.0 < pct:
+                j += 1
+                v = v * 100.0 / pct
+            else:
+                break
+        return j
+
     def run(self) -> SimResult:
-        cfg, prof = self.cfg, self.profile
+        cfg, prof, topo = self.cfg, self.profile, self.topology
+        N = topo.num_tiers
+        last = N - 1
         events: List[Tuple[float, int, int, tuple]] = []
         seq = itertools.count()
 
@@ -132,25 +246,31 @@ class ContinuumSimulator:
             heapq.heappush(events, (t, next(seq), kind, payload))
 
         # --- state ----------------------------------------------------
-        edge_slots = cfg.edge_instances * cfg.edge_slots_per_instance
-        edge_busy = 0
-        edge_queue: Deque[Tuple[float]] = deque()     # (arrival_time,)
-        cloud_busy = 0
-        cloud_queue: Deque[Tuple[float]] = deque()
-        link_free_at = 0.0
-        pct = float(self.control.R[0])
-        successes = failures = 0
-        arrivals_in_interval = 0
-        bytes_in_interval = 0.0
+        tiers = [_SimTier(spec, _tier_service_mean(prof, topo, i))
+                 for i, spec in enumerate(topo.tiers)]
+        link_free_at = [0.0] * len(topo.links)
+        link_bytes = [0.0] * len(topo.links)
+        # Per-boundary R_t for the tier chooser: exactly N-1 rows (empty
+        # for a single-tier chain — everything stays at the ingress;
+        # ControlLoop keeps one boundary row even then, which routing
+        # must not see).
+        R_cur = np.array(self.control.R_all[:N - 1, 0], np.float64)
+        successes = failures = spilled = 0
+        # Demand per boundary this interval: boundary b sees the requests
+        # that reached tier b (routing or spill) — what its net-aware cap
+        # divides the link capacity by.
+        n_bounds = self.control.num_boundaries
+        arrivals_in_interval = [0] * n_bounds
         completed_lat: List[float] = []
         busy_integral = 0.0
         last_busy_t = 0.0
+        ingress_slots = max(tiers[0].spec.slots, 1)
 
         ts, lat_s, cpu_s, mem_s, net_s, off_s = ([] for _ in range(6))
 
         def note_busy(t: float):
             nonlocal busy_integral, last_busy_t
-            busy_integral += edge_busy / max(edge_slots, 1) * (t - last_busy_t)
+            busy_integral += tiers[0].busy / ingress_slots * (t - last_busy_t)
             last_busy_t = t
 
         # --- seed events ------------------------------------------------
@@ -158,18 +278,44 @@ class ContinuumSimulator:
         push(cfg.control_interval_s, _CONTROL)
         push(cfg.metric_interval_s, _METRIC)
 
-        def start_edge(t: float, arr: float):
-            nonlocal edge_busy, successes, failures
-            note_busy(t)
-            edge_busy += 1
-            svc = _service_sample(self.rng, prof.edge_service_s, prof.cv)
-            push(t + svc, _EDGE_DONE, (arr,))
+        def start_service(j: int, ready: float, arr: float):
+            tier = tiers[j]
+            if j == 0:
+                note_busy(ready)
+            tier.busy += 1
+            svc = _service_sample(self.rng, tier.service_mean, prof.cv)
+            push(ready + svc, _DONE, (j, arr))
 
-        def start_cloud(t: float, arr: float):
-            nonlocal cloud_busy
-            cloud_busy += 1
-            svc = _service_sample(self.rng, prof.cloud_service_s, prof.cv)
-            push(t + svc, _CLOUD_DONE, (arr,))
+        def cross_link(l: int, ready: float) -> float:
+            """Serialize one payload over link l (FIFO pipe model:
+            saturation shows up as link_free_at running ahead of time)."""
+            xfer = prof.payload_bytes / topo.links[l].bandwidth_Bps
+            start = max(ready, link_free_at[l])
+            link_free_at[l] = start + xfer
+            link_bytes[l] += prof.payload_bytes
+            return link_free_at[l] + topo.links[l].rtt_s
+
+        def admit(j: int, ready: float, arr: float):
+            """Hand a request to tier j; overflow spills down the chain
+            (waterfall) or rejects, per the topology."""
+            nonlocal failures, spilled
+            tier = tiers[j]
+            cap = tier.queue_cap
+            if tier.busy < tier.spec.slots:
+                start_service(j, ready, arr)
+            elif cap is None or len(tier.queue) < cap:
+                tier.queue.append((arr,))
+            elif topo.waterfall and j < last:
+                spilled += 1
+                if j + 1 < n_bounds:
+                    arrivals_in_interval[j + 1] += 1
+                admit(j + 1, cross_link(j, ready), arr)
+            else:
+                # queue-proxy overflow: immediate 503
+                failures += 1
+                if j < last:
+                    self.tier_metrics[j].record_latency(
+                        prof.name, cfg.reject_latency_s)
 
         while events:
             t, _, kind, payload = heapq.heappop(events)
@@ -177,116 +323,102 @@ class ContinuumSimulator:
                 break
 
             if kind == _ARRIVAL:
-                arrivals_in_interval += 1
-                to_cloud = self.rng.uniform() * 100.0 < pct
-                if to_cloud:
-                    # Serialize over the shared link (FIFO pipe model):
-                    # saturation shows up as link_free_at running ahead of t.
-                    xfer = prof.payload_bytes / cfg.link_bandwidth_Bps
-                    start = max(t, link_free_at)
-                    link_free_at = start + xfer
-                    bytes_in_interval += prof.payload_bytes
-                    ready = link_free_at + cfg.link_rtt_s
-                    if cloud_busy < cfg.cloud_slots:
-                        start_cloud(ready, t)
-                    else:
-                        cloud_queue.append((t,))
-                else:
-                    if edge_busy < edge_slots:
-                        start_edge(t, t)
-                    elif len(edge_queue) < edge_slots * cfg.queue_depth_per_slot:
-                        edge_queue.append((t,))
-                    else:
-                        # queue-proxy overflow: immediate 503
-                        failures += 1
-                        self.metrics.record_latency(prof.name, cfg.reject_latency_s)
+                j = self._choose_tier(self.rng.uniform(), R_cur)
+                for b in range(min(j + 1, n_bounds)):
+                    arrivals_in_interval[b] += 1
+                ready = t
+                for l in range(j):
+                    ready = cross_link(l, ready)
+                admit(j, ready, t)
                 push(t + self.rng.exponential(1.0 / self._rate(t)), _ARRIVAL)
 
-            elif kind == _EDGE_DONE:
-                (arr,) = payload
-                note_busy(t)
-                edge_busy -= 1
+            elif kind == _DONE:
+                j, arr = payload
+                tier = tiers[j]
+                if j == 0:
+                    note_busy(t)
+                tier.busy -= 1
                 lat = t - arr
                 # Prometheus sees every completed request's latency,
                 # successful or not; only the success *counter* is gated.
-                self.metrics.record_latency(prof.name, lat)
+                if j < last:
+                    self.tier_metrics[j].record_latency(prof.name, lat)
                 if lat <= cfg.timeout_s:
                     successes += 1
+                    tier.served += 1
                     completed_lat.append(lat)
                 else:
                     failures += 1
                 # admit next from queue, dropping timed-out waiters
-                while edge_queue:
-                    (qarr,) = edge_queue.popleft()
+                while tier.queue:
+                    (qarr,) = tier.queue.popleft()
                     if t - qarr > cfg.timeout_s:
                         failures += 1
-                        self.metrics.record_latency(prof.name, t - qarr)
+                        if j < last:
+                            self.tier_metrics[j].record_latency(
+                                prof.name, t - qarr)
                         continue
-                    start_edge(t, qarr)
-                    break
-
-            elif kind == _CLOUD_DONE:
-                (arr,) = payload
-                cloud_busy -= 1
-                lat = t - arr
-                if lat <= cfg.timeout_s:
-                    successes += 1
-                    completed_lat.append(lat)
-                    # Cloud latencies are *not* fed to Eq (1): the paper's
-                    # strategy "uses the request latency metrics of all the
-                    # functions running at the Edge".
-                else:
-                    failures += 1
-                while cloud_queue:
-                    (qarr,) = cloud_queue.popleft()
-                    if t - qarr > cfg.timeout_s:
-                        failures += 1
-                        continue
-                    start_cloud(t, qarr)
+                    start_service(j, t, qarr)
                     break
 
             elif kind == _CONTROL:
-                # One shared scrape-and-update cycle (ControlLoop): latency
-                # windows + in-flight queue-age mixing + demand RPS — the
-                # same code path the live EdgeCloudContinuum ticks.
-                lat, valid = self.metrics.latency_windows(cfg.window)
-                ages = [t - qarr for (qarr,) in edge_queue]
-                R = self.control.step(lat, valid, queue_ages=[ages],
-                                      arrivals=[arrivals_in_interval])
-                pct = float(R[0])
+                # One shared scrape-and-update cycle (ControlLoop) per
+                # boundary: tier b's latency windows + its in-flight
+                # queue-age mixing + demand RPS — the same code path the
+                # live continuum ticks.
+                lats, valids, qages = [], [], []
+                for b in range(self.control.num_boundaries):
+                    lat, valid = self.tier_metrics[b].latency_windows(
+                        cfg.window)
+                    lats.append(lat)
+                    valids.append(valid)
+                    bq = tiers[b].queue if b < len(tiers) else ()
+                    qages.append([[t - qarr for (qarr,) in bq]])
+                R_all = self.control.step_tiers(
+                    lats, valids, queue_ages=qages,
+                    arrivals=[[c] for c in arrivals_in_interval])
+                R_cur = np.array(R_all[:N - 1, 0], np.float64)
                 push(t + cfg.control_interval_s, _CONTROL)
-                arrivals_in_interval = 0
+                arrivals_in_interval = [0] * n_bounds
 
             elif kind == _METRIC:
                 note_busy(t)
                 ts.append(t)
-                lat_s.append(float(np.mean(completed_lat)) if completed_lat else np.nan)
+                lat_s.append(float(np.mean(completed_lat))
+                             if completed_lat else np.nan)
                 completed_lat.clear()
                 cpu_s.append(busy_integral / cfg.metric_interval_s)
                 busy_integral = 0.0
-                active = edge_busy + len(edge_queue)
+                active = tiers[0].busy + len(tiers[0].queue)
                 mem_s.append(cfg.mem_baseline_mb + active * prof.mem_mb)
-                net_s.append(bytes_in_interval / cfg.metric_interval_s / 1e6)
-                bytes_in_interval = 0.0
-                off_s.append(pct)
+                net_s.append((link_bytes[0] if link_bytes else 0.0)
+                             / cfg.metric_interval_s / 1e6)
+                if link_bytes:
+                    link_bytes[0] = 0.0
+                off_s.append(float(R_cur[0]) if len(R_cur) else 0.0)
                 push(t + cfg.metric_interval_s, _METRIC)
 
         # Drain: everything still queued at the end never completed.
-        failures += len(edge_queue) + len(cloud_queue) + edge_busy + cloud_busy
+        failures += sum(len(tr.queue) + tr.busy for tr in tiers)
 
         return SimResult(
             policy=str(self.policy), workload=prof.name,
             successes=successes, failures=failures,
             times=np.asarray(ts), latency_avg=np.asarray(lat_s),
             cpu_util=np.asarray(cpu_s), mem_mb=np.asarray(mem_s),
-            net_MBps=np.asarray(net_s), offload_pct=np.asarray(off_s))
+            net_MBps=np.asarray(net_s), offload_pct=np.asarray(off_s),
+            tier_counts={tr.spec.name: tr.served for tr in tiers},
+            spilled=spilled)
 
 
 def run_policy_sweep(workload: str,
                      policies=(0.0, 25.0, 50.0, 75.0, 100.0, "auto"),
-                     cfg: SimConfig = SimConfig()) -> Dict[str, SimResult]:
+                     cfg: SimConfig = SimConfig(),
+                     topology: Optional[Topology] = None
+                     ) -> Dict[str, SimResult]:
     """The paper's Table 2 row for one workload."""
     out: Dict[str, SimResult] = {}
     for p in policies:
-        out[str(p)] = ContinuumSimulator(workload, p, cfg).run()
+        out[str(p)] = ContinuumSimulator(workload, p, cfg,
+                                         topology=topology).run()
     return out

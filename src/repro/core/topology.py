@@ -1,0 +1,189 @@
+"""Declarative N-tier continuum topologies.
+
+The paper's platform is an edge-cloud *continuum*, but real hybrid
+serverless deployments span device -> edge -> regional -> cloud chains
+with heterogeneous links (Castro et al. 2022; Batool et al. 2025).  This
+module is the single description both deployments of the platform consume:
+
+  * :class:`TierSpec`  — one serving location: name, concurrent slots,
+    context budget, autoscaling bounds, and (for the simulator) a
+    service-rate multiplier plus a bounded queue depth.
+  * :class:`LinkSpec`  — the hop between adjacent tiers: RTT and a
+    bandwidth cap that cloud-ward requests serialize over.
+  * :class:`Topology`  — an ordered chain of N tiers joined by N-1 links,
+    with ingress at tier 0.  ``waterfall=True`` lets a tier spill its
+    overflow down the chain instead of rejecting (each tier offloads its
+    excess to the next — the N-tier generalization of the paper's single
+    edge->cloud offload decision).
+
+The historical two-tier API (``Continuum(edge=..., cloud=...)``) is sugar
+over :meth:`Topology.pair`, which builds a 2-tier chain with waterfall
+*disabled* so the seed semantics (queue-proxy overflow 503s feed Eq (1)'s
+bimodality) — and hence the R_t trajectories — are preserved exactly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional, Sequence, Tuple
+
+from repro.core.replication import AutoscalingPolicy
+
+
+@dataclasses.dataclass(frozen=True)
+class TierSpec:
+    """One serving location in the chain.
+
+    ``slots``/``max_len``/``autoscaling``/window fields drive the live
+    runtime (a tier is an :class:`~repro.serving.tiers.Tier` of Endpoint
+    pools); ``service_rate_mult``/``queue_depth_per_slot`` drive the
+    simulator:
+
+      * ``service_rate_mult`` — service speed relative to the workload
+        profile's *edge* service time (``mean = edge_service_s / mult``;
+        a device tier at 0.5 is twice as slow as the edge).  ``None``
+        means "profile default for this position": the ingress tier runs
+        at the profile's edge speed, the deepest tier at the profile's
+        cloud speed, and intermediate tiers interpolate geometrically.
+      * ``queue_depth_per_slot`` — bounded per-slot request queue
+        (Knative queue-proxy semantics); ``None`` = unbounded (the
+        elastic cloud).
+    """
+
+    name: str
+    slots: int = 4
+    max_len: int = 256
+    # synthetic per-request overhead paid at this tier (e.g. WAN RTT)
+    extra_latency_s: float = 0.0
+    # per-tier KPA bounds; when set they override each function's spec on
+    # this tier (e.g. pin an intermediate tier to zero with max_scale=0)
+    autoscaling: Optional[AutoscalingPolicy] = None
+    stable_window_s: float = 60.0
+    panic_window_s: float = 6.0
+    # --- simulator-only knobs -------------------------------------------
+    service_rate_mult: Optional[float] = None
+    queue_depth_per_slot: Optional[int] = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkSpec:
+    """The hop between tier i and tier i+1 (FIFO pipe model: transfers
+    serialize; saturation shows up as the link running ahead of time)."""
+
+    rtt_s: float = 0.04
+    bandwidth_Bps: float = 100e6
+
+
+class Topology:
+    """An ordered chain of N tiers joined by N-1 links, ingress at tier 0."""
+
+    def __init__(self, tiers: Sequence[TierSpec],
+                 links: Optional[Sequence[LinkSpec]] = None,
+                 waterfall: bool = True):
+        tiers = tuple(tiers)
+        if not tiers:
+            raise ValueError("topology needs at least one tier")
+        names = [t.name for t in tiers]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate tier names in {names}")
+        for t in tiers:
+            if not isinstance(t, TierSpec):
+                raise TypeError(f"expected TierSpec, got {type(t).__name__}")
+            if t.slots < 0:
+                raise ValueError(f"tier {t.name!r}: negative slots")
+            if t.service_rate_mult is not None and t.service_rate_mult <= 0:
+                raise ValueError(
+                    f"tier {t.name!r}: service_rate_mult must be > 0")
+            if (t.queue_depth_per_slot is not None
+                    and t.queue_depth_per_slot < 0):
+                raise ValueError(
+                    f"tier {t.name!r}: negative queue_depth_per_slot")
+        if links is None:
+            links = tuple(LinkSpec() for _ in tiers[1:])
+        links = tuple(links)
+        if len(links) != len(tiers) - 1:
+            raise ValueError(
+                f"{len(tiers)} tiers need {len(tiers) - 1} links, "
+                f"got {len(links)}")
+        for i, l in enumerate(links):
+            if l.rtt_s < 0:
+                raise ValueError(f"link {i}: negative RTT")
+            if l.bandwidth_Bps <= 0:
+                raise ValueError(f"link {i}: bandwidth must be > 0")
+        self.tiers: Tuple[TierSpec, ...] = tiers
+        self.links: Tuple[LinkSpec, ...] = links
+        self.waterfall = bool(waterfall)
+
+    # -- chain protocol ----------------------------------------------------
+    @property
+    def num_tiers(self) -> int:
+        return len(self.tiers)
+
+    @property
+    def names(self) -> Tuple[str, ...]:
+        return tuple(t.name for t in self.tiers)
+
+    def index(self, name: str) -> int:
+        return self.names.index(name)
+
+    def __len__(self) -> int:
+        return len(self.tiers)
+
+    def __iter__(self) -> Iterator[TierSpec]:
+        return iter(self.tiers)
+
+    def __repr__(self) -> str:
+        chain = " -> ".join(self.names)
+        return (f"Topology({chain}, waterfall={self.waterfall})")
+
+    # -- constructors ------------------------------------------------------
+    @classmethod
+    def pair(cls, edge, cloud, link: Optional[LinkSpec] = None) -> "Topology":
+        """The historical two-tier continuum as a Topology.
+
+        Accepts :class:`TierSpec` or the legacy ``TierConfig`` shape (any
+        object with ``slots``/``max_len``/... attributes).  Waterfall is
+        disabled: a full edge queue rejects (503) rather than spilling —
+        the seed semantics Eq (1) keys on.
+        """
+        return cls(tiers=(_as_spec(edge, "edge"), _as_spec(cloud, "cloud")),
+                   links=(link or LinkSpec(),), waterfall=False)
+
+    @classmethod
+    def device_edge_cloud(cls, device_slots: int = 2, edge_slots: int = 4,
+                          cloud_slots: int = 64, max_len: int = 256,
+                          autoscaling: Optional[AutoscalingPolicy] = None
+                          ) -> "Topology":
+        """The canonical 3-tier example: on-device -> edge site -> cloud.
+
+        The device tier is half the edge's speed behind a short LAN hop;
+        the cloud sits behind the paper's 100 MB/s WAN link.
+        """
+        return cls(
+            tiers=(TierSpec("device", slots=device_slots, max_len=max_len,
+                            autoscaling=autoscaling,
+                            service_rate_mult=0.5, queue_depth_per_slot=4),
+                   TierSpec("edge", slots=edge_slots, max_len=max_len,
+                            autoscaling=autoscaling,
+                            service_rate_mult=1.0, queue_depth_per_slot=8),
+                   TierSpec("cloud", slots=cloud_slots, max_len=max_len,
+                            autoscaling=autoscaling,
+                            service_rate_mult=None,
+                            queue_depth_per_slot=None)),
+            links=(LinkSpec(rtt_s=0.005, bandwidth_Bps=50e6),
+                   LinkSpec(rtt_s=0.04, bandwidth_Bps=100e6)),
+            waterfall=True)
+
+
+def _as_spec(obj, name: str) -> TierSpec:
+    """Coerce a TierSpec or legacy TierConfig-shaped object to a TierSpec."""
+    if isinstance(obj, TierSpec):
+        return obj
+    return TierSpec(
+        name=name,
+        slots=obj.slots,
+        max_len=obj.max_len,
+        extra_latency_s=getattr(obj, "extra_latency_s", 0.0),
+        autoscaling=getattr(obj, "autoscaling", None),
+        stable_window_s=getattr(obj, "stable_window_s", 60.0),
+        panic_window_s=getattr(obj, "panic_window_s", 6.0))

@@ -1,14 +1,18 @@
-"""Two-tier serving driver (``python -m repro.launch.serve``).
+"""Continuum serving driver (``python -m repro.launch.serve``).
 
-Boots the Edge-Cloud continuum through the ``repro.platform.Continuum``
-facade with a weak edge tier and a strong cloud tier, deploys one or more
-(smoke-size) model endpoints via the replication controller, pushes a
-ramped open-loop request stream through the edge gateway, and reports how
-the traffic policy reacted — a live, CPU-runnable version of the paper's
-testbed experiment, served by the batched wave scheduler.
+Boots the continuum through the ``repro.platform.Continuum`` facade —
+either the classic weak-edge/strong-cloud pair, or (with
+``--device-slots``) a 3-tier device/edge/cloud chain — deploys one or
+more (smoke-size) model endpoints via the replication controller, pushes
+a ramped open-loop request stream through the ingress gateway, and
+reports how the traffic policy reacted per tier — a live, CPU-runnable
+version of the paper's testbed experiment, served by the batched wave
+scheduler.
 
     PYTHONPATH=src python -m repro.launch.serve --arch stablelm-1.6b \
         --rounds 30 --rps-low 2 --rps-high 12 --policy auto
+    PYTHONPATH=src python -m repro.launch.serve --device-slots 1 \
+        --rounds 20 --policy auto
 """
 
 from __future__ import annotations
@@ -22,7 +26,8 @@ from repro import configs
 from repro.core import offload
 from repro.core.replication import AutoscalingPolicy, FunctionSpec
 from repro.models import model_zoo
-from repro.platform import Continuum, Request, TierConfig
+from repro.platform import (Continuum, LinkSpec, Request, TierConfig,
+                            TierSpec, Topology)
 
 
 def main():
@@ -34,6 +39,9 @@ def main():
     ap.add_argument("--rps-high", type=float, default=8.0)
     ap.add_argument("--edge-slots", type=int, default=2)
     ap.add_argument("--cloud-slots", type=int, default=16)
+    ap.add_argument("--device-slots", type=int, default=0,
+                    help="> 0 adds an on-device ingress tier in front of "
+                         "the edge (3-tier device/edge/cloud chain)")
     ap.add_argument("--max-new", type=int, default=4)
     ap.add_argument("--policy", default="auto",
                     help="traffic policy: 0..100 | auto | auto+net | "
@@ -47,18 +55,32 @@ def main():
     params = model_zoo.init(jax.random.PRNGKey(args.seed), cfg)
 
     policy = "auto+net" if args.net_aware else args.policy
-    cc = Continuum(
-        edge=TierConfig(slots=args.edge_slots, max_len=64),
-        cloud=TierConfig(slots=args.cloud_slots, max_len=64,
-                         extra_latency_s=0.02),
-        policy=policy, offload_cfg=offload.OffloadConfig(),
-        seed=args.seed)
+    if args.device_slots > 0:
+        topo = Topology(
+            tiers=(TierSpec("device", slots=args.device_slots, max_len=64),
+                   TierSpec("edge", slots=args.edge_slots, max_len=64,
+                            extra_latency_s=0.005),
+                   TierSpec("cloud", slots=args.cloud_slots, max_len=64,
+                            extra_latency_s=0.02)),
+            links=(LinkSpec(rtt_s=0.005, bandwidth_Bps=50e6),
+                   LinkSpec(rtt_s=0.04, bandwidth_Bps=100e6)))
+        cc = Continuum.from_topology(
+            topo, policy=policy, offload_cfg=offload.OffloadConfig(),
+            seed=args.seed)
+    else:
+        cc = Continuum(
+            edge=TierConfig(slots=args.edge_slots, max_len=64),
+            cloud=TierConfig(slots=args.cloud_slots, max_len=64,
+                             extra_latency_s=0.02),
+            policy=policy, offload_cfg=offload.OffloadConfig(),
+            seed=args.seed)
     spec = FunctionSpec(name=args.arch, arch=args.arch, revision=1,
                         autoscaling=AutoscalingPolicy())
     cc.deploy(spec, cfg, params)
 
     rng = np.random.default_rng(args.seed)
     rid = 0
+    names = [t.name for t in cc.tiers]
     for rnd in range(args.rounds):
         frac = min(rnd / max(args.rounds * 0.5, 1), 1.0)
         rps = args.rps_low + (args.rps_high - args.rps_low) * frac
@@ -69,16 +91,18 @@ def main():
                                          max_new=args.max_new))
             rid += 1
         rec = cc.tick()
-        print(f"round={rnd:3d} rps={rps:5.1f} queued={n:3d} "
-              f"edge={rec['edge']:3d} cloud={rec['cloud']:3d} "
+        per_tier = " ".join(f"{nm}={rec['tiers'][nm]:3d}" for nm in names)
+        print(f"round={rnd:3d} rps={rps:5.1f} queued={n:3d} {per_tier} "
               f"waves={rec['waves']:2d} R_t={rec['R']:5.1f}%")
 
-    total_edge = sum(r["edge"] for r in cc.log)
-    total_cloud = sum(r["cloud"] for r in cc.log)
+    totals = {nm: sum(r["tiers"][nm] for r in cc.log) for nm in names}
+    total = sum(totals.values())
     waves = sum(r["waves"] for r in cc.log)
-    print(f"\nserved edge={total_edge} cloud={total_cloud} "
-          f"offload_frac={total_cloud / max(total_edge + total_cloud, 1):.2f} "
-          f"reqs_per_wave={(total_edge + total_cloud) / max(waves, 1):.1f}")
+    per_tier = " ".join(f"{nm}={n}" for nm, n in totals.items())
+    off = total - totals[names[0]]
+    print(f"\nserved {per_tier} "
+          f"offload_frac={off / max(total, 1):.2f} "
+          f"reqs_per_wave={total / max(waves, 1):.1f}")
 
 
 if __name__ == "__main__":

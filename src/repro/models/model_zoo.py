@@ -61,8 +61,9 @@ def loss(cfg: ModelConfig, params: Params, batch) :
     return transformer.loss_fn(cfg, params, batch, family(cfg).layer_fn)
 
 
-def prefill(cfg: ModelConfig, params: Params, batch, cache):
-    return transformer.prefill(cfg, params, batch, cache, family(cfg).layer_fn)
+def prefill(cfg: ModelConfig, params: Params, batch, cache, lengths=None):
+    return transformer.prefill(cfg, params, batch, cache, family(cfg).layer_fn,
+                               lengths=lengths)
 
 
 def decode(cfg: ModelConfig, params: Params, cache, tokens, t):

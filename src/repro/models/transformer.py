@@ -434,11 +434,23 @@ def init_cache(cfg: ModelConfig, batch_size: int, max_len: int,
 
 
 def prefill(cfg: ModelConfig, params: Params, batch: Dict[str, jax.Array],
-            cache: Cache, layer_fn: LayerFn = dense_layer):
-    """Full-sequence forward; fills the cache. Returns (last_logits, cache)."""
+            cache: Cache, layer_fn: LayerFn = dense_layer,
+            lengths: Optional[jax.Array] = None):
+    """Full-sequence forward; fills the cache. Returns (last_logits, cache).
+
+    ``lengths`` (B,) selects each row's true last prompt position when the
+    batch is right-padded to a shared bucket length (causal masking keeps
+    positions < length unaffected by the padding; padded cache positions
+    carry pos > t and are masked until decode overwrites them).
+    """
     emb, positions = assemble_embeds(cfg, params, batch)
     x, cache, _ = forward(cfg, params, emb, positions, cache, "prefill", layer_fn)
-    logits = output_head(cfg, params, x[:, -1:])
+    if lengths is None:
+        xl = x[:, -1:]
+    else:
+        idx = jnp.clip(jnp.asarray(lengths, jnp.int32) - 1, 0, x.shape[1] - 1)
+        xl = jnp.take_along_axis(x, idx[:, None, None], axis=1)
+    logits = output_head(cfg, params, xl)
     return logits[:, 0], cache
 
 

@@ -1,28 +1,41 @@
 """``repro.platform`` — the one front door to the continuum.
 
 Every deployment of the paper's platform — the discrete-event simulator
-(§4, Table 2 / Figure 2) and the live two-tier serving runtime — is
-driven by the same :class:`repro.core.policy.Policy` objects through the
-same :class:`repro.core.policy.ControlLoop`.  This facade is the single
-entry point the launchers, examples and benchmarks use:
+(§4, Table 2 / Figure 2) and the live N-tier serving runtime — is driven
+by the same :class:`repro.core.policy.Policy` objects through the same
+:class:`repro.core.policy.ControlLoop`, over the same declarative
+:class:`repro.core.topology.Topology`.  This facade is the single entry
+point the launchers, examples and benchmarks use:
 
-    from repro.platform import Continuum, TierConfig
+    from repro.platform import Continuum, TierConfig, Topology, TierSpec
 
-    # live: deploy models, submit requests, tick the batched scheduler
+    # live, two-tier sugar: deploy models, submit requests, tick
     cc = Continuum(edge=TierConfig(slots=2), cloud=TierConfig(slots=16),
                    policy="auto")
     cc.deploy(spec, model_cfg, params)
     cc.submit("fn", request)
     cc.tick()
 
-    # simulated: the paper's testbed, same policy objects
+    # live, N-tier: declare the chain explicitly
+    topo = Topology(tiers=(TierSpec("device", slots=1),
+                           TierSpec("edge", slots=4),
+                           TierSpec("cloud", slots=16)),
+                    links=(LinkSpec(rtt_s=0.005), LinkSpec(rtt_s=0.04)))
+    cc = Continuum.from_topology(topo, policy="auto")
+
+    # simulated: the paper's testbed, same policy objects, any topology
     res = Continuum.simulate("matmult", policy="auto+net")
+    res3 = Continuum.simulate("matmult", "auto",
+                              topology=Topology.device_edge_cloud())
     table = Continuum.sweep("matmult", policies=(0.0, 50.0, "auto"))
 
 Policy shorthands accepted everywhere: a number in [0, 100] (static
 split), ``"auto"`` (paper Eqs (1)-(4)), ``"auto+net"`` (link-capacity
 cap), ``"auto+hedge"`` (p99 straggler hedging), or any
-:class:`~repro.core.policy.Policy` instance.
+:class:`~repro.core.policy.Policy` instance.  Over N tiers, each boundary
+runs the same controller and the per-boundary R_t compose into a routing
+distribution (waterfall offloading); two tiers reduce to the paper's
+single scalar R_t exactly.
 """
 
 from __future__ import annotations
@@ -34,11 +47,13 @@ from repro.core.policy import (AutoOffload, ControlLoop, HedgedOffload,
                                NetAwareOffload, Policy, PolicySpec,
                                StaticSplit)
 from repro.core.simulator import ContinuumSimulator, SimConfig, SimResult
+from repro.core.topology import LinkSpec, TierSpec, Topology
 from repro.serving.engine import Request
 from repro.serving.tiers import EdgeCloudContinuum, TierConfig
 
 __all__ = [
-    "Continuum", "TierConfig", "SimConfig", "SimResult", "Request",
+    "Continuum", "TierConfig", "TierSpec", "LinkSpec", "Topology",
+    "SimConfig", "SimResult", "Request",
     "Policy", "StaticSplit", "AutoOffload", "NetAwareOffload",
     "HedgedOffload", "ControlLoop",
 ]
@@ -53,19 +68,30 @@ class Continuum(EdgeCloudContinuum):
     """
 
     @classmethod
+    def from_topology(cls, topology: Topology, policy: PolicySpec = "auto",
+                      **kwargs) -> "Continuum":
+        """The live runtime over an explicit N-tier chain."""
+        return cls(policy=policy, topology=topology, **kwargs)
+
+    @classmethod
     def simulate(cls, workload: str, policy: PolicySpec,
                  cfg: Optional[SimConfig] = None,
-                 offload_cfg: Optional[offload.OffloadConfig] = None
+                 offload_cfg: Optional[offload.OffloadConfig] = None,
+                 topology: Optional[Topology] = None
                  ) -> SimResult:
-        """One simulator run of ``workload`` under ``policy``."""
+        """One simulator run of ``workload`` under ``policy`` (over the
+        paper's 2-tier apparatus, or any explicit ``topology``)."""
         return ContinuumSimulator(workload, policy, cfg or SimConfig(),
-                                  offload_cfg=offload_cfg).run()
+                                  offload_cfg=offload_cfg,
+                                  topology=topology).run()
 
     @classmethod
     def sweep(cls, workload: str,
               policies: Sequence[PolicySpec] = (0.0, 25.0, 50.0, 75.0,
                                                 100.0, "auto"),
-              cfg: Optional[SimConfig] = None) -> Dict[str, SimResult]:
+              cfg: Optional[SimConfig] = None,
+              topology: Optional[Topology] = None) -> Dict[str, SimResult]:
         """The paper's Table 2 row for one workload."""
         cfg = cfg or SimConfig()
-        return {str(p): cls.simulate(workload, p, cfg) for p in policies}
+        return {str(p): cls.simulate(workload, p, cfg, topology=topology)
+                for p in policies}

@@ -76,11 +76,13 @@ class Endpoint:
     """
 
     def __init__(self, cfg: ModelConfig, params, *, slots: int = 8,
-                 max_len: int = 256, donate: bool = True):
+                 max_len: int = 256, donate: bool = True,
+                 bucket_prefill: bool = True):
         self.cfg = cfg
         self.params = params
         self.slots = slots
         self.max_len = max_len
+        self.bucket_prefill = bucket_prefill
         self.cache = model_zoo.init_cache(cfg, slots, max_len)
         self.slot_pos = np.zeros(slots, np.int32)          # next position
         self.slot_free = [True] * slots
@@ -107,19 +109,55 @@ class Endpoint:
         def _restore_slot(cache, snap, slot):
             return _rows(cache, snap, slot)
 
-        # ``donate`` governs both jitted steps: each call consumes the old
-        # cache buffer (we always rebind ``self.cache`` to the result).
+        def _prefill_fresh(params, tokens, pool, slot_arr, lengths):
+            """Bucketed prefill: run the group on a *fresh* small cache
+            (batch = pow2 bucket, not the full pool) and scatter only the
+            claimed rows back, so other slots are never touched — no
+            snapshot/restore protection needed."""
+            small = model_zoo.init_cache(cfg, tokens.shape[0], max_len)
+            logits, small = model_zoo.prefill(cfg, params, {"tokens": tokens},
+                                              small, lengths=lengths)
+            G = slot_arr.shape[0]
+            pool_leaves, treedef = jax.tree_util.tree_flatten(pool)
+            small_leaves = jax.tree_util.tree_leaves(small)
+            out = []
+            for pl, sl, ax in zip(pool_leaves, small_leaves, batch_axes):
+                if ax is None:
+                    out.append(pl)
+                    continue
+                rows = jax.lax.slice_in_dim(sl, 0, G, axis=ax)
+                idx = (slice(None),) * ax + (slot_arr,)
+                out.append(pl.at[idx].set(rows))
+            return logits, jax.tree_util.tree_unflatten(treedef, out)
+
+        # ``donate`` governs every jitted step that consumes the cache
+        # (we always rebind ``self.cache`` to the result).
         dn = (2,) if donate else ()
         self._prefill = jax.jit(_prefill, donate_argnums=dn)
+        self._prefill_fresh = jax.jit(_prefill_fresh, donate_argnums=dn)
         self._decode = jax.jit(_decode, donate_argnums=(1,) if donate else ())
         self._reset = jax.jit(_reset_slot, donate_argnums=(0,) if donate else ())
         self._restore = jax.jit(_restore_slot,
                                 donate_argnums=(0,) if donate else ())
+        # Length padding is sound only for the dense family: causal
+        # masking hides padded positions there, but recurrent state
+        # threads through every token, and MoE expert capacity is
+        # sequence-global (C scales with padded S and padding tokens
+        # compete for expert slots, perturbing real-token logits).  It
+        # must also stay below any rolling-window width (padding must not
+        # wrap over live keys).
+        self._pad_len = cfg.family == "dense"
+        self._len_cap = max_len
+        if cfg.sliding_window is not None:
+            self._len_cap = min(self._len_cap, cfg.sliding_window)
         # Attention caches are self-healing on slot reuse (a cache index is
         # always overwritten at position == index before any query can
         # attend it), so only families that thread recurrent state through
-        # prefill need their rows scrubbed between requests.
-        self._reset_on_claim = cfg.family not in ("dense", "moe")
+        # prefill need their rows scrubbed between requests — and only on
+        # the legacy full-pool path; the bucketed path always prefills
+        # rows from a fresh cache.
+        self._reset_on_claim = (cfg.family not in ("dense", "moe")
+                                and not bucket_prefill)
 
     # -- slot management ---------------------------------------------------
     def try_claim(self) -> Optional[int]:
@@ -160,12 +198,62 @@ class Endpoint:
     def prefill_batch(self, prompts: Dict[int, np.ndarray]) -> Dict[int, int]:
         """Pack multiple claimed slots' prompts into shared prefill calls.
 
-        Prompts of equal length share one jitted prefill at batch=slots
-        (continuous batching's admission step); distinct lengths run one
-        call per length — recurrent families thread per-row state token by
-        token, so rows cannot be padded to a common length without
-        polluting that state. Returns slot -> first generated token.
+        Prompts are grouped by length; each group runs one jitted prefill
+        at a power-of-two *bucketed* batch (next pow2 >= group size, capped
+        at the pool) on a fresh cache whose rows are scattered into the
+        pool — small waves stop paying full-pool prefill cost, and a
+        handful of compiled shapes are reused.  Pure-attention families
+        additionally right-pad each group to a power-of-two length (causal
+        masking keeps the padded tail inert).  Recurrent families thread
+        per-row state token by token, so their rows are never length-padded.
+        Returns slot -> first generated token.
         """
+        if self.bucket_prefill:
+            return self._prefill_batch_bucketed(prompts)
+        return self._prefill_batch_padded(prompts)
+
+    def _prefill_batch_bucketed(self,
+                                prompts: Dict[int, np.ndarray]
+                                ) -> Dict[int, int]:
+        by_len: Dict[int, List[Tuple[int, np.ndarray]]] = {}
+        for slot, toks in prompts.items():
+            by_len.setdefault(len(toks), []).append((slot, toks))
+        out: Dict[int, int] = {}
+        for L, group in sorted(by_len.items()):
+            G = len(group)
+            Bp = min(self.slots, max(1, 1 << (G - 1).bit_length()))
+            Lb = L
+            if self._pad_len:
+                cand = 1 << max(L - 1, 0).bit_length()
+                if L <= cand <= self._len_cap:
+                    Lb = cand
+            # Pad batch rows AND the scatter index to the pow2 bucket by
+            # duplicating the last real row: jit then only ever sees
+            # power-of-two shapes, and the duplicate scatter writes carry
+            # identical row values (rows are batch-independent), so the
+            # overlapping update is value-deterministic.
+            tok = np.zeros((Bp, Lb), np.int32)
+            slot_arr = np.zeros(Bp, np.int32)
+            for i in range(Bp):
+                slot, toks = group[min(i, G - 1)]
+                tok[i, :L] = toks
+                slot_arr[i] = slot
+            lengths = (jnp.full(Bp, L, jnp.int32) if self._pad_len else None)
+            logits, self.cache = self._prefill_fresh(
+                self.params, jnp.asarray(tok), self.cache,
+                jnp.asarray(slot_arr), lengths)
+            lg = np.asarray(logits)
+            for i, (slot, _) in enumerate(group):
+                self.slot_pos[slot] = L
+                out[slot] = int(np.argmax(lg[i]))
+        return out
+
+    def _prefill_batch_padded(self,
+                              prompts: Dict[int, np.ndarray]
+                              ) -> Dict[int, int]:
+        """Legacy path: every length group pads to batch=slots and runs on
+        the pool cache, snapshot-protecting busy rows (kept as the
+        before/after baseline for ``benchmarks/serving_bench.py``)."""
         by_len: Dict[int, List[Tuple[int, np.ndarray]]] = {}
         for slot, toks in prompts.items():
             by_len.setdefault(len(toks), []).append((slot, toks))

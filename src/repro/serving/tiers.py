@@ -1,30 +1,40 @@
-"""The two-tier Edge-Cloud continuum runtime.
+"""The live N-tier continuum runtime.
 
 This is the live (non-simulated) integration of every paper component:
 
-    EdgeCloudContinuum
-      ├── edge tier:  Endpoint pool (small slots/model) + MetricsRegistry
-      │               + per-function Autoscaler (Knative-KPA concurrency)
-      ├── cloud tier: Endpoint pool (large slots)       + same
-      ├── ReplicationController  (cloud spec -> edge, selective merge)
-      ├── ControlLoop + Policy   (Eqs (1)-(4) / static / net-aware / hedged —
-      │                           the same loop the simulator drives)
-      └── Router                 (batch split by R_t percentage)
+    EdgeCloudContinuum (over a Topology chain, ingress at tier 0)
+      ├── tier 0..N-1:  Endpoint pool (slots/model) + MetricsRegistry
+      │                 + per-function Autoscaler (Knative-KPA concurrency)
+      ├── ReplicationController  (deepest-tier spec -> shallower tiers,
+      │                           selective merge)
+      ├── ControlLoop + Policy   (Eqs (1)-(4) / static / net-aware / hedged
+      │                           — one controller boundary per adjacent
+      │                           tier pair, the same loop the simulator
+      │                           drives)
+      └── Router                 (vectorized categorical assignment of the
+                                  queued batch over the tier distribution)
 
-Requests enter at the edge gateway (``submit``); each scheduler tick runs
-one scrape-and-update cycle through the shared
-:class:`repro.core.policy.ControlLoop` (latency windows + in-flight
-queue ages + demand RPS), routes the queued batch by R_t, and drains it
-in autoscaler-budgeted *waves*: every wave packs up to a tier's admitted
+Requests enter at the ingress gateway (``submit``); each scheduler tick
+runs one scrape-and-update cycle through the shared
+:class:`repro.core.policy.ControlLoop` (per-tier latency windows +
+in-flight queue ages + demand RPS), assigns the queued batch over the
+tiers by the composed R_t distribution, and drains it in
+autoscaler-budgeted *waves*: every wave packs up to a tier's admitted
 concurrency into one ``Endpoint`` prefill + a shared ``decode_all``
-stream, so co-scheduled requests advance together (continuous batching)
-instead of being served one ``serve_one`` at a time.  Completed latencies
-feed the metrics that drive the next controller update — the same closed
-loop as the paper's Knative Edge, at batch granularity.
+stream, so co-scheduled requests advance together (continuous batching).
+With ``topology.waterfall`` on, a tier with no admitted capacity spills
+its pending load to the next tier down the chain instead of wedging.
+Completed latencies feed the per-tier metrics that drive the next
+controller update — the same closed loop as the paper's Knative Edge, at
+batch granularity.
 
-Everything model-related goes through ``serving.engine.Endpoint``; tier
-capacities are expressed in concurrent slots, so the same runtime works
-with real TPU meshes (slots = per-pod batch) or the CPU tests (slots=4).
+The historical two-tier constructor (``edge=..., cloud=...``) builds a
+2-tier :class:`~repro.core.topology.Topology` via :meth:`Topology.pair`;
+``edge``/``cloud`` remain as attribute aliases for the ingress/deepest
+tiers.  Everything model-related goes through ``serving.engine.Endpoint``;
+tier capacities are expressed in concurrent slots, so the same runtime
+works with real TPU meshes (slots = per-pod batch) or the CPU tests
+(slots=4).
 """
 
 from __future__ import annotations
@@ -43,12 +53,15 @@ from repro.core.metrics import MetricsRegistry
 from repro.core.policy import ControlLoop, Policy, PolicySpec
 from repro.core.replication import (AutoscalingPolicy, FunctionSpec,
                                     ReplicationController)
+from repro.core.topology import TierSpec, Topology
 from repro.models.common import ModelConfig
 from repro.serving.engine import Endpoint, Request
 
 
 @dataclasses.dataclass
 class TierConfig:
+    """Legacy two-tier tier shape (sugar for a named
+    :class:`~repro.core.topology.TierSpec` via ``Topology.pair``)."""
     slots: int = 4
     max_len: int = 256
     # synthetic per-request overhead (edge->cloud WAN RTT), seconds
@@ -67,13 +80,35 @@ class _Queued:
     t_submit: float
     tick_no: int = 0
     hedge: bool = False
+    pair: Optional["_HedgePair"] = None
+
+
+@dataclasses.dataclass
+class _HedgePair:
+    """Links a primary request to its hedge twin so only the winning
+    arm's latency feeds the controller."""
+    fn: str
+    primary_lat: Optional[float] = None
+    primary_tier: Optional["Tier"] = None
+    twin_lat: Optional[float] = None
+    twin_tier: Optional["Tier"] = None
+
+    def note(self, item: "_Queued", tier: "Tier", lat: float) -> None:
+        if item.hedge:
+            self.twin_lat, self.twin_tier = lat, tier
+        else:
+            self.primary_lat, self.primary_tier = lat, tier
 
 
 class Tier:
     """One serving location: endpoints by function name + metrics +
-    per-function KPA autoscalers."""
+    per-function KPA autoscalers.
 
-    def __init__(self, name: str, cfg: TierConfig):
+    ``cfg`` may be a legacy :class:`TierConfig` or an N-tier
+    :class:`~repro.core.topology.TierSpec` — both carry the same serving
+    fields."""
+
+    def __init__(self, name: str, cfg):
         self.name = name
         self.cfg = cfg
         self.endpoints: Dict[str, Endpoint] = {}
@@ -85,8 +120,17 @@ class Tier:
         self.endpoints[fn_name] = Endpoint(
             model_cfg, params, slots=self.cfg.slots, max_len=self.cfg.max_len)
         self.metrics.register(fn_name)
+        # A TierSpec that declares its own KPA bounds governs its whole
+        # pool (e.g. an intermediate tier pinned to zero with max_scale=0).
+        # Legacy TierConfig keeps its documented fallback semantics: the
+        # function's spec wins, the tier's bounds apply only when the
+        # function has none.
+        if isinstance(self.cfg, TierSpec) and self.cfg.autoscaling is not None:
+            policy = self.cfg.autoscaling
+        else:
+            policy = autoscaling or self.cfg.autoscaling or AutoscalingPolicy()
         self.autoscalers[fn_name] = Autoscaler(
-            autoscaling or self.cfg.autoscaling or AutoscalingPolicy(),
+            policy,
             stable_window_s=self.cfg.stable_window_s,
             panic_window_s=self.cfg.panic_window_s)
 
@@ -107,16 +151,19 @@ class Tier:
 
     # -- serving -----------------------------------------------------------
     def serve_batch(self, fn_name: str,
-                    items: List[Tuple[Request, float]]
+                    items: List[Tuple[Request, float]],
+                    record: Optional[List[bool]] = None
                     ) -> List[Tuple[np.ndarray, float]]:
         """Serve a wave of requests together on one endpoint.
 
         All prompts share packed prefill calls and one ``decode_all``
         stream; each request's latency is measured from its submit
-        timestamp to the decode step that finished it. The caller is
-        responsible for sizing waves within ``free_slots`` — admission
-        past the pool raises instead of silently corrupting a live slot's
-        KV cache (the old ``slot = 0`` fallback).
+        timestamp to the decode step that finished it. ``record`` masks
+        which latencies feed this tier's metrics (hedged arms defer to the
+        pair winner). The caller is responsible for sizing waves within
+        ``free_slots`` — admission past the pool raises instead of
+        silently corrupting a live slot's KV cache (the old ``slot = 0``
+        fallback).
         """
         ep = self.endpoints[fn_name]
         claimed: List[Tuple[Request, float, int]] = []
@@ -161,9 +208,10 @@ class Tier:
             raise
 
         results: List[Tuple[np.ndarray, float]] = []
-        for req, t_submit, slot in claimed:
+        for i, (req, t_submit, slot) in enumerate(claimed):
             lat = done_at[slot] - t_submit + self.cfg.extra_latency_s
-            self.metrics.record_latency(fn_name, lat)
+            if record is None or record[i]:
+                self.metrics.record_latency(fn_name, lat)
             req.output = np.asarray(outs[slot], np.int32)
             req.t_done = done_at[slot]
             ep.release(slot)
@@ -179,17 +227,24 @@ class Tier:
 
 
 class EdgeCloudContinuum:
-    """The full platform: replication + policy-driven offloading across two
-    tiers, with a batched wave scheduler."""
+    """The full platform: replication + policy-driven offloading across an
+    N-tier topology, with a batched wave scheduler."""
 
-    def __init__(self, edge: TierConfig, cloud: TierConfig,
+    def __init__(self, edge=None, cloud=None,
                  policy: PolicySpec = "auto",
                  offload_cfg: Optional[offload.OffloadConfig] = None,
                  window: int = 64, seed: int = 0,
                  control_interval_s: float = 1.0,
-                 max_waves_per_tick: Optional[int] = None):
-        self.edge = Tier("edge", edge)
-        self.cloud = Tier("cloud", cloud)
+                 max_waves_per_tick: Optional[int] = None,
+                 topology: Optional[Topology] = None):
+        if topology is None:
+            if edge is None or cloud is None:
+                raise ValueError(
+                    "pass either topology=... or the 2-tier edge=/cloud= pair")
+            topology = Topology.pair(edge, cloud)
+        self.topology = topology
+        self.tiers: List[Tier] = [Tier(spec.name, spec)
+                                  for spec in topology.tiers]
         self.offload_cfg = offload_cfg or offload.OffloadConfig()
         self.policy = Policy.parse(policy, offload_cfg=self.offload_cfg)
         self.window = window
@@ -201,6 +256,8 @@ class EdgeCloudContinuum:
         self.key = jax.random.PRNGKey(seed)
         self.queue: Deque[_Queued] = deque()
         self._arrivals: Dict[str, int] = {}
+        # Platform-level counters (hedging outcomes etc.).
+        self.metrics = MetricsRegistry([])
         # None = drain the queue every tick; an int caps the batched waves
         # per tick, so overload leaves a *backlog* whose in-flight ages the
         # next scrape mixes into Eq (1) (the simulator's onset signal).
@@ -209,20 +266,32 @@ class EdgeCloudContinuum:
         self._clock = 0.0          # logical control-plane time (scrapes)
         self._tick_no = 0
 
+    # Ingress / deepest tier aliases (the historical two-tier attributes).
+    @property
+    def edge(self) -> Tier:
+        return self.tiers[0]
+
+    @property
+    def cloud(self) -> Tier:
+        return self.tiers[-1]
+
     # -- deployment (paper §3.3.1) ------------------------------------------
     def deploy(self, spec: FunctionSpec, model_cfg: ModelConfig, params) -> None:
-        """Deploy to the cloud; replication mirrors it to the edge."""
+        """Deploy to the deepest tier; replication mirrors the spec to
+        every shallower tier of the chain."""
         self.cloud.deploy(spec.name, model_cfg, params, spec.autoscaling)
         self.cloud_specs[spec.name] = spec
         changed = self.replicator.reconcile(self.cloud_specs)
         if changed.get(spec.name, True):
-            self.edge.deploy(spec.name, model_cfg, params, spec.autoscaling)
+            for tier in self.tiers[:-1]:
+                tier.deploy(spec.name, model_cfg, params, spec.autoscaling)
         if spec.name not in self.fn_names:
             self.fn_names.append(spec.name)
             self._arrivals[spec.name] = 0
             self.control = ControlLoop(
                 self.policy, len(self.fn_names), window=self.window,
-                control_interval_s=self.control_interval_s)
+                control_interval_s=self.control_interval_s,
+                num_tiers=len(self.tiers))
 
     # -- request path (paper §3.3.2) ------------------------------------------
     def submit(self, fn_name: str, req: Request) -> None:
@@ -232,9 +301,14 @@ class EdgeCloudContinuum:
         self._arrivals[fn_name] = self._arrivals.get(fn_name, 0) + 1
 
     def controller_update(self) -> np.ndarray:
-        """One scrape-and-update cycle through the shared ControlLoop;
-        returns R_t percentages."""
-        lat, valid = self._latency_windows()
+        """One scrape-and-update cycle through the shared ControlLoop
+        (every boundary of the chain); returns the ingress boundary's R_t
+        percentages."""
+        lats, valids = [], []
+        for tier in self.tiers[:-1] or self.tiers[:1]:
+            lat, valid = tier.metrics.latency_windows(self.window)
+            lats.append(lat)
+            valids.append(valid)
         now = time.perf_counter()
         ages: List[List[float]] = [[] for _ in self.fn_names]
         for item in self.queue:
@@ -246,23 +320,30 @@ class EdgeCloudContinuum:
             # its mixing is backlog-only by construction.)
             if item.tick_no < self._tick_no:
                 ages[self.fn_names.index(item.fn)].append(now - item.t_submit)
+        # The gateway backlog lives at the ingress tier; deeper boundaries
+        # see completions only.
+        qages = [ages] + [None] * (len(lats) - 1)
         arrivals = [self._arrivals.get(fn, 0) for fn in self.fn_names]
-        R = self.control.step(lat, valid, queue_ages=ages, arrivals=arrivals)
+        R_all = self.control.step_tiers(lats, valids, queue_ages=qages,
+                                        arrivals=arrivals)
         for fn in self.fn_names:
             self._arrivals[fn] = 0
-        return R
+        return R_all[0]
 
     def _latency_windows(self):
-        """(F, W) edge-tier latency windows in deployment order."""
+        """(F, W) ingress-tier latency windows in deployment order."""
         return self.edge.metrics.latency_windows(self.window)
 
     # -- scheduler ------------------------------------------------------------
     def tick(self) -> Dict[str, float]:
-        """One scheduler round: controller update, route, drain in waves."""
+        """One scheduler round: controller update, tier assignment, drain
+        in waves (spilling down the chain when waterfall is on)."""
         R = self.controller_update()
         self._clock += self.control_interval_s
         self._tick_no += 1
-        served_edge = served_cloud = hedged = waves = 0
+        served: Dict[str, int] = {t.name: 0 for t in self.tiers}
+        hedged = waves = spilled = 0
+        pairs: List[_HedgePair] = []
 
         n = len(self.queue)
         items = [self.queue.popleft() for _ in range(n)]
@@ -271,43 +352,49 @@ class EdgeCloudContinuum:
             fn_ids = np.asarray([self.fn_names.index(it.fn) for it in items],
                                 np.int32)
             self.key, sub = jax.random.split(self.key)
-            to_cloud = self.control.route(sub, fn_ids)
+            tier_idx = self.control.route_tiers(sub, fn_ids)
             now = time.perf_counter()
             ages = np.asarray([now - it.t_submit for it in items], np.float32)
             lat, valid = self._latency_windows()
             self.key, hk = jax.random.split(self.key)
             hedge = self.control.hedge(hk, ages, fn_ids, lat, valid)
-            for it, cloudward, hedge_it in zip(items, to_cloud, hedge):
-                primary = self.cloud if bool(cloudward) else self.edge
+            for it, tj, hedge_it in zip(items, tier_idx, hedge):
+                primary = self.tiers[int(tj)]
                 pending.setdefault((primary, it.fn), []).append(it)
                 if bool(hedge_it):
-                    # backup request on the other tier (straggler hedge);
-                    # the primary's output stays canonical.
-                    backup = self.edge if primary is self.cloud else self.cloud
+                    # backup request on another tier (straggler hedge);
+                    # only the winning arm's latency feeds the windows.
+                    backup = (self.tiers[0] if primary is self.tiers[-1]
+                              else self.tiers[-1])
                     twin = Request(rid=it.req.rid, tokens=it.req.tokens,
                                    max_new=it.req.max_new,
                                    arrival_s=it.req.arrival_s)
+                    pair = _HedgePair(fn=it.fn)
+                    it.pair = pair
                     pending.setdefault((backup, it.fn), []).append(
-                        _Queued(it.fn, twin, it.t_submit, hedge=True))
+                        _Queued(it.fn, twin, it.t_submit, hedge=True,
+                                pair=pair))
+                    pairs.append(pair)
                     hedged += 1
 
         # KPA scrape: every (tier, fn) observes its assigned concurrency
         # (including zeros — that is what ages idle functions to zero).
-        for tier in (self.edge, self.cloud):
+        for tier in self.tiers:
             for fn, asc in tier.autoscalers.items():
                 asc.observe(self._clock, float(len(pending.get((tier, fn), []))))
                 asc.desired(self._clock)
 
         def dispatch(tier: Tier, fn: str, batch: List[_Queued]) -> None:
-            nonlocal served_edge, served_cloud, waves
-            tier.serve_batch(fn, [(it.req, it.t_submit) for it in batch])
+            nonlocal waves
+            record = [it.pair is None for it in batch]
+            results = tier.serve_batch(
+                fn, [(it.req, it.t_submit) for it in batch], record=record)
             waves += 1
-            for it in batch:
+            for it, (_, lat) in zip(batch, results):
+                if it.pair is not None:
+                    it.pair.note(it, tier, lat)
                 if not it.hedge:
-                    if tier is self.cloud:
-                        served_cloud += 1
-                    else:
-                        served_edge += 1
+                    served[tier.name] += 1
 
         def capped() -> bool:
             return (self.max_waves_per_tick is not None
@@ -326,6 +413,20 @@ class EdgeCloudContinuum:
                 batch, pending[(tier, fn)] = lst[:budget], lst[budget:]
                 dispatch(tier, fn, batch)
                 progress = True
+            if not progress and self.topology.waterfall:
+                # Waterfall: a tier with no admitted capacity (e.g. scaled
+                # to zero with scale-up disabled) spills its pending load
+                # to the next tier down the chain.
+                for (tier, fn), lst in list(pending.items()):
+                    ti = self.tiers.index(tier)
+                    if (lst and ti < len(self.tiers) - 1
+                            and min(tier.free_slots(fn),
+                                    tier.capacity(fn)) <= 0):
+                        nxt = self.tiers[ti + 1]
+                        pending.setdefault((nxt, fn), []).extend(lst)
+                        pending[(tier, fn)] = []
+                        spilled += len(lst)
+                        progress = True
             if not progress:
                 # Scale-from-zero floor: a queued request implies >= 1
                 # desired replica next scrape; don't deadlock on degenerate
@@ -345,13 +446,34 @@ class EdgeCloudContinuum:
         leftovers = [it for lst in pending.values() for it in lst
                      if not it.hedge]
         for it in sorted(leftovers, key=lambda it: it.t_submit):
+            it.pair = None           # a requeued primary records normally
             self.queue.append(it)
 
+        # Resolve hedge pairs: only the winning arm's latency feeds the
+        # controller windows, so a slow loser cannot bias R_t.
+        won = 0
+        for pair in pairs:
+            if pair.primary_lat is None:
+                continue             # primary requeued; pair dissolved
+            if pair.twin_lat is not None and pair.twin_lat < pair.primary_lat:
+                pair.twin_tier.metrics.record_latency(pair.fn, pair.twin_lat)
+                won += 1
+            else:
+                pair.primary_tier.metrics.record_latency(pair.fn,
+                                                         pair.primary_lat)
+        if hedged:
+            self.metrics.inc("hedges_fired", hedged)
+        if won:
+            self.metrics.inc("hedges_won", won)
+
         rec = {"R": float(R.mean()) if len(R) else 0.0,
-               "edge": served_edge, "cloud": served_cloud,
-               "hedged": hedged, "waves": waves,
+               "edge": served[self.tiers[0].name],
+               "cloud": served[self.tiers[-1].name],
+               "tiers": dict(served),
+               "hedged": hedged, "hedges_won": won,
+               "spilled": spilled, "waves": waves,
                "replicas": {t.name: {fn: t.replicas(fn)
                                      for fn in t.autoscalers}
-                            for t in (self.edge, self.cloud)}}
+                            for t in self.tiers}}
         self.log.append(rec)
         return rec

@@ -1,0 +1,333 @@
+"""The N-tier Topology layer: validation, 2-tier backward equivalence
+(bit-identical R_t trajectories vs the pre-topology simulator), 3-tier
+waterfall spill, N-tier routing, scale-to-zero on an intermediate tier,
+and the hedge winner-only latency accounting."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core.policy import ControlLoop, StaticSplit
+from repro.core.replication import AutoscalingPolicy, FunctionSpec
+from repro.core.simulator import ContinuumSimulator, SimConfig
+from repro.core.topology import LinkSpec, TierSpec, Topology
+from repro.models import model_zoo
+from repro.platform import Continuum, Request
+from repro.serving.tiers import TierConfig
+
+
+# ---- validation -------------------------------------------------------------
+
+def test_empty_chain_rejected():
+    with pytest.raises(ValueError):
+        Topology(tiers=())
+
+
+def test_duplicate_tier_names_rejected():
+    with pytest.raises(ValueError):
+        Topology(tiers=(TierSpec("edge"), TierSpec("edge")),
+                 links=(LinkSpec(),))
+
+
+def test_negative_rtt_rejected():
+    with pytest.raises(ValueError):
+        Topology(tiers=(TierSpec("a"), TierSpec("b")),
+                 links=(LinkSpec(rtt_s=-0.1),))
+
+
+def test_link_count_must_match_tiers():
+    with pytest.raises(ValueError):
+        Topology(tiers=(TierSpec("a"), TierSpec("b"), TierSpec("c")),
+                 links=(LinkSpec(),))
+    with pytest.raises(ValueError):
+        Topology(tiers=(TierSpec("a"),), links=(LinkSpec(),))
+
+
+def test_bad_tier_fields_rejected():
+    with pytest.raises(ValueError):
+        Topology(tiers=(TierSpec("a", slots=-1),), links=())
+    with pytest.raises(ValueError):
+        Topology(tiers=(TierSpec("a", service_rate_mult=0.0),), links=())
+    with pytest.raises(ValueError):
+        Topology(tiers=(TierSpec("a"), TierSpec("b")),
+                 links=(LinkSpec(bandwidth_Bps=0.0),))
+
+
+def test_pair_accepts_legacy_tierconfig():
+    topo = Topology.pair(TierConfig(slots=2, max_len=64),
+                         TierConfig(slots=8, max_len=64,
+                                    extra_latency_s=0.02))
+    assert topo.names == ("edge", "cloud")
+    assert topo.num_tiers == 2 and len(topo.links) == 1
+    assert not topo.waterfall                   # seed overflow semantics
+    assert topo.tiers[1].extra_latency_s == 0.02
+
+
+# ---- 2-tier equivalence (the hard backward-compat requirement) --------------
+
+# Golden values captured from the pre-topology simulator (main @ PR 1) on
+# this exact config: same seed => bit-identical R_t trajectory and counts.
+_GOLD_CFG = SimConfig(duration_s=80.0, low_rps=2.0, high_rps=14.0,
+                      ramp_start_s=10.0, ramp_end_s=40.0, seed=0)
+_GOLD_OFFLOAD_PCT = [
+    0.0, 0.0, 0.0, 7.05392599105835, 33.94593048095703, 37.99419403076172,
+    28.355018615722656, 33.66240310668945, 41.873504638671875,
+    77.65264129638672, 31.752613067626953, 17.118032455444336,
+    51.82924270629883, 37.41172409057617, 38.023170471191406, 64.0546875]
+_GOLD_LATENCY_AVG = [
+    0.8540354344117875, 0.8295079222443701, 1.0512368935625547,
+    0.9427969076519057, 1.8111349047069167, 1.7694696187362278,
+    1.082751138693534, 2.035602932737588, 3.1460666843773413,
+    2.3318833584817575, 2.9028673881956353, 4.815157782534941,
+    3.6328268616537964, 3.220968636883958, 3.840618680877827,
+    3.0710358057480382]
+
+
+def test_two_tier_sim_bit_identical_to_main():
+    r = ContinuumSimulator("matmult", "auto", _GOLD_CFG).run()
+    assert r.successes == 628 and r.failures == 163
+    np.testing.assert_array_equal(r.offload_pct,
+                                  np.asarray(_GOLD_OFFLOAD_PCT))
+    np.testing.assert_array_equal(r.latency_avg,
+                                  np.asarray(_GOLD_LATENCY_AVG))
+
+
+def test_two_tier_static_counts_match_main():
+    r = ContinuumSimulator("matmult", 50.0, _GOLD_CFG).run()
+    assert r.successes == 699 and r.failures == 123
+    np.testing.assert_array_equal(r.offload_pct, np.full(16, 50.0))
+
+
+def test_explicit_topology_matches_default_two_tier():
+    """Passing the sugar-built Topology explicitly is the same run."""
+    a = ContinuumSimulator("io", "auto", _GOLD_CFG).run()
+    b = ContinuumSimulator("io", "auto", _GOLD_CFG,
+                           topology=_GOLD_CFG.default_topology()).run()
+    assert a.successes == b.successes and a.failures == b.failures
+    np.testing.assert_array_equal(a.offload_pct, b.offload_pct)
+    np.testing.assert_array_equal(a.latency_avg, b.latency_avg)
+    assert a.tier_counts == b.tier_counts
+
+
+# ---- tier distributions and N-tier routing ----------------------------------
+
+def test_tier_distribution_two_tier_is_R_split():
+    pol = StaticSplit(30.0)
+    d = pol.tier_distribution(np.asarray([[30.0, 30.0]], np.float32), 2)
+    np.testing.assert_allclose(d, [[70.0, 30.0], [70.0, 30.0]])
+
+
+def test_tier_distribution_waterfall_composes():
+    pol = StaticSplit(50.0)
+    R_all = np.asarray([[50.0], [50.0]], np.float32)     # 2 boundaries, F=1
+    d = pol.tier_distribution(R_all, 3)
+    np.testing.assert_allclose(d, [[50.0, 25.0, 25.0]])
+    np.testing.assert_allclose(d.sum(axis=1), 100.0)
+
+
+def test_route_tiers_extremes():
+    loop = ControlLoop(StaticSplit(0.0), 2, num_tiers=3)
+    fn_ids = np.asarray([0, 1, 0, 1, 0], np.int32)
+    key = jax.random.PRNGKey(0)
+    # fn 0 -> everything to the deepest tier, fn 1 -> everything ingress
+    loop.R_all = np.asarray([[100.0, 0.0], [100.0, 0.0]], np.float32)
+    tiers = loop.route_tiers(key, fn_ids)
+    assert tiers.shape == (5,)
+    assert (tiers[fn_ids == 0] == 2).all()
+    assert (tiers[fn_ids == 1] == 0).all()
+
+
+def test_route_tiers_expectation_matched():
+    loop = ControlLoop(StaticSplit(50.0), 1, num_tiers=3)
+    fn_ids = np.zeros(400, np.int32)
+    counts = np.zeros(3)
+    for t in range(20):
+        tiers = loop.route_tiers(jax.random.PRNGKey(t), fn_ids)
+        counts += np.bincount(tiers, minlength=3)
+    frac = counts / counts.sum()
+    np.testing.assert_allclose(frac, [0.5, 0.25, 0.25], atol=0.02)
+
+
+def test_control_loop_step_tiers_shapes():
+    loop = ControlLoop("auto", 2, window=16, num_tiers=4)
+    assert loop.num_boundaries == 3
+    lat = [np.full((2, 16), 0.1, np.float32)] * 3
+    valid = [np.ones((2, 16), bool)] * 3
+    R_all = loop.step_tiers(lat, valid, arrivals=[1.0, 1.0])
+    assert R_all.shape == (3, 2)
+    assert loop.dist().shape == (2, 4)
+    np.testing.assert_allclose(loop.dist().sum(axis=1), 100.0, rtol=1e-5)
+
+
+def test_single_tier_topology_simulates():
+    """A 1-tier chain is valid: nothing routes off-tier, nothing crashes
+    (ControlLoop keeps a phantom boundary whose R_t routing must not see)."""
+    topo = Topology(tiers=(TierSpec("solo", slots=4),), links=())
+    cfg = SimConfig(duration_s=30.0, seed=0)
+    r = ContinuumSimulator("io", 50.0, cfg, topology=topo).run()
+    assert r.tier_counts == {"solo": r.successes}
+    assert r.successes > 0
+    np.testing.assert_array_equal(r.offload_pct, 0.0)
+
+
+def test_length_padding_restricted_to_dense():
+    """MoE expert capacity is sequence-global, so only the dense family
+    may right-pad prompts to a pow2 length bucket."""
+    from repro.serving.engine import Endpoint
+    from repro.models import model_zoo as mz
+    for arch, padded in (("stablelm-1.6b", True), ("mixtral-8x7b", False),
+                         ("rwkv6-7b", False)):
+        cfg = configs.get_smoke_config(arch)
+        params = mz.init(jax.random.PRNGKey(0), cfg)
+        ep = Endpoint(cfg, params, slots=2, max_len=32)
+        assert ep._pad_len == padded, arch
+
+
+# ---- 3-tier simulator: waterfall spill --------------------------------------
+
+_SIM3 = SimConfig(duration_s=90.0, low_rps=2.0, high_rps=12.0,
+                  ramp_start_s=10.0, ramp_end_s=40.0, seed=0)
+
+
+def test_three_tier_sim_runs_and_counts_tiers():
+    topo = Topology.device_edge_cloud(device_slots=2, edge_slots=4,
+                                      cloud_slots=64)
+    r = ContinuumSimulator("matmult", "auto", _SIM3, topology=topo).run()
+    assert set(r.tier_counts) == {"device", "edge", "cloud"}
+    assert r.successes > 0
+    assert sum(r.tier_counts.values()) == r.successes
+    # overload pushes load past the 2-slot device tier
+    assert r.tier_counts["edge"] + r.tier_counts["cloud"] > 0
+
+
+def test_three_tier_waterfall_spills_past_dead_tier():
+    """An intermediate tier scaled to zero (slots=0) spills everything
+    routed at it down the chain instead of rejecting."""
+    topo = Topology(
+        tiers=(TierSpec("device", slots=2, queue_depth_per_slot=2),
+               TierSpec("edge", slots=0, queue_depth_per_slot=0),
+               TierSpec("cloud", slots=64, queue_depth_per_slot=None)),
+        links=(LinkSpec(rtt_s=0.005, bandwidth_Bps=50e6),
+               LinkSpec(rtt_s=0.04, bandwidth_Bps=100e6)),
+        waterfall=True)
+    r = ContinuumSimulator("io", 50.0, _SIM3, topology=topo).run()
+    assert r.tier_counts["edge"] == 0
+    assert r.spilled > 0
+    assert r.tier_counts["cloud"] > 0
+    assert r.successes > 0
+
+
+def test_waterfall_off_rejects_instead_of_spilling():
+    topo = Topology(
+        tiers=(TierSpec("device", slots=1, queue_depth_per_slot=0),
+               TierSpec("cloud", slots=64, queue_depth_per_slot=None)),
+        links=(LinkSpec(),), waterfall=False)
+    r = ContinuumSimulator("io", 0.0, _SIM3, topology=topo).run()
+    assert r.spilled == 0
+    assert r.failures > 0                      # overflow 503s
+
+
+# ---- live runtime over 3 tiers ----------------------------------------------
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = configs.get_smoke_config("stablelm-1.6b")
+    params = model_zoo.init(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def live3(model):
+    cfg, params = model
+    topo = Topology(
+        tiers=(TierSpec("device", slots=1, max_len=64),
+               TierSpec("edge", slots=2, max_len=64),
+               TierSpec("cloud", slots=8, max_len=64)),
+        links=(LinkSpec(rtt_s=0.005), LinkSpec(rtt_s=0.04)))
+    cc = Continuum.from_topology(topo, policy="auto", seed=0)
+    cc.deploy(FunctionSpec(name="fn", arch="stablelm-1.6b"), cfg, params)
+    return cc
+
+
+def test_live_three_tier_serves_everything(live3):
+    rng = np.random.default_rng(0)
+    rid = 0
+    for rnd in range(8):
+        for _ in range(2 if rnd < 3 else 8):
+            live3.submit("fn", Request(
+                rid=rid, tokens=rng.integers(0, 128, 6).astype(np.int32),
+                max_new=2))
+            rid += 1
+        rec = live3.tick()
+        assert set(rec["tiers"]) == {"device", "edge", "cloud"}
+    served = sum(sum(r["tiers"].values()) for r in live3.log)
+    assert served == rid                       # nothing dropped
+    # the 1-slot device tier cannot absorb the ramp alone
+    deeper = sum(r["tiers"]["edge"] + r["tiers"]["cloud"]
+                 for r in live3.log)
+    assert deeper > 0
+
+
+def test_live_backward_compat_aliases(live3):
+    assert live3.edge is live3.tiers[0]
+    assert live3.cloud is live3.tiers[-1]
+
+
+def test_live_intermediate_scale_to_zero_spills(model):
+    cfg, params = model
+    topo = Topology(
+        tiers=(TierSpec("device", slots=2, max_len=64),
+               TierSpec("edge", slots=2, max_len=64,
+                        autoscaling=AutoscalingPolicy(min_scale=0,
+                                                      max_scale=0)),
+               TierSpec("cloud", slots=8, max_len=64)),
+        links=(LinkSpec(), LinkSpec()))
+    cc = Continuum.from_topology(topo, policy=50.0, seed=0)
+    cc.deploy(FunctionSpec(name="fn", arch="stablelm-1.6b"), cfg, params)
+    for i in range(8):
+        cc.submit("fn", Request(rid=i, tokens=np.arange(6, dtype=np.int32),
+                                max_new=1))
+    rec = cc.tick()
+    assert rec["tiers"]["edge"] == 0           # pinned to zero
+    assert rec["spilled"] > 0                  # pending spilled down-chain
+    assert sum(rec["tiers"].values()) == 8     # nothing dropped
+
+
+# ---- hedge accounting (winner-only latency) ---------------------------------
+
+def test_hedge_records_winner_only(model):
+    cfg, params = model
+    from repro.serving.tiers import TierConfig as TC
+    cc = Continuum(edge=TC(slots=2, max_len=64),
+                   cloud=TC(slots=8, max_len=64),
+                   policy="auto+hedge", seed=0)
+    cc.deploy(FunctionSpec(name="fn", arch="stablelm-1.6b"), cfg, params)
+    # prime the latency windows so the p99 estimate exists
+    for i in range(4):
+        cc.submit("fn", Request(rid=i, tokens=np.arange(6, dtype=np.int32),
+                                max_new=1))
+    cc.tick()
+
+    def window_count():
+        n = 0
+        for tier in cc.tiers:
+            _, valid = tier.metrics.latency_windows(256)
+            n += int(valid.sum())
+        return n
+
+    before = window_count()
+    # submit, then age the queue entries far past any p99 so hedges fire
+    for i in range(3):
+        cc.submit("fn", Request(rid=100 + i,
+                                tokens=np.arange(6, dtype=np.int32),
+                                max_new=1))
+    for item in cc.queue:
+        item.t_submit -= 60.0
+    rec = cc.tick()
+    assert rec["hedged"] == 3                  # every aged request hedged
+    assert cc.metrics.counters["hedges_fired"] == 3
+    assert 0 <= cc.metrics.counters.get("hedges_won", 0) <= 3
+    # winner-only accounting: 3 primaries -> exactly 3 new window entries,
+    # even though 6 arms were served (the losers' latencies are dropped)
+    assert window_count() - before == 3
