@@ -244,7 +244,8 @@ def bench_closed_loop(rounds: int = 24, clients: int = 8, seed: int = 0):
         outstanding = clients
         rec = cc.tick()
         outstanding -= rec["edge"] + rec["cloud"]
-        backlog_peak = max(backlog_peak, len(cc.queue))
+        # backlog now lives in per-tier gateways, not one ingress deque
+        backlog_peak = max(backlog_peak, cc.queued)
         R_trace.append(rec["R"])
     served = sum(r["edge"] + r["cloud"] for r in cc.log)
     return {
@@ -289,6 +290,8 @@ def bench_three_tier(rounds: int = 12, seed: int = 0):
         "tier_counts": tier_counts,
         "served": sum(tier_counts.values()),
         "submitted": rid,
+        "spilled": int(sum(r["spilled"] for r in cc.log)),
+        "rejected": int(sum(r["rejected"] for r in cc.log)),
         "wall_s": wall,
         "R_peak": float(max(r["R"] for r in cc.log)),
     }
@@ -321,6 +324,7 @@ def main(out_dir: str | None = None):
     three = bench_three_tier()
     per = " ".join(f"{n}={c}" for n, c in three["tier_counts"].items())
     print(f"3-tier: served={three['served']}/{three['submitted']} [{per}] "
+          f"spilled={three['spilled']} rejected={three['rejected']} "
           f"R_peak={three['R_peak']:.1f}% wall={three['wall_s']:.1f}s")
     res = {"engine": eng, "policies": pol, "scheduler": sched,
            "prefill_bucketing": buck, "closed_loop": closed,

@@ -31,7 +31,12 @@ def run_three_tier(cfg: SimConfig = SimConfig(duration_s=300.0)) -> Dict:
     for wl in WORKLOADS:
         r = Continuum.simulate(wl, "auto", cfg, topology=topo)
         out[wl] = {"successes": r.successes, "failures": r.failures,
-                   "spilled": r.spilled, "tier_counts": r.tier_counts}
+                   "spilled": r.spilled, "tier_counts": r.tier_counts,
+                   # per-link egress peaks, chain order — deep-link
+                   # saturation is invisible in the headline net_MBps
+                   "net_peak_MBps": [
+                       float(r.net_links_MBps[l].max(initial=0.0))
+                       for l in range(r.net_links_MBps.shape[0])]}
     return out
 
 
@@ -66,8 +71,11 @@ def main(out_dir: str | None = None) -> Dict:
     for wl in WORKLOADS:
         row = three[wl]
         per = " ".join(f"{n}={c}" for n, c in row["tier_counts"].items())
+        net = " ".join(f"l{i}={p:.1f}M"
+                       for i, p in enumerate(row["net_peak_MBps"]))
         print(f"{LABELS[wl]:>12}: ok={row['successes']} "
-              f"fail={row['failures']} spill={row['spilled']}  [{per}]")
+              f"fail={row['failures']} spill={row['spilled']}  [{per}]  "
+              f"net[{net}]")
     if out_dir:
         os.makedirs(out_dir, exist_ok=True)
         with open(os.path.join(out_dir, "table2.json"), "w") as f:

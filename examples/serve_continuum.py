@@ -40,7 +40,8 @@ rng = np.random.default_rng(0)
 rid = 0
 names = topo.names
 print(f"\n{'round':>5} {'rps':>4} " +
-      " ".join(f"{n:>6}" for n in names) + f" {'waves':>6} {'R_t%':>6}")
+      " ".join(f"{n:>6}" for n in names) +
+      f" {'waves':>6} {'R_t%':>6} {'backlog':>7}")
 for rnd in range(18):
     rps = 2 if rnd < 4 else 10          # ramp: overload the 1-slot device
     for _ in range(rng.poisson(rps)):
@@ -52,7 +53,8 @@ for rnd in range(18):
         rid += 1
     rec = cc.tick()
     row = " ".join(f"{rec['tiers'][n]:>6}" for n in names)
-    print(f"{rnd:>5} {rps:>4} {row} {rec['waves']:>6} {rec['R']:>6.1f}")
+    print(f"{rnd:>5} {rps:>4} {row} {rec['waves']:>6} {rec['R']:>6.1f} "
+          f"{sum(rec['backlog'].values()):>7}")
 
 totals = {n: sum(r["tiers"][n] for r in cc.log) for n in names}
 served = sum(totals.values())
@@ -64,5 +66,8 @@ print(f"\nserved {served}/{rid} requests: {per_tier} "
 print(f"batching: {served} requests packed into {waves} waves "
       f"({served / max(waves, 1):.1f} requests sharing each prefill+decode "
       f"stream on average)")
+print(f"per-tier gateways: spilled={sum(r['spilled'] for r in cc.log)} "
+      f"down-chain, rejected={sum(r['rejected'] for r in cc.log)} "
+      f"at bounded backlogs")
 print("steady-state replication writes:", cc.replicator.writes,
       "(no feedback loop)")

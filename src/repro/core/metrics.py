@@ -25,6 +25,10 @@ class LatencyWindow:
     def record(self, latency_s: float) -> None:
         self._buf.append(float(latency_s))
 
+    def clear(self) -> None:
+        """Drop all recorded observations."""
+        self._buf.clear()
+
     def window(self, size: int) -> Tuple[np.ndarray, np.ndarray]:
         """Return (latencies, valid) padded/masked to ``size``."""
         data = list(self._buf)[-size:]
@@ -61,7 +65,7 @@ class MetricsRegistry:
     def clear(self) -> None:
         """Drop all recorded observations (e.g. after a warmup phase)."""
         for w in self.latency.values():
-            w._buf.clear()
+            w.clear()
         self.counters.clear()
         self.gauges.clear()
 

@@ -418,7 +418,10 @@ class ControlLoop:
           latencies, valid: per-boundary (F, W) windows, one entry per
             non-terminal tier (tier b feeds boundary b).
           queue_ages: per-boundary, per-function in-flight ages (or None
-            per boundary).
+            per boundary).  In the live runtime these are tier b's own
+            gateway backlog ages; in the simulator, tier b's queue — the
+            per-tier signal that lets an *intermediate* boundary fire
+            before its slow completions drain out.
           arrivals: per-function request counts this interval — either
             one flat sequence shared by every boundary (ingress demand),
             or a per-boundary sequence of per-function counts (demand
@@ -426,8 +429,21 @@ class ControlLoop:
 
         Returns the (num_tiers-1, F) stack of R_t percentages.
         """
+        if len(latencies) != self.num_boundaries:
+            raise ValueError(
+                f"{self.num_boundaries} boundaries need {self.num_boundaries}"
+                f" latency windows, got {len(latencies)}")
+        if queue_ages is not None and len(queue_ages) != self.num_boundaries:
+            raise ValueError(
+                f"{self.num_boundaries} boundaries need {self.num_boundaries}"
+                f" queue-age entries, got {len(queue_ages)}")
         if (arrivals is not None and len(arrivals)
                 and isinstance(arrivals[0], (list, tuple, np.ndarray))):
+            if len(arrivals) != self.num_boundaries:
+                raise ValueError(
+                    f"{self.num_boundaries} boundaries need "
+                    f"{self.num_boundaries} arrival counts, "
+                    f"got {len(arrivals)}")
             per_b = [self._rps(a) for a in arrivals]
         else:
             per_b = [self._rps(arrivals)] * self.num_boundaries

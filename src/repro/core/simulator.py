@@ -91,6 +91,11 @@ class SimResult:
     mem_mb: np.ndarray             # (T,) ingress-tier resident memory
     net_MBps: np.ndarray           # (T,) ingress link egress
     offload_pct: np.ndarray        # (T,) ingress boundary controller output
+    # (L, T) egress per link, chain order; row 0 duplicates net_MBps (the
+    # headline field kept for golden-trajectory compatibility).  Deep rows
+    # are what show link saturation past the first boundary in N-tier runs.
+    net_links_MBps: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros((0, 0)))
     # per-tier successful completions, in chain order
     tier_counts: Dict[str, int] = dataclasses.field(default_factory=dict)
     # requests that overflowed a tier and were spilled down the chain
@@ -104,6 +109,9 @@ class SimResult:
             "cpu_peak": float(self.cpu_util.max(initial=0.0)),
             "net_peak_MBps": float(self.net_MBps.max(initial=0.0)),
         }
+        for l in range(1, self.net_links_MBps.shape[0]):
+            out[f"net_peak_MBps_link{l}"] = float(
+                self.net_links_MBps[l].max(initial=0.0))
         for name, n in self.tier_counts.items():
             out[f"served_{name}"] = n
         if self.spilled:
@@ -267,6 +275,7 @@ class ContinuumSimulator:
         ingress_slots = max(tiers[0].spec.slots, 1)
 
         ts, lat_s, cpu_s, mem_s, net_s, off_s = ([] for _ in range(6))
+        net_links: List[List[float]] = [[] for _ in topo.links]
 
         def note_busy(t: float):
             nonlocal busy_integral, last_busy_t
@@ -391,10 +400,11 @@ class ContinuumSimulator:
                 busy_integral = 0.0
                 active = tiers[0].busy + len(tiers[0].queue)
                 mem_s.append(cfg.mem_baseline_mb + active * prof.mem_mb)
-                net_s.append((link_bytes[0] if link_bytes else 0.0)
-                             / cfg.metric_interval_s / 1e6)
-                if link_bytes:
-                    link_bytes[0] = 0.0
+                for l in range(len(link_bytes)):
+                    net_links[l].append(
+                        link_bytes[l] / cfg.metric_interval_s / 1e6)
+                    link_bytes[l] = 0.0
+                net_s.append(net_links[0][-1] if net_links else 0.0)
                 off_s.append(float(R_cur[0]) if len(R_cur) else 0.0)
                 push(t + cfg.metric_interval_s, _METRIC)
 
@@ -407,6 +417,7 @@ class ContinuumSimulator:
             times=np.asarray(ts), latency_avg=np.asarray(lat_s),
             cpu_util=np.asarray(cpu_s), mem_mb=np.asarray(mem_s),
             net_MBps=np.asarray(net_s), offload_pct=np.asarray(off_s),
+            net_links_MBps=np.asarray(net_links),
             tier_counts={tr.spec.name: tr.served for tr in tiers},
             spilled=spilled)
 

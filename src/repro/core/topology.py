@@ -47,7 +47,10 @@ class TierSpec:
         cloud speed, and intermediate tiers interpolate geometrically.
       * ``queue_depth_per_slot`` — bounded per-slot request queue
         (Knative queue-proxy semantics); ``None`` = unbounded (the
-        elastic cloud).
+        elastic cloud).  Both deployments honor it: the simulator bounds
+        each ``_SimTier`` queue, the live runtime bounds each tier's
+        :class:`~repro.serving.tiers.Gateway` backlog at
+        ``slots * queue_depth_per_slot``.
     """
 
     name: str
@@ -72,6 +75,12 @@ class LinkSpec:
 
     rtt_s: float = 0.04
     bandwidth_Bps: float = 100e6
+
+    def latency_s(self, nbytes: float = 0.0) -> float:
+        """Wall-clock cost of moving one ``nbytes`` payload over the hop
+        (RTT + serialization).  The live runtime charges this to a request
+        whenever it crosses the link (routing or waterfall spill)."""
+        return self.rtt_s + nbytes / self.bandwidth_Bps
 
 
 class Topology:
@@ -144,10 +153,16 @@ class Topology:
         Accepts :class:`TierSpec` or the legacy ``TierConfig`` shape (any
         object with ``slots``/``max_len``/... attributes).  Waterfall is
         disabled: a full edge queue rejects (503) rather than spilling —
-        the seed semantics Eq (1) keys on.
+        the seed semantics Eq (1) keys on.  The default link carries zero
+        RTT because the legacy API expresses the WAN hop as the cloud
+        tier's ``extra_latency_s``; an explicit ``link`` opts into
+        link-level accounting.  Queue bounds mirror the paper apparatus
+        (``SimConfig.default_topology``): the edge's backlog is bounded
+        (queue-proxy), the elastic cloud's is unbounded.
         """
-        return cls(tiers=(_as_spec(edge, "edge"), _as_spec(cloud, "cloud")),
-                   links=(link or LinkSpec(),), waterfall=False)
+        return cls(tiers=(_as_spec(edge, "edge"),
+                          _as_spec(cloud, "cloud", queue_depth=None)),
+                   links=(link or LinkSpec(rtt_s=0.0),), waterfall=False)
 
     @classmethod
     def device_edge_cloud(cls, device_slots: int = 2, edge_slots: int = 4,
@@ -175,8 +190,11 @@ class Topology:
             waterfall=True)
 
 
-def _as_spec(obj, name: str) -> TierSpec:
-    """Coerce a TierSpec or legacy TierConfig-shaped object to a TierSpec."""
+def _as_spec(obj, name: str, queue_depth: Optional[int] = 8) -> TierSpec:
+    """Coerce a TierSpec or legacy TierConfig-shaped object to a TierSpec.
+
+    ``queue_depth`` supplies ``queue_depth_per_slot`` for legacy objects
+    that don't carry the field (an explicit TierSpec keeps its own)."""
     if isinstance(obj, TierSpec):
         return obj
     return TierSpec(
@@ -186,4 +204,6 @@ def _as_spec(obj, name: str) -> TierSpec:
         extra_latency_s=getattr(obj, "extra_latency_s", 0.0),
         autoscaling=getattr(obj, "autoscaling", None),
         stable_window_s=getattr(obj, "stable_window_s", 60.0),
-        panic_window_s=getattr(obj, "panic_window_s", 6.0))
+        panic_window_s=getattr(obj, "panic_window_s", 6.0),
+        queue_depth_per_slot=getattr(obj, "queue_depth_per_slot",
+                                     queue_depth))

@@ -92,8 +92,10 @@ def main():
             rid += 1
         rec = cc.tick()
         per_tier = " ".join(f"{nm}={rec['tiers'][nm]:3d}" for nm in names)
+        backlog = sum(rec["backlog"].values())
         print(f"round={rnd:3d} rps={rps:5.1f} queued={n:3d} {per_tier} "
-              f"waves={rec['waves']:2d} R_t={rec['R']:5.1f}%")
+              f"waves={rec['waves']:2d} backlog={backlog:3d} "
+              f"R_t={rec['R']:5.1f}%")
 
     totals = {nm: sum(r["tiers"][nm] for r in cc.log) for nm in names}
     total = sum(totals.values())
@@ -102,7 +104,9 @@ def main():
     off = total - totals[names[0]]
     print(f"\nserved {per_tier} "
           f"offload_frac={off / max(total, 1):.2f} "
-          f"reqs_per_wave={total / max(waves, 1):.1f}")
+          f"reqs_per_wave={total / max(waves, 1):.1f} "
+          f"spilled={sum(r['spilled'] for r in cc.log)} "
+          f"rejected={sum(r['rejected'] for r in cc.log)}")
 
 
 if __name__ == "__main__":

@@ -13,8 +13,8 @@ point the launchers, examples and benchmarks use:
     cc = Continuum(edge=TierConfig(slots=2), cloud=TierConfig(slots=16),
                    policy="auto")
     cc.deploy(spec, model_cfg, params)
-    cc.submit("fn", request)
-    cc.tick()
+    cc.submit("fn", request)       # ingress Gateway (bounded backlog)
+    cc.tick()                      # scrape -> route -> per-tier waves
 
     # live, N-tier: declare the chain explicitly
     topo = Topology(tiers=(TierSpec("device", slots=1),
@@ -49,11 +49,11 @@ from repro.core.policy import (AutoOffload, ControlLoop, HedgedOffload,
 from repro.core.simulator import ContinuumSimulator, SimConfig, SimResult
 from repro.core.topology import LinkSpec, TierSpec, Topology
 from repro.serving.engine import Request
-from repro.serving.tiers import EdgeCloudContinuum, TierConfig
+from repro.serving.tiers import EdgeCloudContinuum, Gateway, TierConfig
 
 __all__ = [
     "Continuum", "TierConfig", "TierSpec", "LinkSpec", "Topology",
-    "SimConfig", "SimResult", "Request",
+    "Gateway", "SimConfig", "SimResult", "Request",
     "Policy", "StaticSplit", "AutoOffload", "NetAwareOffload",
     "HedgedOffload", "ControlLoop",
 ]

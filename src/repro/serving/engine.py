@@ -33,6 +33,9 @@ class Request:
     output: Optional[np.ndarray] = None
     t_first: float = 0.0
     t_done: float = 0.0
+    # set by the runtime when a bounded gateway rejects/drops the request
+    # (the live 503) — ``output`` will never be filled
+    failed: bool = False
 
 
 def _cache_batch_axes(cfg: ModelConfig, slots: int, max_len: int) -> list:

@@ -3,8 +3,9 @@
 This is the live (non-simulated) integration of every paper component:
 
     EdgeCloudContinuum (over a Topology chain, ingress at tier 0)
-      ├── tier 0..N-1:  Endpoint pool (slots/model) + MetricsRegistry
-      │                 + per-function Autoscaler (Knative-KPA concurrency)
+      ├── tier 0..N-1:  Gateway (bounded backlog queue) + Endpoint pool
+      │                 (slots/model) + MetricsRegistry + per-function
+      │                 Autoscaler (Knative-KPA concurrency)
       ├── ReplicationController  (deepest-tier spec -> shallower tiers,
       │                           selective merge)
       ├── ControlLoop + Policy   (Eqs (1)-(4) / static / net-aware / hedged
@@ -16,17 +17,28 @@ This is the live (non-simulated) integration of every paper component:
 
 Requests enter at the ingress gateway (``submit``); each scheduler tick
 runs one scrape-and-update cycle through the shared
-:class:`repro.core.policy.ControlLoop` (per-tier latency windows +
-in-flight queue ages + demand RPS), assigns the queued batch over the
-tiers by the composed R_t distribution, and drains it in
-autoscaler-budgeted *waves*: every wave packs up to a tier's admitted
-concurrency into one ``Endpoint`` prefill + a shared ``decode_all``
-stream, so co-scheduled requests advance together (continuous batching).
-With ``topology.waterfall`` on, a tier with no admitted capacity spills
-its pending load to the next tier down the chain instead of wedging.
-Completed latencies feed the per-tier metrics that drive the next
-controller update — the same closed loop as the paper's Knative Edge, at
-batch granularity.
+:class:`repro.core.policy.ControlLoop`, assigns the ingress batch over
+the tiers by the composed R_t distribution, and drains **each tier's own
+gateway** in autoscaler-budgeted *waves*: every wave packs up to a tier's
+admitted concurrency into one ``Endpoint`` prefill + a shared
+``decode_all`` stream, so co-scheduled requests advance together
+(continuous batching).  Moving a request down the chain — routing past a
+boundary or (with ``topology.waterfall``) spilling a stalled tier's load
+— crosses the corresponding :class:`~repro.core.topology.LinkSpec`,
+charging its RTT + payload serialization to the request's latency clock
+and counting the boundary crossing.
+
+The controller sees the continuum the way the paper's Knative deployment
+does (queue-proxy depth/age gauges per component): boundary b is fed tier
+b's latency windows, tier b's **own gateway backlog ages**, and the
+demand that actually **crossed** into tier b this interval (the
+per-boundary ``arrivals`` form of ``ControlLoop.step_tiers``), so an
+intermediate boundary's R_t rises when its own backlog ages — before its
+completions drain — and ``auto+net`` caps each boundary by the link it
+actually crosses.  Requests a wave budget could not serve stay queued in
+their tier's gateway (the ingress gateway's backlog re-enters routing;
+deeper backlogs belong to their tier), which is exactly the simulator's
+per-tier queue state.
 
 The historical two-tier constructor (``edge=..., cloud=...``) builds a
 2-tier :class:`~repro.core.topology.Topology` via :meth:`Topology.pair`;
@@ -40,6 +52,7 @@ works with real TPU meshes (slots = per-pod batch) or the CPU tests
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from collections import deque
 from typing import Deque, Dict, List, Optional, Tuple
@@ -92,12 +105,60 @@ class _HedgePair:
     primary_tier: Optional["Tier"] = None
     twin_lat: Optional[float] = None
     twin_tier: Optional["Tier"] = None
+    twin_req: Optional[Request] = None
 
     def note(self, item: "_Queued", tier: "Tier", lat: float) -> None:
         if item.hedge:
             self.twin_lat, self.twin_tier = lat, tier
+            self.twin_req = item.req
         else:
             self.primary_lat, self.primary_tier = lat, tier
+
+
+class Gateway:
+    """One tier's bounded backlog queue (the Knative queue-proxy stand-in).
+
+    Requests wait here between scheduler ticks; the controller boundary
+    of the owning tier reads the backlog's ages each scrape.  ``capacity``
+    bounds the *resting* backlog (``None`` = unbounded): client submits
+    and requeues past it are rejected (the live 503), while in-tick
+    placement uses ``force=True`` because a routed request may still be
+    served this very tick.
+    """
+
+    def __init__(self, capacity: Optional[int] = None):
+        self.capacity = capacity
+        self.items: Deque[_Queued] = deque()
+        self.rejected = 0
+
+    def push(self, item: _Queued, force: bool = False) -> bool:
+        if (not force and self.capacity is not None
+                and len(self.items) >= self.capacity):
+            self.rejected += 1
+            return False
+        self.items.append(item)
+        return True
+
+    def pop_all(self) -> List[_Queued]:
+        items = list(self.items)
+        self.items.clear()
+        return items
+
+    def backlog_ages(self, now: float, tick_no: int,
+                     fn_ids: Dict[str, int],
+                     num_functions: int) -> List[List[float]]:
+        """Per-function ages of true *backlog*: entries that survived a
+        previous scheduler round.  Fresh arrivals have waited ~0 s —
+        mixing those into X_l(t) would drag p50 toward zero and fire
+        Eq (1) spuriously."""
+        ages: List[List[float]] = [[] for _ in range(num_functions)]
+        for item in self.items:
+            if item.tick_no < tick_no:
+                ages[fn_ids[item.fn]].append(now - item.t_submit)
+        return ages
+
+    def __len__(self) -> int:
+        return len(self.items)
 
 
 class Tier:
@@ -140,10 +201,12 @@ class Tier:
         return ep.slots - ep.active
 
     def capacity(self, fn_name: str) -> int:
-        """Admitted concurrency right now: replicas x target concurrency,
-        bounded by the KV-cache pool. 0 when scaled to zero."""
+        """Admitted concurrency right now: ceil(replicas x target
+        concurrency), bounded by the KV-cache pool. 0 when scaled to zero.
+        A fractional target under-one admits *less* than one request per
+        replica (e.g. 2 replicas x 0.5 admit 1), not one per replica."""
         asc = self.autoscalers[fn_name]
-        want = int(asc.replicas * max(asc.policy.target_concurrency, 1.0))
+        want = math.ceil(asc.replicas * asc.policy.target_concurrency)
         return min(self.endpoints[fn_name].slots, want)
 
     def replicas(self, fn_name: str) -> int:
@@ -228,7 +291,7 @@ class Tier:
 
 class EdgeCloudContinuum:
     """The full platform: replication + policy-driven offloading across an
-    N-tier topology, with a batched wave scheduler."""
+    N-tier topology, with per-tier gateways and a batched wave scheduler."""
 
     def __init__(self, edge=None, cloud=None,
                  policy: PolicySpec = "auto",
@@ -236,7 +299,8 @@ class EdgeCloudContinuum:
                  window: int = 64, seed: int = 0,
                  control_interval_s: float = 1.0,
                  max_waves_per_tick: Optional[int] = None,
-                 topology: Optional[Topology] = None):
+                 topology: Optional[Topology] = None,
+                 reject_latency_s: float = 0.005):
         if topology is None:
             if edge is None or cloud is None:
                 raise ValueError(
@@ -245,26 +309,41 @@ class EdgeCloudContinuum:
         self.topology = topology
         self.tiers: List[Tier] = [Tier(spec.name, spec)
                                   for spec in topology.tiers]
+        self.gateways: List[Gateway] = [
+            Gateway(None if spec.queue_depth_per_slot is None
+                    else spec.slots * spec.queue_depth_per_slot)
+            for spec in topology.tiers]
         self.offload_cfg = offload_cfg or offload.OffloadConfig()
+        self._policy_spec: PolicySpec = policy
         self.policy = Policy.parse(policy, offload_cfg=self.offload_cfg)
         self.window = window
         self.control_interval_s = control_interval_s
+        # Fast rejections are part of the latency distribution Eq (1)
+        # scrapes (queue-proxy 503 semantics, same as the simulator).
+        self.reject_latency_s = reject_latency_s
         self.replicator = ReplicationController()
         self.cloud_specs: Dict[str, FunctionSpec] = {}
         self.fn_names: List[str] = []
+        self._fn_ids: Dict[str, int] = {}
         self.control: Optional[ControlLoop] = None
         self.key = jax.random.PRNGKey(seed)
-        self.queue: Deque[_Queued] = deque()
-        self._arrivals: Dict[str, int] = {}
+        # Demand per boundary since the last scrape: boundary b counts the
+        # requests that *reached* tier b (submit, routing, or spill) —
+        # what its net-aware cap divides the link capacity by.
+        self._num_boundaries = max(len(self.tiers) - 1, 1)
+        self._crossings: List[Dict[str, int]] = [
+            {} for _ in range(self._num_boundaries)]
         # Platform-level counters (hedging outcomes etc.).
         self.metrics = MetricsRegistry([])
-        # None = drain the queue every tick; an int caps the batched waves
-        # per tick, so overload leaves a *backlog* whose in-flight ages the
-        # next scrape mixes into Eq (1) (the simulator's onset signal).
+        # None = drain every gateway every tick; an int caps the batched
+        # waves per tick, so overload leaves per-tier *backlogs* whose
+        # in-flight ages the next scrape mixes into Eq (1) (the
+        # simulator's onset signal, now per boundary).
         self.max_waves_per_tick = max_waves_per_tick
         self.log: List[Dict] = []
         self._clock = 0.0          # logical control-plane time (scrapes)
         self._tick_no = 0
+        self._rejected_seen = 0    # for per-tick deltas in tick() records
 
     # Ingress / deepest tier aliases (the historical two-tier attributes).
     @property
@@ -274,6 +353,16 @@ class EdgeCloudContinuum:
     @property
     def cloud(self) -> Tier:
         return self.tiers[-1]
+
+    @property
+    def queue(self) -> Deque[_Queued]:
+        """The ingress gateway's queue (historical attribute)."""
+        return self.gateways[0].items
+
+    @property
+    def queued(self) -> int:
+        """Total backlog across every tier's gateway."""
+        return sum(len(g) for g in self.gateways)
 
     # -- deployment (paper §3.3.1) ------------------------------------------
     def deploy(self, spec: FunctionSpec, model_cfg: ModelConfig, params) -> None:
@@ -286,48 +375,83 @@ class EdgeCloudContinuum:
             for tier in self.tiers[:-1]:
                 tier.deploy(spec.name, model_cfg, params, spec.autoscaling)
         if spec.name not in self.fn_names:
+            self._fn_ids[spec.name] = len(self.fn_names)
             self.fn_names.append(spec.name)
-            self._arrivals[spec.name] = 0
+            # Each boundary parses the policy against ITS link's capacity,
+            # so auto+net caps offload by the link actually being crossed
+            # (mirrors the simulator's per-boundary policies).
+            links = self.topology.links
+            boundary_policies = [
+                Policy.parse(self._policy_spec, offload_cfg=self.offload_cfg,
+                             link_bytes_per_s=(
+                                 links[min(b, len(links) - 1)].bandwidth_Bps
+                                 if links else None))
+                for b in range(self._num_boundaries)]
             self.control = ControlLoop(
                 self.policy, len(self.fn_names), window=self.window,
                 control_interval_s=self.control_interval_s,
-                num_tiers=len(self.tiers))
+                num_tiers=len(self.tiers),
+                boundary_policies=boundary_policies)
 
     # -- request path (paper §3.3.2) ------------------------------------------
-    def submit(self, fn_name: str, req: Request) -> None:
+    def submit(self, fn_name: str, req: Request) -> bool:
+        """Queue a request at the ingress gateway.  Returns False when the
+        bounded backlog is full (the live 503 — a fast rejection whose
+        latency feeds Eq (1)'s bimodality, as in the simulator)."""
         req.arrival_s = time.perf_counter()
-        self.queue.append(_Queued(fn_name, req, req.arrival_s,
-                                  tick_no=self._tick_no))
-        self._arrivals[fn_name] = self._arrivals.get(fn_name, 0) + 1
+        item = _Queued(fn_name, req, req.arrival_s, tick_no=self._tick_no)
+        # Every arrival is ingress demand, admitted or not — the simulator
+        # counts a 503'd arrival into arrivals_in_interval the same way.
+        self._count_crossing(0, fn_name)
+        if not self.gateways[0].push(item):
+            req.failed = True
+            self._reject(0, fn_name)
+            return False
+        return True
+
+    def _count_crossing(self, b: int, fn: str) -> None:
+        if b < self._num_boundaries:
+            self._crossings[b][fn] = self._crossings[b].get(fn, 0) + 1
+
+    def _reject(self, ti: int, fn: str) -> None:
+        self.metrics.inc("rejected")
+        if ti < len(self.tiers) - 1 or len(self.tiers) == 1:
+            self.tiers[ti].metrics.record_latency(fn, self.reject_latency_s)
+
+    def _cross_link(self, item: _Queued, l: int) -> None:
+        """Move one queued request over link l (tier l -> tier l+1):
+        charge RTT + payload serialization to its latency clock (by
+        backdating the submit stamp, so both the measured latency and the
+        backlog age include time in flight, as in the simulator) and count
+        the boundary crossing for per-boundary demand."""
+        if l < len(self.topology.links):
+            item.t_submit -= self.topology.links[l].latency_s(
+                item.req.tokens.nbytes)
+        if not item.hedge:
+            self._count_crossing(l + 1, item.fn)
 
     def controller_update(self) -> np.ndarray:
-        """One scrape-and-update cycle through the shared ControlLoop
-        (every boundary of the chain); returns the ingress boundary's R_t
+        """One scrape-and-update cycle through the shared ControlLoop:
+        every boundary b sees tier b's latency windows, tier b's own
+        gateway backlog ages, and the demand that crossed into tier b
+        since the last scrape; returns the ingress boundary's R_t
         percentages."""
-        lats, valids = [], []
-        for tier in self.tiers[:-1] or self.tiers[:1]:
-            lat, valid = tier.metrics.latency_windows(self.window)
+        now = time.perf_counter()
+        lats, valids, qages = [], [], []
+        for b in range(self.control.num_boundaries):
+            tier_i = min(b, len(self.tiers) - 1)   # 1-tier chain: b=0
+            lat, valid = self.tiers[tier_i].metrics.latency_windows(
+                self.window)
             lats.append(lat)
             valids.append(valid)
-        now = time.perf_counter()
-        ages: List[List[float]] = [[] for _ in self.fn_names]
-        for item in self.queue:
-            # Only true *backlog* counts as in-flight age: requests that
-            # survived a previous scheduler round. Fresh arrivals have
-            # waited ~0 s — mixing those into X_l(t) would drag p50 toward
-            # zero and fire Eq (1) spuriously. (The simulator's queue only
-            # ever holds requests the previous rounds could not place, so
-            # its mixing is backlog-only by construction.)
-            if item.tick_no < self._tick_no:
-                ages[self.fn_names.index(item.fn)].append(now - item.t_submit)
-        # The gateway backlog lives at the ingress tier; deeper boundaries
-        # see completions only.
-        qages = [ages] + [None] * (len(lats) - 1)
-        arrivals = [self._arrivals.get(fn, 0) for fn in self.fn_names]
+            qages.append(self.gateways[tier_i].backlog_ages(
+                now, self._tick_no, self._fn_ids, len(self.fn_names)))
+        arrivals = [[c.get(fn, 0) for fn in self.fn_names]
+                    for c in self._crossings]
         R_all = self.control.step_tiers(lats, valids, queue_ages=qages,
                                         arrivals=arrivals)
-        for fn in self.fn_names:
-            self._arrivals[fn] = 0
+        for c in self._crossings:
+            c.clear()
         return R_all[0]
 
     def _latency_windows(self):
@@ -336,20 +460,26 @@ class EdgeCloudContinuum:
 
     # -- scheduler ------------------------------------------------------------
     def tick(self) -> Dict[str, float]:
-        """One scheduler round: controller update, tier assignment, drain
-        in waves (spilling down the chain when waterfall is on)."""
+        """One scheduler round: controller update, tier assignment of the
+        ingress batch, then drain every tier's gateway in waves (spilling
+        down the chain when waterfall is on)."""
         R = self.controller_update()
         self._clock += self.control_interval_s
         self._tick_no += 1
         served: Dict[str, int] = {t.name: 0 for t in self.tiers}
+        last = len(self.tiers) - 1
         hedged = waves = spilled = 0
         pairs: List[_HedgePair] = []
+        twins: List[Tuple[int, _Queued]] = []
 
-        n = len(self.queue)
-        items = [self.queue.popleft() for _ in range(n)]
-        pending: Dict[Tuple[Tier, str], List[_Queued]] = {}
+        # Route the ingress gateway's queue (fresh arrivals + ingress
+        # backlog) over the tiers; each assigned request crosses the links
+        # down to its tier's gateway.  Deeper gateways' backlogs are NOT
+        # re-routed: like the simulator's per-tier queues, they belong to
+        # their tier until served or spilled.
+        items = self.gateways[0].pop_all()
         if items:
-            fn_ids = np.asarray([self.fn_names.index(it.fn) for it in items],
+            fn_ids = np.asarray([self._fn_ids[it.fn] for it in items],
                                 np.int32)
             self.key, sub = jax.random.split(self.key)
             tier_idx = self.control.route_tiers(sub, fn_ids)
@@ -359,33 +489,53 @@ class EdgeCloudContinuum:
             self.key, hk = jax.random.split(self.key)
             hedge = self.control.hedge(hk, ages, fn_ids, lat, valid)
             for it, tj, hedge_it in zip(items, tier_idx, hedge):
-                primary = self.tiers[int(tj)]
-                pending.setdefault((primary, it.fn), []).append(it)
+                j = int(tj)
                 if bool(hedge_it):
                     # backup request on another tier (straggler hedge);
                     # only the winning arm's latency feeds the windows.
-                    backup = (self.tiers[0] if primary is self.tiers[-1]
-                              else self.tiers[-1])
+                    # The twin is stamped before the primary crosses any
+                    # link, so it does not inherit the primary's hop cost.
+                    bj = 0 if j == last else last
                     twin = Request(rid=it.req.rid, tokens=it.req.tokens,
                                    max_new=it.req.max_new,
                                    arrival_s=it.req.arrival_s)
                     pair = _HedgePair(fn=it.fn)
                     it.pair = pair
-                    pending.setdefault((backup, it.fn), []).append(
-                        _Queued(it.fn, twin, it.t_submit, hedge=True,
-                                pair=pair))
+                    twin_item = _Queued(it.fn, twin, it.t_submit,
+                                        tick_no=self._tick_no,
+                                        hedge=True, pair=pair)
+                    # the twin travels from the ingress gateway to its
+                    # backup tier, paying the same links a routed request
+                    # would (no crossing counters: it is duplicate work,
+                    # not demand) — else the twin-vs-primary win
+                    # comparison is biased toward the free-riding twin
+                    for l in range(bj):
+                        self._cross_link(twin_item, l)
+                    twins.append((bj, twin_item))
                     pairs.append(pair)
                     hedged += 1
+                for l in range(j):
+                    self._cross_link(it, l)
+                self.gateways[j].push(it, force=True)
+
+        # This tick's work: every tier's gateway contents + hedge twins.
+        pending: Dict[Tuple[int, str], List[_Queued]] = {}
+        for ti, gw in enumerate(self.gateways):
+            for it in gw.pop_all():
+                pending.setdefault((ti, it.fn), []).append(it)
+        for bj, it in twins:
+            pending.setdefault((bj, it.fn), []).append(it)
 
         # KPA scrape: every (tier, fn) observes its assigned concurrency
         # (including zeros — that is what ages idle functions to zero).
-        for tier in self.tiers:
+        for ti, tier in enumerate(self.tiers):
             for fn, asc in tier.autoscalers.items():
-                asc.observe(self._clock, float(len(pending.get((tier, fn), []))))
+                asc.observe(self._clock, float(len(pending.get((ti, fn), []))))
                 asc.desired(self._clock)
 
-        def dispatch(tier: Tier, fn: str, batch: List[_Queued]) -> None:
+        def dispatch(ti: int, fn: str, batch: List[_Queued]) -> None:
             nonlocal waves
+            tier = self.tiers[ti]
             record = [it.pair is None for it in batch]
             results = tier.serve_batch(
                 fn, [(it.req, it.t_submit) for it in batch], record=record)
@@ -404,57 +554,83 @@ class EdgeCloudContinuum:
         # concurrency into one batched serve (shared prefill + decode_all).
         while any(pending.values()) and not capped():
             progress = False
-            for (tier, fn), lst in pending.items():
+            for (ti, fn), lst in pending.items():
                 if not lst or capped():
                     continue
+                tier = self.tiers[ti]
                 budget = min(tier.free_slots(fn), tier.capacity(fn))
                 if budget <= 0:
                     continue
-                batch, pending[(tier, fn)] = lst[:budget], lst[budget:]
-                dispatch(tier, fn, batch)
+                batch, pending[(ti, fn)] = lst[:budget], lst[budget:]
+                dispatch(ti, fn, batch)
                 progress = True
             if not progress and self.topology.waterfall:
                 # Waterfall: a tier with no admitted capacity (e.g. scaled
                 # to zero with scale-up disabled) spills its pending load
-                # to the next tier down the chain.
-                for (tier, fn), lst in list(pending.items()):
-                    ti = self.tiers.index(tier)
-                    if (lst and ti < len(self.tiers) - 1
+                # over the link to the next tier's work queue.
+                for (ti, fn), lst in list(pending.items()):
+                    tier = self.tiers[ti]
+                    if (lst and ti < last
                             and min(tier.free_slots(fn),
                                     tier.capacity(fn)) <= 0):
-                        nxt = self.tiers[ti + 1]
-                        pending.setdefault((nxt, fn), []).extend(lst)
-                        pending[(tier, fn)] = []
+                        for it in lst:
+                            self._cross_link(it, ti)
+                        pending.setdefault((ti + 1, fn), []).extend(lst)
+                        pending[(ti, fn)] = []
                         spilled += len(lst)
                         progress = True
             if not progress:
                 # Scale-from-zero floor: a queued request implies >= 1
                 # desired replica next scrape; don't deadlock on degenerate
                 # autoscaling bounds in the meantime.
-                for (tier, fn), lst in pending.items():
-                    if lst and tier.free_slots(fn) > 0:
-                        dispatch(tier, fn, [lst.pop(0)])
+                for (ti, fn), lst in pending.items():
+                    if lst and self.tiers[ti].free_slots(fn) > 0:
+                        dispatch(ti, fn, [lst.pop(0)])
                         progress = True
                         break
                 if not progress:
                     raise RuntimeError("scheduler wedged: pending work but "
                                        "no free slot on any tier")
 
-        # Wave budget exhausted: unserved primaries go back to the gateway
-        # (keeping their submit time and tick stamp, so the next scrape
-        # sees their queue age); unserved hedge twins are just dropped.
-        leftovers = [it for lst in pending.values() for it in lst
-                     if not it.hedge]
-        for it in sorted(leftovers, key=lambda it: it.t_submit):
-            it.pair = None           # a requeued primary records normally
-            self.queue.append(it)
+        # Wave budget exhausted: unserved primaries whose hedge twin
+        # already completed adopt the twin's result (served once, by the
+        # twin — never requeued and served a second time); the rest go
+        # back to *their tier's* gateway, keeping their submit time and
+        # tick stamp so the next scrape sees their queue age at the
+        # boundary they actually wait at.  Unserved hedge twins are
+        # dropped.
+        adopted = 0
+        requeue: Dict[int, List[_Queued]] = {}
+        for (ti, fn), lst in pending.items():
+            for it in lst:
+                if it.hedge:
+                    continue
+                pair = it.pair
+                if pair is not None and pair.twin_lat is not None:
+                    it.req.output = pair.twin_req.output
+                    it.req.t_first = pair.twin_req.t_first
+                    it.req.t_done = pair.twin_req.t_done
+                    pair.twin_tier.metrics.record_latency(it.fn,
+                                                          pair.twin_lat)
+                    served[pair.twin_tier.name] += 1
+                    adopted += 1
+                    continue
+                it.pair = None       # a requeued primary records normally
+                requeue.setdefault(ti, []).append(it)
+        for ti, lst in requeue.items():
+            for it in sorted(lst, key=lambda it: it.t_submit):
+                if not self.gateways[ti].push(it):
+                    # the tier's bounded backlog is full: the request is
+                    # dropped for good (queue-proxy 503) and says so
+                    it.req.failed = True
+                    self._reject(ti, it.fn)
 
         # Resolve hedge pairs: only the winning arm's latency feeds the
         # controller windows, so a slow loser cannot bias R_t.
-        won = 0
+        won = adopted
         for pair in pairs:
             if pair.primary_lat is None:
-                continue             # primary requeued; pair dissolved
+                continue         # primary requeued or adopted; handled above
             if pair.twin_lat is not None and pair.twin_lat < pair.primary_lat:
                 pair.twin_tier.metrics.record_latency(pair.fn, pair.twin_lat)
                 won += 1
@@ -466,12 +642,20 @@ class EdgeCloudContinuum:
         if won:
             self.metrics.inc("hedges_won", won)
 
+        # Per-tick rejection count, like every sibling field (submit-time
+        # rejections since the last tick land in this tick's record).
+        rejected_total = sum(g.rejected for g in self.gateways)
+        rejected_tick = rejected_total - self._rejected_seen
+        self._rejected_seen = rejected_total
         rec = {"R": float(R.mean()) if len(R) else 0.0,
                "edge": served[self.tiers[0].name],
                "cloud": served[self.tiers[-1].name],
                "tiers": dict(served),
                "hedged": hedged, "hedges_won": won,
                "spilled": spilled, "waves": waves,
+               "backlog": {t.name: len(g)
+                           for t, g in zip(self.tiers, self.gateways)},
+               "rejected": rejected_tick,
                "replicas": {t.name: {fn: t.replicas(fn)
                                      for fn in t.autoscalers}
                             for t in self.tiers}}

@@ -1,0 +1,368 @@
+"""Per-tier gateways in the live runtime + the scheduler accounting
+fixes that ride along: hedge-twin adoption (no double service), fractional
+target concurrency, per-link net series, per-boundary demand/backlog
+signals, bounded gateway rejection, and live/sim control-loop parity at
+every boundary."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core.metrics import LatencyWindow, MetricsRegistry
+from repro.core.policy import ControlLoop, StaticSplit
+from repro.core.replication import AutoscalingPolicy, FunctionSpec
+from repro.core.simulator import ContinuumSimulator, SimConfig
+from repro.core.topology import LinkSpec, TierSpec, Topology
+from repro.models import model_zoo
+from repro.platform import Continuum, Request
+from repro.serving.tiers import Gateway, Tier, TierConfig, _Queued
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = configs.get_smoke_config("stablelm-1.6b")
+    params = model_zoo.init(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _req(rid, max_new=1):
+    return Request(rid=rid, tokens=np.arange(6, dtype=np.int32),
+                   max_new=max_new)
+
+
+# ---- Gateway unit behaviour -------------------------------------------------
+
+def test_gateway_bounds_and_backlog_ages():
+    gw = Gateway(capacity=2)
+    a = _Queued("f", _req(0), t_submit=10.0, tick_no=0)
+    b = _Queued("f", _req(1), t_submit=11.0, tick_no=1)
+    c = _Queued("f", _req(2), t_submit=12.0, tick_no=1)
+    assert gw.push(a) and gw.push(b)
+    assert not gw.push(c)                      # bounded backlog: rejected
+    assert gw.rejected == 1 and len(gw) == 2
+    assert gw.push(c, force=True)              # in-tick placement bypasses
+    assert len(gw) == 3
+    # only entries that survived a previous scheduler round are backlog
+    ages = gw.backlog_ages(now=15.0, tick_no=1,
+                           fn_ids={"f": 0}, num_functions=1)
+    assert ages == [[5.0]]
+    assert gw.pop_all() == [a, b, c] and len(gw) == 0
+
+
+def test_legacy_pair_keeps_elastic_cloud_unbounded():
+    """Topology.pair mirrors the paper apparatus: bounded edge queue,
+    unbounded cloud — a legacy 2-tier continuum must not silently drop
+    cloud-bound leftovers at a gateway cap the seed never had."""
+    topo = Topology.pair(TierConfig(slots=2), TierConfig(slots=8))
+    assert topo.tiers[0].queue_depth_per_slot == 8
+    assert topo.tiers[1].queue_depth_per_slot is None
+    cc = Continuum(edge=TierConfig(slots=2, max_len=64),
+                   cloud=TierConfig(slots=8, max_len=64), policy=0.0)
+    assert cc.gateways[0].capacity == 16 and cc.gateways[1].capacity is None
+
+
+def test_submit_rejects_when_ingress_gateway_full(model):
+    cfg, params = model
+    topo = Topology(
+        tiers=(TierSpec("edge", slots=1, max_len=64, queue_depth_per_slot=1),
+               TierSpec("cloud", slots=4, max_len=64)),
+        links=(LinkSpec(rtt_s=0.0),), waterfall=False)
+    cc = Continuum.from_topology(topo, policy=0.0, seed=0)
+    cc.deploy(FunctionSpec(name="fn", arch="stablelm-1.6b"), cfg, params)
+    reqs = [_req(i) for i in range(3)]
+    oks = [cc.submit("fn", r) for r in reqs]
+    assert oks == [True, False, False]         # capacity = 1 slot x depth 1
+    assert [r.failed for r in reqs] == [False, True, True]
+    assert cc.gateways[0].rejected == 2
+    assert cc.metrics.counters["rejected"] == 2
+    # every arrival counts as ingress demand, admitted or not (the
+    # simulator counts 503'd arrivals the same way)
+    assert cc._crossings[0]["fn"] == 3
+    # fast rejections are part of the ingress Eq (1) distribution
+    lat, valid = cc.tiers[0].metrics.latency_windows(8)
+    assert int(valid.sum()) == 2
+    np.testing.assert_allclose(lat[0][valid[0]], cc.reject_latency_s)
+    rec = cc.tick()
+    assert sum(rec["tiers"].values()) == 1     # the admitted request
+    assert rec["rejected"] == 2                # per-tick (pre-tick submits)
+    assert cc.tick()["rejected"] == 0          # a delta, not a running sum
+
+
+def test_requeue_overflow_drops_and_marks_failed(model):
+    """A wave-budget leftover that does not fit its tier's bounded
+    gateway is dropped for good — and the request says so instead of
+    silently never completing."""
+    cfg, params = model
+    topo = Topology(
+        tiers=(TierSpec("edge", slots=2, max_len=64),
+               TierSpec("cloud", slots=1, max_len=64,
+                        queue_depth_per_slot=1)),
+        links=(LinkSpec(rtt_s=0.0),), waterfall=False)
+    cc = Continuum.from_topology(topo, policy=100.0, seed=0,
+                                 max_waves_per_tick=1)
+    cc.deploy(FunctionSpec(name="fn", arch="stablelm-1.6b"), cfg, params)
+    reqs = [_req(i) for i in range(4)]
+    for r in reqs:
+        assert cc.submit("fn", r)              # ingress gateway holds all 4
+    rec = cc.tick()                            # all routed to the cloud
+    assert rec["tiers"]["cloud"] == 1          # single admitted wave
+    assert cc.queued == 1                      # one leftover fit the gateway
+    assert rec["rejected"] == 2                # two did not: dropped
+    assert sum(r.failed for r in reqs) == 2
+    rec2 = cc.tick()
+    assert rec2["tiers"]["cloud"] == 1 and rec2["rejected"] == 0
+    served = sum(int(r.output is not None) for r in reqs)
+    assert served == 2 and served + sum(r.failed for r in reqs) == 4
+
+
+# ---- satellite: fractional target concurrency -------------------------------
+
+def test_fractional_target_concurrency_capacity(model):
+    cfg, params = model
+    tier = Tier("t", TierConfig(slots=4, max_len=64))
+    tier.deploy("fn", cfg, params,
+                AutoscalingPolicy(min_scale=2, max_scale=4,
+                                  target_concurrency=0.5))
+    asc = tier.autoscalers["fn"]
+    assert asc.replicas == 2
+    # ceil(2 x 0.5) = 1, not int(2 x max(0.5, 1.0)) = 2 (the old
+    # over-admission: a sub-one target silently rounded up to 1/replica)
+    assert tier.capacity("fn") == 1
+    asc.state.replicas = 4
+    assert tier.capacity("fn") == 2            # ceil(4 x 0.5)
+    asc.state.replicas = 0
+    assert tier.capacity("fn") == 0            # scaled to zero
+
+
+def test_capacity_still_bounded_by_slots(model):
+    cfg, params = model
+    tier = Tier("t", TierConfig(slots=4, max_len=64))
+    tier.deploy("fn", cfg, params,
+                AutoscalingPolicy(min_scale=4, max_scale=8,
+                                  target_concurrency=4.0))
+    assert tier.capacity("fn") == 4            # 16 wanted, 4-slot pool
+
+
+# ---- satellite: hedge-twin adoption (no double service) ---------------------
+
+class _AlwaysHedge(StaticSplit):
+    """Keep all primaries at the ingress tier, hedge every queued item."""
+
+    def __init__(self):
+        super().__init__(0.0)
+
+    def hedge(self, key, ages_s, fn_ids, latencies, valid):
+        return np.ones(len(fn_ids), bool)
+
+
+def test_hedge_twin_adoption_no_double_service(model):
+    cfg, params = model
+    topo = Topology(
+        tiers=(TierSpec("edge", slots=2, max_len=64,
+                        autoscaling=AutoscalingPolicy(min_scale=0,
+                                                      max_scale=0)),
+               TierSpec("cloud", slots=8, max_len=64)),
+        links=(LinkSpec(rtt_s=0.0),), waterfall=False)
+    cc = Continuum.from_topology(topo, policy=_AlwaysHedge(), seed=0,
+                                 max_waves_per_tick=1)
+    cc.deploy(FunctionSpec(name="fn", arch="stablelm-1.6b"), cfg, params)
+    req = _req(1, max_new=2)
+    assert cc.submit("fn", req)
+    # The single wave serves the hedge twin on the cloud; the primary is
+    # stranded at the zero-capacity edge.  The old scheduler requeued the
+    # primary and served the same rid AGAIN next tick; now it adopts the
+    # twin's completed result.
+    rec = cc.tick()
+    assert rec["hedged"] == 1 and rec["waves"] == 1
+    assert rec["tiers"] == {"edge": 0, "cloud": 1}
+    assert cc.queued == 0                      # adopted, not requeued
+    assert req.output is not None              # twin's tokens copied over
+    assert req.t_done > 0.0
+    assert cc.metrics.counters["hedges_won"] == 1
+    # exactly one latency entry, on the serving tier
+    _, v_edge = cc.tiers[0].metrics.latency_windows(16)
+    _, v_cloud = cc.tiers[1].metrics.latency_windows(16)
+    assert int(v_edge.sum()) == 0 and int(v_cloud.sum()) == 1
+    rec2 = cc.tick()                           # nothing left to serve
+    assert sum(rec2["tiers"].values()) == 0 and rec2["waves"] == 0
+
+
+def test_hedge_twin_pays_link_latency(model):
+    """A twin dispatched down-chain crosses the same links a routed
+    request would, so the twin-vs-primary comparison (and an adopted
+    twin's recorded latency) includes the hop cost."""
+    cfg, params = model
+    topo = Topology(
+        tiers=(TierSpec("edge", slots=2, max_len=64,
+                        autoscaling=AutoscalingPolicy(min_scale=0,
+                                                      max_scale=0)),
+               TierSpec("cloud", slots=8, max_len=64)),
+        links=(LinkSpec(rtt_s=0.5),), waterfall=False)
+    cc = Continuum.from_topology(topo, policy=_AlwaysHedge(), seed=0,
+                                 max_waves_per_tick=1)
+    cc.deploy(FunctionSpec(name="fn", arch="stablelm-1.6b"), cfg, params)
+    assert cc.submit("fn", _req(1, max_new=2))
+    cc.tick()                                  # twin adopted on the cloud
+    lat, valid = cc.tiers[1].metrics.latency_windows(16)
+    assert int(valid.sum()) == 1
+    assert float(lat[0][valid[0]][0]) >= 0.5   # link RTT charged
+
+
+# ---- satellite: per-link net series in the simulator ------------------------
+
+_SIM3 = SimConfig(duration_s=90.0, low_rps=2.0, high_rps=12.0,
+                  ramp_start_s=10.0, ramp_end_s=40.0, seed=0)
+
+
+def test_sim_two_tier_net_links_headline_identical():
+    r = ContinuumSimulator("io", 50.0, SimConfig(duration_s=30.0)).run()
+    assert r.net_links_MBps.shape == (1, len(r.times))
+    np.testing.assert_array_equal(r.net_links_MBps[0], r.net_MBps)
+
+
+def test_sim_three_tier_records_deep_link_egress():
+    topo = Topology.device_edge_cloud(device_slots=2, edge_slots=4,
+                                      cloud_slots=64)
+    r = ContinuumSimulator("matmult", "auto", _SIM3, topology=topo).run()
+    assert r.net_links_MBps.shape == (2, len(r.times))
+    np.testing.assert_array_equal(r.net_links_MBps[0], r.net_MBps)
+    assert r.net_links_MBps[1].max() > 0.0     # cloud-ward traffic visible
+    assert "net_peak_MBps_link1" in r.summary()
+
+
+# ---- tentpole: per-boundary demand, backlog, and parity ---------------------
+
+def test_live_net_aware_parses_per_boundary_link_caps(model):
+    cfg, params = model
+    topo = Topology(
+        tiers=(TierSpec("device", slots=1, max_len=64),
+               TierSpec("edge", slots=2, max_len=64),
+               TierSpec("cloud", slots=4, max_len=64)),
+        links=(LinkSpec(rtt_s=0.005, bandwidth_Bps=5e6),
+               LinkSpec(rtt_s=0.04, bandwidth_Bps=80e6)))
+    cc = Continuum.from_topology(topo, policy="auto+net", seed=0)
+    cc.deploy(FunctionSpec(name="fn", arch="stablelm-1.6b"), cfg, params)
+    assert cc.control.policies[0].cfg.link_bytes_per_s == 5e6
+    assert cc.control.policies[1].cfg.link_bytes_per_s == 80e6
+
+
+def test_live_and_sim_step_tiers_identical_per_boundary(model):
+    """Shared per-boundary trace (windows + backlog ages + crossing
+    demand) through the simulator's and the live runtime's ControlLoops:
+    R_t trajectories must match at EVERY boundary."""
+    cfg, params = model
+    sim = ContinuumSimulator("matmult", "auto", SimConfig(duration_s=10.0),
+                             topology=Topology.device_edge_cloud())
+    topo = Topology(
+        tiers=(TierSpec("device", slots=1, max_len=64),
+               TierSpec("edge", slots=2, max_len=64),
+               TierSpec("cloud", slots=8, max_len=64)),
+        links=(LinkSpec(rtt_s=0.005), LinkSpec(rtt_s=0.04)))
+    cc = Continuum.from_topology(topo, policy="auto", seed=0)
+    cc.deploy(FunctionSpec(name="fn", arch="stablelm-1.6b"), cfg, params)
+    rng = np.random.default_rng(7)
+    R_sim, R_live = [], []
+    for t in range(25):
+        lats = [rng.lognormal(-2, 0.8, (1, 64)).astype(np.float32)
+                for _ in range(2)]
+        valids = [rng.uniform(size=(1, 64)) < 0.9 for _ in range(2)]
+        qages = [[list(rng.uniform(0.1, 4.0, size=t % 4))],
+                 [list(rng.uniform(0.5, 8.0, size=(t + 1) % 3))]]
+        arrivals = [[float(t % 7)], [float(t % 5)]]
+        R_sim.append(np.array(sim.control.step_tiers(
+            lats, valids, queue_ages=qages, arrivals=arrivals)))
+        R_live.append(np.array(cc.control.step_tiers(
+            lats, valids, queue_ages=qages, arrivals=arrivals)))
+    np.testing.assert_array_equal(np.asarray(R_sim), np.asarray(R_live))
+    assert np.asarray(R_sim)[:, 1].max() > 0.0   # deep boundary engages
+
+
+def _backlogged_three_tier(model):
+    """3-tier live chain under a wave budget: the device tier is pinned to
+    zero (waterfall spills its load over link 0), the edge tier admits one
+    request per tick, so the edge's OWN gateway accumulates backlog."""
+    cfg, params = model
+    topo = Topology(
+        tiers=(TierSpec("device", slots=2, max_len=64,
+                        autoscaling=AutoscalingPolicy(min_scale=0,
+                                                      max_scale=0)),
+               TierSpec("edge", slots=2, max_len=64,
+                        autoscaling=AutoscalingPolicy(
+                            min_scale=1, max_scale=1,
+                            target_concurrency=1.0)),
+               TierSpec("cloud", slots=8, max_len=64)),
+        links=(LinkSpec(rtt_s=0.0), LinkSpec(rtt_s=0.0)),
+        waterfall=True)
+    cc = Continuum.from_topology(topo, policy="auto", seed=0,
+                                 max_waves_per_tick=1)
+    cc.deploy(FunctionSpec(name="fn", arch="stablelm-1.6b"), cfg, params)
+    return cc
+
+
+def test_gateway_spill_leaves_backlog_at_the_spilled_tier(model):
+    cc = _backlogged_three_tier(model)
+    for i in range(4):
+        assert cc.submit("fn", _req(i))
+    rec = cc.tick()
+    # all four spilled device -> edge over the link; one served, the rest
+    # wait in the EDGE gateway (not back at the ingress deque)
+    assert rec["spilled"] == 4
+    assert rec["tiers"] == {"device": 0, "edge": 1, "cloud": 0}
+    assert rec["backlog"] == {"device": 0, "edge": 3, "cloud": 0}
+    assert len(cc.gateways[1]) == 3
+    assert all(it.tick_no < cc._tick_no for it in cc.gateways[1].items)
+    # spill counted as demand that crossed boundary 1 (for the next scrape)
+    assert cc._crossings[1]["fn"] == 4
+    # the backlog drains from the edge gateway on later ticks, nothing lost
+    for _ in range(6):
+        if cc.queued == 0:
+            break
+        cc.tick()
+    assert cc.queued == 0
+    assert sum(sum(r["tiers"].values()) for r in cc.log) == 4
+
+
+def test_intermediate_boundary_fires_on_own_gateway_backlog(model):
+    """The acceptance scenario: boundary 1's R_t rises because tier 1's
+    own gateway backlog ages — while its completion windows are uniform
+    (ratio 1), which under the old completions-only signal kept R_t at 0
+    until the slow requests eventually drained."""
+    cc = _backlogged_three_tier(model)
+    for i in range(4):
+        assert cc.submit("fn", _req(i))
+    cc.tick()
+    assert len(cc.gateways[1]) == 3
+    assert float(cc.control.R_all[1][0]) == 0.0
+    # uniform fast completion history at the edge (no tail of its own)
+    cc.tiers[1].metrics.clear()
+    for _ in range(20):
+        cc.tiers[1].metrics.record_latency("fn", 0.05)
+    # completions-only control (the old live signal): stays at zero
+    lat1, val1 = cc.tiers[1].metrics.latency_windows(cc.window)
+    zeros = np.zeros_like(lat1)
+    ref = ControlLoop("auto", 1, window=cc.window, num_tiers=3)
+    ref.step_tiers([zeros, lat1], [zeros.astype(bool), val1])
+    assert float(ref.R_all[1][0]) == 0.0
+    # the same windows + the gateway's own backlog ages: boundary 1 fires
+    for it in cc.gateways[1].items:
+        it.t_submit -= 30.0
+    cc.controller_update()
+    assert float(cc.control.R_all[1][0]) > 0.0
+    assert float(cc.control.R_all[0][0]) == 0.0   # device boundary quiet
+
+
+# ---- satellite: public LatencyWindow.clear ----------------------------------
+
+def test_latency_window_public_clear():
+    w = LatencyWindow(capacity=4)
+    w.record(0.1)
+    w.record(0.2)
+    assert len(w) == 2
+    w.clear()
+    assert len(w) == 0
+    reg = MetricsRegistry(["a"])
+    reg.record_latency("a", 1.0)
+    reg.inc("x")
+    reg.clear()
+    assert len(reg.latency["a"]) == 0 and not reg.counters
