@@ -1,0 +1,163 @@
+"""Benchmark regression gate for CI.
+
+Runs a fresh ``serving_bench`` + ``controller_micro`` pass, then compares
+the CPU-stable metrics against the committed goldens in
+``benchmarks/results/*.json``.  Absolute wall-clock numbers vary wildly
+across machines, so the gate checks *relative* metrics (speedup ratios:
+throughput-shaped, machine-independent) and structural invariants
+(served-request counts, onset detection), failing on a >25% drop:
+
+    PYTHONPATH=src python -m benchmarks.check_regression --out fresh
+    PYTHONPATH=src python -m benchmarks.check_regression \
+        --fresh fresh --skip-run          # compare an existing run
+
+Refreshing the goldens after an intentional change is one command (see
+README): ``PYTHONPATH=src python -m benchmarks.run serving controller``
+rewrites ``benchmarks/results/*.json`` in place; ``--json out.json``
+writes the same payload as one combined file, which this gate accepts
+anywhere a results directory is.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Dict, List, Optional, Tuple
+
+BASELINE = os.path.join(os.path.dirname(__file__), "results")
+
+# (bench, dotted metric path, kind) — every entry must be stable on CPU
+# across machines.  kind:
+#   "ratio":  higher is better; fail when fresh < golden * (1 - threshold)
+#   "count":  exact match (deterministic request accounting)
+#   "flag":   must be truthy whenever the golden is
+STABLE_METRICS: List[Tuple[str, str, str]] = [
+    ("serving_bench", "scheduler.batched_speedup", "ratio"),
+    ("serving_bench", "continuous_vs_wave.p95_speedup", "ratio"),
+    ("serving_bench", "continuous_vs_wave.p50_speedup", "ratio"),
+    ("serving_bench", "prefill_bucketing.bucketed_speedup", "ratio"),
+    ("serving_bench", "policies.edge_only.served", "count"),
+    ("serving_bench", "policies.auto.served", "count"),
+    ("serving_bench", "scheduler.batched.served", "count"),
+    ("serving_bench", "continuous_vs_wave.continuous.served", "count"),
+    ("serving_bench", "continuous_vs_wave.wave.served", "count"),
+    ("serving_bench", "closed_loop.onset_detected", "flag"),
+    ("controller_micro", "route_speedup_B4096", "ratio"),
+]
+
+
+def dig(d: Dict, path: str):
+    """Resolve a dotted path into nested dicts (None when absent)."""
+    cur = d
+    for part in path.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            return None
+        cur = cur[part]
+    return cur
+
+
+def derive(results: Dict) -> Dict:
+    """Add metrics computed from raw bench output (ratios of timings are
+    machine-stable even when the timings are not)."""
+    cm = results.get("controller_micro")
+    if cm and "route_batch_B4096_us" in cm:
+        cm = dict(cm)
+        cm["route_speedup_B4096"] = (cm["route_batch_dense_B4096_us"]
+                                     / cm["route_batch_B4096_us"])
+        results = dict(results)
+        results["controller_micro"] = cm
+    return results
+
+
+def load_results(path: str) -> Dict[str, Dict]:
+    """Load bench results from a directory of ``<bench>.json`` files or
+    from one combined JSON (the ``benchmarks/run.py --json`` schema:
+    ``{bench_name: {...}}``)."""
+    if os.path.isdir(path):
+        out = {}
+        for name in os.listdir(path):
+            if name.endswith(".json"):
+                with open(os.path.join(path, name)) as f:
+                    out[name[:-len(".json")]] = json.load(f)
+        return out
+    with open(path) as f:
+        return json.load(f)
+
+
+def compare(fresh: Dict[str, Dict], golden: Dict[str, Dict],
+            threshold: float = 0.25) -> List[str]:
+    """Return the list of regressions (empty = gate passes)."""
+    fresh, golden = derive(fresh), derive(golden)
+    problems: List[str] = []
+    for bench, path, kind in STABLE_METRICS:
+        want = dig(golden.get(bench, {}), path)
+        if want is None:
+            continue                    # golden predates this metric
+        got = dig(fresh.get(bench, {}), path)
+        name = f"{bench}:{path}"
+        if got is None:
+            problems.append(f"{name}: missing from fresh results")
+        elif kind == "ratio":
+            floor = want * (1.0 - threshold)
+            if got < floor:
+                problems.append(
+                    f"{name}: {got:.3f} < {floor:.3f} "
+                    f"(golden {want:.3f}, -{threshold:.0%} allowed)")
+        elif kind == "count":
+            if got != want:
+                problems.append(f"{name}: {got} != golden {want}")
+        elif kind == "flag":
+            if bool(want) and not bool(got):
+                problems.append(f"{name}: {got!r}, golden {want!r}")
+    return problems
+
+
+def run_benches(out_dir: str, benches: List[str]) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    if "serving" in benches:
+        from benchmarks import serving_bench
+        serving_bench.main(out_dir)
+    if "controller" in benches:
+        from benchmarks import controller_micro
+        controller_micro.main(out_dir)
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", default=BASELINE,
+                    help="committed goldens (dir of <bench>.json, or one "
+                         "combined JSON)")
+    ap.add_argument("--out", default="fresh-results",
+                    help="where the fresh bench JSONs are written")
+    ap.add_argument("--fresh", default=None,
+                    help="compare these results instead of --out")
+    ap.add_argument("--benches", nargs="*", default=["serving", "controller"],
+                    choices=["serving", "controller"])
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="max fractional drop allowed on ratio metrics")
+    ap.add_argument("--skip-run", action="store_true",
+                    help="only compare; do not run the benches")
+    args = ap.parse_args(argv)
+
+    if not args.skip_run:
+        run_benches(args.out, args.benches)
+    fresh = load_results(args.fresh or args.out)
+    golden = load_results(args.baseline)
+    problems = compare(fresh, golden, args.threshold)
+
+    checked = sum(1 for b, p, _ in STABLE_METRICS
+                  if dig(derive(golden).get(b, {}), p) is not None)
+    if problems:
+        print(f"REGRESSION GATE FAILED ({len(problems)}/{checked} metrics):")
+        for p in problems:
+            print(f"  - {p}")
+        return 1
+    print(f"regression gate passed: {checked} stable metrics within "
+          f"{args.threshold:.0%} of {args.baseline}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

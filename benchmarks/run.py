@@ -5,33 +5,59 @@ One bench per paper artifact + the roofline report:
   table2       — Table 2 (successful responses per workload x policy)
   fig2         — Figure 2 time series (latency/CPU/memory/network CSVs)
   controller   — Eqs (1)-(4) microbenchmarks (jitted + sketch paths)
-  serving      — live two-tier engine + policy comparison
+  serving      — live two-tier engine + policy + scheduler comparisons
   roofline     — §Roofline table from the dry-run artifacts
 
 Pass bench names to run a subset: ``python -m benchmarks.run table2 roofline``.
+
+JSON-writing benches refresh the regression-gate goldens in
+``benchmarks/results/`` in place — so after an intentional perf change,
+``PYTHONPATH=src python -m benchmarks.run serving controller`` is the one
+command that regenerates everything ``benchmarks/check_regression.py``
+reads.  ``--json out.json`` additionally writes the same payload as one
+combined ``{bench_name: {...}}`` file (also accepted by the gate's
+``--baseline``/``--fresh``).
 """
 
 from __future__ import annotations
 
+import argparse
+import json
 import os
-import sys
 import time
 
 RESULTS = os.path.join(os.path.dirname(__file__), "results")
+BENCHES = ("table2", "fig2", "controller", "serving", "roofline")
+#: benches that write a results/<name>.json artifact (the gate's inputs)
+JSON_ARTIFACTS = {"table2": "table2", "controller": "controller_micro",
+                  "serving": "serving_bench"}
 
 
 def main(argv=None):
-    argv = list(sys.argv[1:] if argv is None else argv)
-    wanted = set(argv) if argv else {"table2", "fig2", "controller",
-                                     "serving", "roofline"}
-    os.makedirs(RESULTS, exist_ok=True)
+    ap = argparse.ArgumentParser(
+        description="run the paper-artifact benchmarks")
+    ap.add_argument("benches", nargs="*", default=[],
+                    help=f"subset to run from {BENCHES} (default: all)")
+    ap.add_argument("--results-dir", default=RESULTS,
+                    help="where per-bench JSON artifacts are written "
+                         "(default: benchmarks/results — the goldens)")
+    ap.add_argument("--json", default=None, metavar="OUT",
+                    help="also write one combined {bench: results} JSON — "
+                         "the schema check_regression.py reads")
+    args = ap.parse_args(argv)
+    unknown = set(args.benches) - set(BENCHES)
+    if unknown:
+        ap.error(f"unknown benches {sorted(unknown)}; pick from {BENCHES}")
+    wanted = set(args.benches) if args.benches else set(BENCHES)
+    results_dir = args.results_dir
+    os.makedirs(results_dir, exist_ok=True)
     t0 = time.time()
 
     if "table2" in wanted:
         print("\n" + "=" * 72 + "\nTable 2 — successful responses "
               "(simulator, 4 workloads x 6 policies)\n" + "=" * 72)
         from benchmarks import table2_responses
-        table2_responses.main(RESULTS)
+        table2_responses.main(results_dir)
 
     if "fig2" in wanted:
         print("\n" + "=" * 72 + "\nFigure 2 — metric time series\n" + "=" * 72)
@@ -41,20 +67,33 @@ def main(argv=None):
     if "controller" in wanted:
         print("\n" + "=" * 72 + "\nController microbenchmarks\n" + "=" * 72)
         from benchmarks import controller_micro
-        controller_micro.main(RESULTS)
+        controller_micro.main(results_dir)
 
     if "serving" in wanted:
         print("\n" + "=" * 72 + "\nServing bench (live engine)\n" + "=" * 72)
         from benchmarks import serving_bench
-        serving_bench.main(RESULTS)
+        serving_bench.main(results_dir)
 
     if "roofline" in wanted:
         print("\n" + "=" * 72 + "\n§Roofline — dry-run derived terms\n" + "=" * 72)
         from benchmarks import roofline
         roofline.main()
 
+    if args.json:
+        combined = {}
+        for bench, stem in JSON_ARTIFACTS.items():
+            if bench not in wanted:
+                continue
+            path = os.path.join(results_dir, f"{stem}.json")
+            if os.path.exists(path):
+                with open(path) as f:
+                    combined[stem] = json.load(f)
+        with open(args.json, "w") as f:
+            json.dump(combined, f, indent=1)
+        print(f"combined results -> {args.json} ({sorted(combined)})")
+
     print(f"\nall benches done in {time.time()-t0:.1f}s; artifacts in "
-          f"{RESULTS}")
+          f"{results_dir}")
 
 
 if __name__ == "__main__":

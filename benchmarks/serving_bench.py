@@ -1,14 +1,18 @@
 """Serving-path microbench: tokens/s through the continuum on the smoke
 configs, offload-policy comparison at fixed wall budget, the
-batched-vs-serial scheduler comparison, the bucketed-vs-padded prefill
+batched-vs-serial scheduler comparison, the continuous-vs-wave scheduler
+comparison on a mixed-length workload, the bucketed-vs-padded prefill
 comparison, a closed-loop (submit-while-serving) driver, and a 3-tier
 chain with per-tier request counts.
 
 This is the live-engine counterpart of the simulator benches: real jitted
 prefill/decode steps, real controller, one CPU device — numbers are
-CPU-relative but the POLICY ordering mirrors the paper's Table 2, and the
-batched wave scheduler (shared ``decode_all`` stream per wave) beats the
-serial ``serve_one``-per-request baseline on the same workload.
+CPU-relative but the POLICY ordering mirrors the paper's Table 2.  The
+"batched" arm of ``bench_scheduler`` is the continuous-batching scheduler
+(the runtime default) against the serial ``serve_one``-per-request
+baseline; ``bench_continuous_vs_wave`` holds the legacy run-to-completion
+wave scheduler as the baseline and reports the interactive-class tail
+latency win.
 """
 
 from __future__ import annotations
@@ -60,12 +64,13 @@ def _workload(rounds: int, seed: int, max_new: int = 6):
 
 
 def _mk_continuum(policy_cfg: offload.OffloadConfig, seed: int,
-                  policy="auto") -> Continuum:
+                  policy="auto", **kwargs) -> Continuum:
     cfg = configs.get_smoke_config("stablelm-1.6b")
     params = model_zoo.init(jax.random.PRNGKey(seed), cfg)
     cc = Continuum(edge=TierConfig(slots=2, max_len=64),
                    cloud=TierConfig(slots=8, max_len=64),
-                   policy=policy, offload_cfg=policy_cfg, seed=seed)
+                   policy=policy, offload_cfg=policy_cfg, seed=seed,
+                   **kwargs)
     cc.deploy(FunctionSpec(name="fn", arch="stablelm-1.6b"), cfg, params)
     return cc
 
@@ -100,38 +105,39 @@ def bench_policies(rounds: int = 12, seed: int = 0):
     return out
 
 
-def bench_scheduler(rounds: int = 12, seed: int = 0):
-    """Same workload through (a) the batched wave scheduler and (b) the
-    serial ``serve_one``-per-request baseline, under an identical *fixed*
-    50% split (so routing cannot diverge between the two paths).
+def _warmup(cc):
+    """Compile prefill/decode on both tiers before timing — every
+    power-of-two wave shape the bucketed prefill can hit — plus the
+    router's padded batch shapes, then drop the (compile-skewed)
+    warmup latencies from the scraped metrics."""
+    for tier in (cc.edge, cc.cloud):
+        g = 1
+        while g <= tier.cfg.slots:
+            reqs = [(Request(rid=-1 - i, tokens=np.zeros(6, np.int32),
+                             max_new=2), time.perf_counter())
+                    for i in range(g)]
+            tier.serve_batch("fn", reqs)
+            g *= 2
+        tier.metrics.clear()
+    key = jax.random.PRNGKey(0)
+    for n in (1, 2, 4, 8, 16):
+        cc.control.route_tiers(key, np.zeros(n, np.int32))
+        cc.control.route(key, np.zeros(n, np.int32))
 
-    The batched path packs each wave into one prefill + one shared
-    ``decode_all`` stream, so B co-scheduled requests cost ~max_new decode
-    steps instead of B * max_new — that is the req/s win reported here.
+
+def bench_scheduler(rounds: int = 12, seed: int = 0):
+    """Same workload through (a) the continuous-batching scheduler and
+    (b) the serial ``serve_one``-per-request baseline, under an identical
+    *fixed* 50% split (so routing cannot diverge between the two paths).
+
+    The batched path packs admissions into shared prefill + ``decode_all``
+    streams, so B co-scheduled requests cost ~max_new decode steps instead
+    of B * max_new — that is the req/s win reported here.
     """
     sched = _workload(rounds, seed)
     out = {}
 
-    def _warmup(cc):
-        """Compile prefill/decode on both tiers before timing — every
-        power-of-two wave shape the bucketed prefill can hit — plus the
-        router's padded batch shapes, then drop the (compile-skewed)
-        warmup latencies from the scraped metrics."""
-        for tier in (cc.edge, cc.cloud):
-            g = 1
-            while g <= tier.cfg.slots:
-                reqs = [(Request(rid=-1 - i, tokens=np.zeros(6, np.int32),
-                                 max_new=2), time.perf_counter())
-                        for i in range(g)]
-                tier.serve_batch("fn", reqs)
-                g *= 2
-            tier.metrics.clear()
-        key = jax.random.PRNGKey(0)
-        for n in (1, 2, 4, 8, 16):
-            cc.control.route_tiers(key, np.zeros(n, np.int32))
-            cc.control.route(key, np.zeros(n, np.int32))
-
-    # (a) batched: submit per round, tick drains in waves
+    # (a) batched: submit per round, tick drains continuously
     cc = _mk_continuum(offload.OffloadConfig(), seed, policy=50.0)
     _warmup(cc)
     rid = 0
@@ -186,6 +192,64 @@ def bench_scheduler(rounds: int = 12, seed: int = 0):
         "req_per_s": rid / wall_serial,
     }
     out["batched_speedup"] = wall_serial / wall_batched
+    return out
+
+
+def bench_continuous_vs_wave(rounds: int = 5, seed: int = 0):
+    """Mixed-length workload through (a) the continuous-batching decode
+    loop and (b) the legacy run-to-completion wave scheduler, under an
+    identical fixed 50% split.
+
+    Each round submits one long request alongside a burst of short ones —
+    more than the edge has slots.  The wave scheduler runs every wave to
+    completion, so the backlogged short requests wait out the long
+    request's whole decode; the continuous loop retires finished rows
+    mid-stream and admits queued requests into the freed slots the same
+    step.  The headline is the tail (p95) latency of the short-heavy mix.
+    """
+    rng = np.random.default_rng(seed)
+    sched = []
+    for rnd in range(rounds):
+        sched.append((rnd, rng.integers(0, 128, 6).astype(np.int32), 20))
+        for _ in range(6):
+            sched.append((rnd, rng.integers(0, 128, 6).astype(np.int32), 2))
+    out = {}
+    for mode in ("wave", "continuous"):
+        cc = _mk_continuum(offload.OffloadConfig(), seed, policy=50.0,
+                           scheduler=mode)
+        _warmup(cc)
+        reqs, rid = [], 0
+        t0 = time.perf_counter()
+        for rnd in range(rounds):
+            for r, toks, max_new in sched:
+                if r == rnd:
+                    req = Request(rid=rid, tokens=toks, max_new=max_new)
+                    cc.submit("fn", req)
+                    reqs.append(req)
+                    rid += 1
+            cc.tick()
+        wall = time.perf_counter() - t0
+        # per-class latency from the request objects themselves: the
+        # interactive (short) class is where head-of-line blocking shows
+        by_class = {"short": [], "long": []}
+        for req in reqs:
+            cls = "long" if req.max_new >= 20 else "short"
+            by_class[cls].append(req.t_done - req.arrival_s)
+        short = np.asarray(by_class["short"])
+        out[mode] = {
+            "served": int(sum(sum(r["tiers"].values()) for r in cc.log)),
+            "waves": int(sum(r["waves"] for r in cc.log)),
+            "steps": int(sum(r["steps"] for r in cc.log)),
+            "wall_s": wall,
+            "req_per_s": rid / wall,
+            "short_p50_ms": float(np.percentile(short, 50) * 1e3),
+            "short_p95_ms": float(np.percentile(short, 95) * 1e3),
+            "long_p95_ms": float(np.percentile(by_class["long"], 95) * 1e3),
+        }
+    out["p95_speedup"] = (out["wave"]["short_p95_ms"]
+                          / out["continuous"]["short_p95_ms"])
+    out["p50_speedup"] = (out["wave"]["short_p50_ms"]
+                          / out["continuous"]["short_p50_ms"])
     return out
 
 
@@ -312,6 +376,16 @@ def main(out_dir: str | None = None):
               f"req/s={v['req_per_s']:.2f}")
     print(f"batched speedup over serial serve_one: "
           f"{sched['batched_speedup']:.2f}x")
+    cvw = bench_continuous_vs_wave()
+    for k in ("wave", "continuous"):
+        v = cvw[k]
+        print(f"{k:10s} served={v['served']} waves={v['waves']} "
+              f"steps={v['steps']} short_p50={v['short_p50_ms']:.0f}ms "
+              f"short_p95={v['short_p95_ms']:.0f}ms "
+              f"long_p95={v['long_p95_ms']:.0f}ms wall={v['wall_s']:.1f}s")
+    print(f"continuous-batching tail-latency win over waves "
+          f"(interactive class of the mixed-length workload): "
+          f"p95 {cvw['p95_speedup']:.2f}x, p50 {cvw['p50_speedup']:.2f}x")
     buck = bench_prefill_bucketing()
     print(f"prefill  bucketed={buck['bucketed']['small_wave_prefill_ms']:.1f}ms "
           f"padded={buck['padded']['small_wave_prefill_ms']:.1f}ms "
@@ -327,6 +401,7 @@ def main(out_dir: str | None = None):
           f"spilled={three['spilled']} rejected={three['rejected']} "
           f"R_peak={three['R_peak']:.1f}% wall={three['wall_s']:.1f}s")
     res = {"engine": eng, "policies": pol, "scheduler": sched,
+           "continuous_vs_wave": cvw,
            "prefill_bucketing": buck, "closed_loop": closed,
            "three_tier": three}
     if out_dir:

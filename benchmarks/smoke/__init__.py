@@ -1,0 +1,2 @@
+"""CI smoke runs, kept as real files so they are runnable (and testable)
+locally: ``PYTHONPATH=src python benchmarks/smoke/<name>.py``."""

@@ -1,0 +1,25 @@
+"""Simulator smoke run (CI): a 2-tier and a 3-tier ``Continuum.simulate``
+must produce successful responses, per-tier counts, and per-link net
+series.
+
+    PYTHONPATH=src python benchmarks/smoke/sim_smoke.py
+"""
+
+from repro.platform import Continuum, SimConfig, Topology
+
+
+def main():
+    cfg = SimConfig(duration_s=30.0)
+    r = Continuum.simulate("io", "auto", cfg)
+    print("2-tier:", r.summary())
+    assert r.successes > 0
+    r3 = Continuum.simulate("io", "auto", cfg,
+                            topology=Topology.device_edge_cloud())
+    print("3-tier:", r3.summary())
+    assert r3.successes > 0 and len(r3.tier_counts) == 3
+    assert r3.net_links_MBps.shape[0] == 2
+    print("sim smoke OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -5,9 +5,11 @@ endpoints (a dense LM and an SSM LM) through the
 ``repro.platform.Continuum`` facade, pushes a ramped request stream at
 the device gateway, and shows the full paper loop live, generalized to N
 tiers: per-tier latency scrape -> Policy (Eqs (1)-(4) per boundary) ->
-categorical batch routing over the tier distribution -> *batched*
-per-tier serving — each scheduler wave packs the admitted requests into
-one bucketed prefill + a shared ``decode_all`` stream.
+categorical batch routing over the tier distribution -> *continuous*
+per-tier serving — every scheduler step admits queued requests into free
+slots (one bucketed prefill), runs one shared ``decode_all`` step across
+all in-flight slots, and retires finished rows immediately, so short
+requests never wait out a long co-resident one.
 
     PYTHONPATH=src python examples/serve_continuum.py
 """
@@ -41,33 +43,36 @@ rid = 0
 names = topo.names
 print(f"\n{'round':>5} {'rps':>4} " +
       " ".join(f"{n:>6}" for n in names) +
-      f" {'waves':>6} {'R_t%':>6} {'backlog':>7}")
+      f" {'steps':>6} {'R_t%':>6} {'backlog':>7}")
 for rnd in range(18):
     rps = 2 if rnd < 4 else 10          # ramp: overload the 1-slot device
     for _ in range(rng.poisson(rps)):
         arch = ARCHS[rid % 2]
         cfg = configs.get_smoke_config(arch)
+        # mixed lengths: every 5th request decodes 4x longer — under the
+        # continuous scheduler the short ones overtake it mid-stream
         cc.submit(arch, Request(
             rid=rid, tokens=rng.integers(0, cfg.vocab_size, 8).astype(np.int32),
-            max_new=3))
+            max_new=12 if rid % 5 == 0 else 3))
         rid += 1
     rec = cc.tick()
     row = " ".join(f"{rec['tiers'][n]:>6}" for n in names)
-    print(f"{rnd:>5} {rps:>4} {row} {rec['waves']:>6} {rec['R']:>6.1f} "
+    print(f"{rnd:>5} {rps:>4} {row} {rec['steps']:>6} {rec['R']:>6.1f} "
           f"{sum(rec['backlog'].values()):>7}")
+cc.drain()
 
 totals = {n: sum(r["tiers"][n] for r in cc.log) for n in names}
 served = sum(totals.values())
-waves = sum(r["waves"] for r in cc.log)
+steps = sum(r["steps"] for r in cc.log)
 per_tier = ", ".join(f"{n}={c}" for n, c in totals.items())
 off = served - totals[names[0]]
 print(f"\nserved {served}/{rid} requests: {per_tier} "
       f"({100 * off / max(served, 1):.0f}% pushed off-device under overload)")
-print(f"batching: {served} requests packed into {waves} waves "
-      f"({served / max(waves, 1):.1f} requests sharing each prefill+decode "
-      f"stream on average)")
+print(f"continuous batching: {served} requests shared {steps} decode "
+      f"steps; slots retire and refill mid-stream instead of waiting for "
+      f"a wave to end")
 print(f"per-tier gateways: spilled={sum(r['spilled'] for r in cc.log)} "
       f"down-chain, rejected={sum(r['rejected'] for r in cc.log)} "
-      f"at bounded backlogs")
+      f"at bounded backlogs; hedges_open={cc.hedges_open}")
 print("steady-state replication writes:", cc.replicator.writes,
       "(no feedback loop)")

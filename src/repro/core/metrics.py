@@ -10,7 +10,7 @@ control-plane data; the on-device path uses ``core.quantile.Histogram``.
 from __future__ import annotations
 
 import collections
-from typing import Deque, Dict, List, Tuple
+from typing import Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -28,6 +28,11 @@ class LatencyWindow:
     def clear(self) -> None:
         """Drop all recorded observations."""
         self._buf.clear()
+
+    def values(self) -> np.ndarray:
+        """All retained observations, oldest first (for percentile
+        reports; the controller path uses :meth:`window`)."""
+        return np.asarray(self._buf, np.float32)
 
     def window(self, size: int) -> Tuple[np.ndarray, np.ndarray]:
         """Return (latencies, valid) padded/masked to ``size``."""
@@ -74,6 +79,16 @@ class MetricsRegistry:
 
     def set_gauge(self, name: str, v: float) -> None:
         self.gauges[name] = v
+
+    def latency_values(self, fn: Optional[str] = None) -> np.ndarray:
+        """Retained latency observations for one function (or all of
+        them concatenated) — the raw samples benchmark percentiles are
+        computed from."""
+        if fn is not None:
+            return self.latency[fn].values()
+        vals = [w.values() for w in self.latency.values()]
+        return (np.concatenate(vals) if vals
+                else np.zeros(0, np.float32))
 
     def latency_windows(self, size: int) -> Tuple[np.ndarray, np.ndarray]:
         """Stacked (F, size) latency windows + masks, function-ordered."""

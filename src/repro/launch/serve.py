@@ -6,8 +6,10 @@ either the classic weak-edge/strong-cloud pair, or (with
 more (smoke-size) model endpoints via the replication controller, pushes
 a ramped open-loop request stream through the ingress gateway, and
 reports how the traffic policy reacted per tier — a live, CPU-runnable
-version of the paper's testbed experiment, served by the batched wave
-scheduler.
+version of the paper's testbed experiment, served by the
+continuous-batching scheduler (``--scheduler wave`` keeps the legacy
+run-to-completion drain; ``--max-steps-per-tick`` lets long requests
+stay slot-resident across ticks).
 
     PYTHONPATH=src python -m repro.launch.serve --arch stablelm-1.6b \
         --rounds 30 --rps-low 2 --rps-high 12 --policy auto
@@ -48,6 +50,14 @@ def main():
                          "auto+hedge")
     ap.add_argument("--net-aware", action="store_true",
                     help="shorthand for --policy auto+net")
+    ap.add_argument("--scheduler", default="continuous",
+                    choices=("continuous", "wave"),
+                    help="continuous-batching decode loop (default) or the "
+                         "legacy run-to-completion wave drain")
+    ap.add_argument("--max-steps-per-tick", type=int, default=0,
+                    help="> 0 caps decode steps per tick so long requests "
+                         "stay slot-resident across ticks (continuous "
+                         "scheduler only)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -55,6 +65,10 @@ def main():
     params = model_zoo.init(jax.random.PRNGKey(args.seed), cfg)
 
     policy = "auto+net" if args.net_aware else args.policy
+    sched_kw = dict(scheduler=args.scheduler,
+                    max_steps_per_tick=(args.max_steps_per_tick
+                                        if args.max_steps_per_tick > 0
+                                        else None))
     if args.device_slots > 0:
         topo = Topology(
             tiers=(TierSpec("device", slots=args.device_slots, max_len=64),
@@ -66,14 +80,14 @@ def main():
                    LinkSpec(rtt_s=0.04, bandwidth_Bps=100e6)))
         cc = Continuum.from_topology(
             topo, policy=policy, offload_cfg=offload.OffloadConfig(),
-            seed=args.seed)
+            seed=args.seed, **sched_kw)
     else:
         cc = Continuum(
             edge=TierConfig(slots=args.edge_slots, max_len=64),
             cloud=TierConfig(slots=args.cloud_slots, max_len=64,
                              extra_latency_s=0.02),
             policy=policy, offload_cfg=offload.OffloadConfig(),
-            seed=args.seed)
+            seed=args.seed, **sched_kw)
     spec = FunctionSpec(name=args.arch, arch=args.arch, revision=1,
                         autoscaling=AutoscalingPolicy())
     cc.deploy(spec, cfg, params)
@@ -94,19 +108,27 @@ def main():
         per_tier = " ".join(f"{nm}={rec['tiers'][nm]:3d}" for nm in names)
         backlog = sum(rec["backlog"].values())
         print(f"round={rnd:3d} rps={rps:5.1f} queued={n:3d} {per_tier} "
-              f"waves={rec['waves']:2d} backlog={backlog:3d} "
-              f"R_t={rec['R']:5.1f}%")
+              f"steps={rec['steps']:3d} inflight={rec['inflight']:2d} "
+              f"backlog={backlog:3d} R_t={rec['R']:5.1f}%")
+    drained = cc.drain()           # finish slot-resident stragglers
 
     totals = {nm: sum(r["tiers"][nm] for r in cc.log) for nm in names}
     total = sum(totals.values())
-    waves = sum(r["waves"] for r in cc.log)
     per_tier = " ".join(f"{nm}={n}" for nm, n in totals.items())
     off = total - totals[names[0]]
+    if args.scheduler == "wave":
+        waves = sum(r["waves"] for r in cc.log)
+        rate = f"reqs_per_wave={total / max(waves, 1):.1f}"
+    else:
+        steps = sum(r["steps"] for r in cc.log)
+        rate = (f"tokens_per_decode_step="
+                f"{total * args.max_new / max(steps, 1):.1f}")
     print(f"\nserved {per_tier} "
-          f"offload_frac={off / max(total, 1):.2f} "
-          f"reqs_per_wave={total / max(waves, 1):.1f} "
+          f"offload_frac={off / max(total, 1):.2f} {rate} "
+          f"drain_ticks={drained} "
           f"spilled={sum(r['spilled'] for r in cc.log)} "
-          f"rejected={sum(r['rejected'] for r in cc.log)}")
+          f"rejected={sum(r['rejected'] for r in cc.log)} "
+          f"hedges_open={cc.hedges_open}")
 
 
 if __name__ == "__main__":

@@ -14,7 +14,9 @@ point the launchers, examples and benchmarks use:
                    policy="auto")
     cc.deploy(spec, model_cfg, params)
     cc.submit("fn", request)       # ingress Gateway (bounded backlog)
-    cc.tick()                      # scrape -> route -> per-tier waves
+    cc.tick()                      # scrape -> route -> continuous batching
+                                   # (admit -> decode step -> retire/cancel;
+                                   #  scheduler="wave" keeps the legacy drain)
 
     # live, N-tier: declare the chain explicitly
     topo = Topology(tiers=(TierSpec("device", slots=1),
@@ -72,6 +74,21 @@ class Continuum(EdgeCloudContinuum):
                       **kwargs) -> "Continuum":
         """The live runtime over an explicit N-tier chain."""
         return cls(policy=policy, topology=topology, **kwargs)
+
+    def drain(self, max_ticks: int = 1000) -> int:
+        """Tick until every gateway backlog and in-flight slot is empty
+        (useful after a ``max_steps_per_tick``-paced run, where long
+        requests stay slot-resident across ticks).  Returns the number of
+        ticks it took; raises if ``max_ticks`` is not enough."""
+        for n in range(max_ticks):
+            if self.queued == 0 and self.in_flight == 0:
+                return n
+            self.tick()
+        if self.queued or self.in_flight:
+            raise RuntimeError(
+                f"drain: {self.queued} queued / {self.in_flight} in flight "
+                f"after {max_ticks} ticks")
+        return max_ticks
 
     @classmethod
     def simulate(cls, workload: str, policy: PolicySpec,

@@ -93,10 +93,27 @@ class Endpoint:
         def _prefill(params, batch, cache):
             return model_zoo.prefill(cfg, params, batch, cache)
 
-        def _decode(params, cache, tokens, t):
-            return model_zoo.decode(cfg, params, cache, tokens, t)
-
         batch_axes = _cache_batch_axes(cfg, slots, max_len)
+
+        def _decode(params, cache, tokens, t, active):
+            """One decode step with a per-row active mask: inactive rows
+            keep their cache rows bit-for-bit.  Under continuous batching
+            slots retire (and hedge losers are cancelled) mid-stream, so a
+            freed row must not drift — KV rows must not collect writes at a
+            stale position and recurrent state must not advance on the
+            zero-token placeholder — while its neighbors keep decoding."""
+            logits, new_cache = model_zoo.decode(cfg, params, cache, tokens, t)
+            old_leaves, treedef = jax.tree_util.tree_flatten(cache)
+            new_leaves = jax.tree_util.tree_leaves(new_cache)
+            out = []
+            for o, n, ax in zip(old_leaves, new_leaves, batch_axes):
+                if ax is None:
+                    out.append(n)
+                    continue
+                shape = [1] * n.ndim
+                shape[ax] = n.shape[ax]
+                out.append(jnp.where(jnp.reshape(active, shape), n, o))
+            return logits, jax.tree_util.tree_unflatten(treedef, out)
 
         def _rows(cache, src, slot):
             leaves, treedef = jax.tree_util.tree_flatten(cache)
@@ -296,13 +313,21 @@ class Endpoint:
 
     def decode_all(self, tokens_by_slot: Dict[int, int]) -> Dict[int, int]:
         """One decode step for every active slot. tokens_by_slot maps
-        slot -> last emitted token. Returns slot -> next token."""
+        slot -> last emitted token. Returns slot -> next token.
+
+        Slots outside ``tokens_by_slot`` are masked inactive for the step:
+        their cache rows (KV positions, recurrent state) are untouched, so
+        rows that retired or were cancelled mid-stream stay frozen while
+        their neighbors decode."""
         tok = np.zeros(self.slots, np.int32)
+        act = np.zeros(self.slots, bool)
         t = np.asarray(self.slot_pos, np.int32)
         for s, v in tokens_by_slot.items():
             tok[s] = v
+            act[s] = True
         logits, self.cache = self._decode(self.params, self.cache,
-                                          jnp.asarray(tok), jnp.asarray(t))
+                                          jnp.asarray(tok), jnp.asarray(t),
+                                          jnp.asarray(act))
         out = {}
         lg = np.asarray(logits)
         for s in tokens_by_slot:

@@ -18,11 +18,17 @@ This is the live (non-simulated) integration of every paper component:
 Requests enter at the ingress gateway (``submit``); each scheduler tick
 runs one scrape-and-update cycle through the shared
 :class:`repro.core.policy.ControlLoop`, assigns the ingress batch over
-the tiers by the composed R_t distribution, and drains **each tier's own
-gateway** in autoscaler-budgeted *waves*: every wave packs up to a tier's
-admitted concurrency into one ``Endpoint`` prefill + a shared
-``decode_all`` stream, so co-scheduled requests advance together
-(continuous batching).  Moving a request down the chain — routing past a
+the tiers by the composed R_t distribution, and serves **each tier's own
+gateway** with a *continuous-batching decode loop*: every scheduler step
+runs one shared ``decode_all`` step across all slot-resident requests,
+retires finished rows immediately, and admits queued requests into the
+freed slots the same step (packed bucketed prefill) — so a short request
+never waits out a long co-resident one, and the losing twin of a hedge
+pair is **cancelled** (slot evicted, no latency recorded) the step its
+sibling completes.  ``scheduler="wave"`` keeps the legacy
+run-to-completion wave drain as the before/after baseline, and
+``max_steps_per_tick`` lets long requests stay slot-resident across
+ticks.  Moving a request down the chain — routing past a
 boundary or (with ``topology.waterfall``) spilling a stalled tier's load
 — crosses the corresponding :class:`~repro.core.topology.LinkSpec`,
 charging its RTT + payload serialization to the request's latency clock
@@ -35,7 +41,7 @@ demand that actually **crossed** into tier b this interval (the
 per-boundary ``arrivals`` form of ``ControlLoop.step_tiers``), so an
 intermediate boundary's R_t rises when its own backlog ages — before its
 completions drain — and ``auto+net`` caps each boundary by the link it
-actually crosses.  Requests a wave budget could not serve stay queued in
+actually crosses.  Requests an admission budget could not serve stay queued in
 their tier's gateway (the ingress gateway's backlog re-enters routing;
 deeper backlogs belong to their tier), which is exactly the simulator's
 per-tier queue state.
@@ -97,10 +103,33 @@ class _Queued:
 
 
 @dataclasses.dataclass
+class _InFlight:
+    """One slot-resident request inside a tier's continuous decode loop."""
+    item: _Queued
+    slot: int
+    toks: List[int]               # generated tokens so far (first from prefill)
+    need: int                     # total tokens to generate
+    done_at: float = 0.0
+
+
+@dataclasses.dataclass
 class _HedgePair:
     """Links a primary request to its hedge twin so only the winning
-    arm's latency feeds the controller."""
+    arm's latency feeds the controller.
+
+    Under the continuous scheduler the race settles the moment one arm
+    finishes: ``winner`` flips from ``None`` to ``"primary"``/``"twin"``
+    and :meth:`EdgeCloudContinuum._evict_loser` cancels the slot-resident
+    sibling the same scheduler step.  The legacy wave scheduler still uses
+    :meth:`note` + latency comparison (both arms run to completion there).
+    """
     fn: str
+    # continuous-scheduler resolution state
+    winner: Optional[str] = None            # None | "primary" | "twin"
+    winner_req: Optional[Request] = None
+    primary_ref: Optional[Tuple[int, _InFlight]] = None   # (tier_idx, rec)
+    twin_ref: Optional[Tuple[int, _InFlight]] = None
+    # wave-scheduler bookkeeping (legacy run-to-completion path)
     primary_lat: Optional[float] = None
     primary_tier: Optional["Tier"] = None
     twin_lat: Optional[float] = None
@@ -113,6 +142,14 @@ class _HedgePair:
             self.twin_req = item.req
         else:
             self.primary_lat, self.primary_tier = lat, tier
+
+    def set_ref(self, hedge: bool, tier_idx: int, rec: _InFlight) -> None:
+        """Remember where an arm is slot-resident so the loser can be
+        evicted the step its sibling completes."""
+        if hedge:
+            self.twin_ref = (tier_idx, rec)
+        else:
+            self.primary_ref = (tier_idx, rec)
 
 
 class Gateway:
@@ -175,11 +212,14 @@ class Tier:
         self.endpoints: Dict[str, Endpoint] = {}
         self.autoscalers: Dict[str, Autoscaler] = {}
         self.metrics = MetricsRegistry([])
+        # continuous-batching decode loop state: fn -> slot -> _InFlight
+        self.inflight: Dict[str, Dict[int, _InFlight]] = {}
 
     def deploy(self, fn_name: str, model_cfg: ModelConfig, params,
                autoscaling: Optional[AutoscalingPolicy] = None) -> None:
         self.endpoints[fn_name] = Endpoint(
             model_cfg, params, slots=self.cfg.slots, max_len=self.cfg.max_len)
+        self.inflight.setdefault(fn_name, {})
         self.metrics.register(fn_name)
         # A TierSpec that declares its own KPA bounds governs its whole
         # pool (e.g. an intermediate tier pinned to zero with max_scale=0).
@@ -211,6 +251,97 @@ class Tier:
 
     def replicas(self, fn_name: str) -> int:
         return self.autoscalers[fn_name].replicas
+
+    def inflight_count(self, fn_name: str) -> int:
+        return len(self.inflight.get(fn_name, ()))
+
+    # -- continuous-batching decode loop ------------------------------------
+    # One scheduler step is: decode every in-flight slot once (``step``),
+    # retire finished rows immediately, then admit queued requests into the
+    # freed slots (``admit``) — so a short request never waits for a long
+    # co-resident one, and a cancelled hedge loser's slot is reusable the
+    # same step it is evicted.
+
+    def admit(self, fn_name: str, items: List[_Queued]
+              ) -> Tuple[List[_InFlight], List[_InFlight]]:
+        """Claim slots for ``items`` and run one packed bucketed prefill.
+
+        Returns ``(in_flight, finished)``: requests needing only their
+        prefill token retire immediately (their slot frees right away);
+        the rest join the tier's in-flight set for the shared
+        ``decode_all`` stream.  The caller sizes admissions within
+        ``free_slots`` — over-admission raises, as in ``serve_batch``.
+        """
+        ep = self.endpoints[fn_name]
+        claimed: List[Tuple[_Queued, int]] = []
+        for item in items:
+            slot = ep.try_claim()
+            if slot is None:
+                for _, s in claimed:
+                    ep.release(s)
+                raise RuntimeError(
+                    f"{self.name}/{fn_name}: admission of {len(items)} "
+                    f"exceeds free slots — scheduler admitted past capacity")
+            claimed.append((item, slot))
+        try:
+            firsts = ep.prefill_batch(
+                {slot: item.req.tokens for item, slot in claimed})
+        except Exception:
+            for _, s in claimed:
+                ep.release(s)
+            raise
+        now = time.perf_counter()
+        in_flight: List[_InFlight] = []
+        finished: List[_InFlight] = []
+        for item, slot in claimed:
+            item.req.t_first = now
+            rec = _InFlight(item, slot, [firsts[slot]],
+                            max(item.req.max_new, 1))
+            if rec.need == 1:
+                rec.done_at = now
+                ep.release(slot)
+                finished.append(rec)
+            else:
+                self.inflight[fn_name][slot] = rec
+                in_flight.append(rec)
+        return in_flight, finished
+
+    def step(self, fn_name: str) -> List[_InFlight]:
+        """One shared ``decode_all`` step over every in-flight slot of
+        ``fn_name``; finished rows are retired (slot released) immediately
+        and returned."""
+        fl = self.inflight.get(fn_name)
+        if not fl:
+            return []
+        ep = self.endpoints[fn_name]
+        nxt = ep.decode_all({slot: rec.toks[-1] for slot, rec in fl.items()})
+        now = time.perf_counter()
+        finished: List[_InFlight] = []
+        for slot, tok in nxt.items():
+            rec = fl[slot]
+            rec.toks.append(tok)
+            if len(rec.toks) >= rec.need:
+                rec.done_at = now
+                ep.release(slot)
+                del fl[slot]
+                finished.append(rec)
+        return finished
+
+    def cancel(self, fn_name: str, slot: int) -> _InFlight:
+        """Evict one in-flight request mid-decode (a hedge loser): the
+        slot frees immediately and no latency sample is recorded."""
+        rec = self.inflight[fn_name].pop(slot)
+        self.endpoints[fn_name].release(slot)
+        return rec
+
+    def finish(self, fn_name: str, rec: _InFlight) -> float:
+        """Fill the request's output from a retired in-flight record and
+        return its end-to-end latency (metrics recording is the caller's
+        call — hedge losers never record)."""
+        req = rec.item.req
+        req.output = np.asarray(rec.toks, np.int32)
+        req.t_done = rec.done_at
+        return rec.done_at - rec.item.t_submit + self.cfg.extra_latency_s
 
     # -- serving -----------------------------------------------------------
     def serve_batch(self, fn_name: str,
@@ -291,7 +422,8 @@ class Tier:
 
 class EdgeCloudContinuum:
     """The full platform: replication + policy-driven offloading across an
-    N-tier topology, with per-tier gateways and a batched wave scheduler."""
+    N-tier topology, with per-tier gateways and a continuous-batching
+    scheduler (``scheduler="wave"`` keeps the legacy wave drain)."""
 
     def __init__(self, edge=None, cloud=None,
                  policy: PolicySpec = "auto",
@@ -300,7 +432,12 @@ class EdgeCloudContinuum:
                  control_interval_s: float = 1.0,
                  max_waves_per_tick: Optional[int] = None,
                  topology: Optional[Topology] = None,
-                 reject_latency_s: float = 0.005):
+                 reject_latency_s: float = 0.005,
+                 scheduler: str = "continuous",
+                 max_steps_per_tick: Optional[int] = None):
+        if scheduler not in ("continuous", "wave"):
+            raise ValueError(
+                f"scheduler must be 'continuous' or 'wave', got {scheduler!r}")
         if topology is None:
             if edge is None or cloud is None:
                 raise ValueError(
@@ -335,11 +472,21 @@ class EdgeCloudContinuum:
             {} for _ in range(self._num_boundaries)]
         # Platform-level counters (hedging outcomes etc.).
         self.metrics = MetricsRegistry([])
-        # None = drain every gateway every tick; an int caps the batched
-        # waves per tick, so overload leaves per-tier *backlogs* whose
+        # None = drain every gateway every tick; an int caps the admission
+        # rounds per tick, so overload leaves per-tier *backlogs* whose
         # in-flight ages the next scrape mixes into Eq (1) (the
         # simulator's onset signal, now per boundary).
         self.max_waves_per_tick = max_waves_per_tick
+        # "continuous" (default): persistent in-flight slots, one shared
+        # decode step per scheduler step, retire-and-admit mid-stream.
+        # "wave": the legacy run-to-completion wave drain (kept as the
+        # before/after baseline for benchmarks/serving_bench.py).
+        self.scheduler = scheduler
+        # Continuous scheduler only: cap the decode steps one tick may run,
+        # letting long requests stay slot-resident ACROSS ticks (new
+        # arrivals are admitted into freed slots next tick, mid-request).
+        # None = run each tick until all admitted work retires.
+        self.max_steps_per_tick = max_steps_per_tick
         self.log: List[Dict] = []
         self._clock = 0.0          # logical control-plane time (scrapes)
         self._tick_no = 0
@@ -363,6 +510,20 @@ class EdgeCloudContinuum:
     def queued(self) -> int:
         """Total backlog across every tier's gateway."""
         return sum(len(g) for g in self.gateways)
+
+    @property
+    def in_flight(self) -> int:
+        """Slot-resident requests across every tier (continuous scheduler;
+        nonzero between ticks only under ``max_steps_per_tick``)."""
+        return sum(t.inflight_count(fn)
+                   for t in self.tiers for fn in t.endpoints)
+
+    @property
+    def hedges_open(self) -> int:
+        """Hedge pairs still racing (fired but neither won nor cancelled)."""
+        c = self.metrics.counters
+        return int(c["hedges_fired"] - c["hedges_won"]
+                   - c["hedges_cancelled"])
 
     # -- deployment (paper §3.3.1) ------------------------------------------
     def deploy(self, spec: FunctionSpec, model_cfg: ModelConfig, params) -> None:
@@ -461,14 +622,19 @@ class EdgeCloudContinuum:
     # -- scheduler ------------------------------------------------------------
     def tick(self) -> Dict[str, float]:
         """One scheduler round: controller update, tier assignment of the
-        ingress batch, then drain every tier's gateway in waves (spilling
-        down the chain when waterfall is on)."""
+        ingress batch, then the per-tier serving loop.
+
+        ``scheduler="continuous"`` (default) runs the continuous-batching
+        decode loop — each scheduler step decodes every in-flight slot
+        once, retires finished rows immediately (cancelling their hedge
+        siblings), and admits queued requests into the freed slots the
+        same step.  ``scheduler="wave"`` keeps the legacy
+        run-to-completion wave drain as the before/after baseline."""
         R = self.controller_update()
         self._clock += self.control_interval_s
         self._tick_no += 1
-        served: Dict[str, int] = {t.name: 0 for t in self.tiers}
         last = len(self.tiers) - 1
-        hedged = waves = spilled = 0
+        hedged = 0
         pairs: List[_HedgePair] = []
         twins: List[Tuple[int, _Queued]] = []
 
@@ -490,9 +656,10 @@ class EdgeCloudContinuum:
             hedge = self.control.hedge(hk, ages, fn_ids, lat, valid)
             for it, tj, hedge_it in zip(items, tier_idx, hedge):
                 j = int(tj)
-                if bool(hedge_it):
+                if bool(hedge_it) and it.pair is None:
                     # backup request on another tier (straggler hedge);
                     # only the winning arm's latency feeds the windows.
+                    # An already-paired leftover is never re-hedged.
                     # The twin is stamped before the primary crosses any
                     # link, so it does not inherit the primary's hop cost.
                     bj = 0 if j == last else last
@@ -517,6 +684,8 @@ class EdgeCloudContinuum:
                 for l in range(j):
                     self._cross_link(it, l)
                 self.gateways[j].push(it, force=True)
+        if hedged:
+            self.metrics.inc("hedges_fired", hedged)
 
         # This tick's work: every tier's gateway contents + hedge twins.
         pending: Dict[Tuple[int, str], List[_Queued]] = {}
@@ -526,12 +695,276 @@ class EdgeCloudContinuum:
         for bj, it in twins:
             pending.setdefault((bj, it.fn), []).append(it)
 
-        # KPA scrape: every (tier, fn) observes its assigned concurrency
-        # (including zeros — that is what ages idle functions to zero).
+        # KPA scrape: every (tier, fn) observes its assigned concurrency —
+        # queued plus already slot-resident, including zeros (that is what
+        # ages idle functions to zero).
         for ti, tier in enumerate(self.tiers):
             for fn, asc in tier.autoscalers.items():
-                asc.observe(self._clock, float(len(pending.get((ti, fn), []))))
+                conc = (len(pending.get((ti, fn), []))
+                        + tier.inflight_count(fn))
+                asc.observe(self._clock, float(conc))
                 asc.desired(self._clock)
+
+        if self.scheduler == "wave":
+            body = self._run_waves(pending, pairs)
+        else:
+            body = self._run_continuous(pending)
+
+        # Per-tick rejection count, like every sibling field (submit-time
+        # rejections since the last tick land in this tick's record).
+        rejected_total = sum(g.rejected for g in self.gateways)
+        rejected_tick = rejected_total - self._rejected_seen
+        self._rejected_seen = rejected_total
+        served = body.pop("served")
+        rec = {"R": float(R.mean()) if len(R) else 0.0,
+               "edge": served[self.tiers[0].name],
+               "cloud": served[self.tiers[-1].name],
+               "tiers": dict(served),
+               "hedged": hedged,
+               **body,
+               "backlog": {t.name: len(g)
+                           for t, g in zip(self.tiers, self.gateways)},
+               "rejected": rejected_tick,
+               "replicas": {t.name: {fn: t.replicas(fn)
+                                     for fn in t.autoscalers}
+                            for t in self.tiers}}
+        self.log.append(rec)
+        return rec
+
+    # -- continuous-batching scheduler (the default) --------------------------
+
+    def _adopt(self, item: _Queued, pair: _HedgePair) -> None:
+        """A losing/stranded primary's client still gets the winning
+        twin's completed result (served once, by the twin)."""
+        item.req.output = pair.winner_req.output
+        item.req.t_first = pair.winner_req.t_first
+        item.req.t_done = pair.winner_req.t_done
+
+    def _evict_loser(self, pair: _HedgePair) -> None:
+        """Cancel the losing arm of a just-resolved pair if it is still
+        slot-resident: the slot frees this very scheduler step (the next
+        admission can claim it), no latency sample is recorded for the
+        evicted arm, and a cancelled primary adopts the winner's output."""
+        ref = pair.primary_ref if pair.winner == "twin" else pair.twin_ref
+        if ref is None:
+            return
+        ti, rec = ref
+        tier = self.tiers[ti]
+        if tier.inflight.get(pair.fn, {}).get(rec.slot) is rec:
+            tier.cancel(pair.fn, rec.slot)
+            if pair.winner == "twin":
+                self._adopt(rec.item, pair)
+
+    def _settle_resolved(self, item: _Queued) -> bool:
+        """A queued item whose hedge pair already resolved never runs: a
+        losing twin is dropped, a primary whose twin won adopts the twin's
+        completed result.  Returns True when the item leaves the queue."""
+        pair = item.pair
+        if pair is None or pair.winner is None:
+            return False
+        if item.hedge:
+            return True
+        if pair.winner == "twin":
+            self._adopt(item, pair)
+            return True
+        item.pair = None           # twin lost/abandoned: runs normally
+        return False
+
+    def _run_continuous(self, pending: Dict[Tuple[int, str], List[_Queued]]
+                        ) -> Dict:
+        """The continuous-batching decode loop over every tier.
+
+        Each iteration is one scheduler step: (1) one shared ``decode_all``
+        step per endpoint with in-flight slots, retiring finished rows
+        immediately (a retiring hedge arm wins its pair and evicts its
+        slot-resident sibling); (2) one admission pass packing queued
+        requests into the freed slots (bucketed prefill), capped at
+        ``max_waves_per_tick`` admission rounds.  With
+        ``max_steps_per_tick`` set, long requests stay slot-resident
+        across ticks; otherwise the tick runs until all admitted work
+        retires, preserving the PR-1..3 per-tick window semantics."""
+        served: Dict[str, int] = {t.name: 0 for t in self.tiers}
+        last = len(self.tiers) - 1
+        waves = steps = spilled = 0
+        won = cancelled = 0
+
+        def adm_capped() -> bool:
+            return (self.max_waves_per_tick is not None
+                    and waves >= self.max_waves_per_tick)
+
+        def stp_capped() -> bool:
+            return (self.max_steps_per_tick is not None
+                    and steps >= self.max_steps_per_tick)
+
+        def retire(ti: int, fn: str, rec: _InFlight) -> None:
+            """A finished row left its slot: resolve its hedge pair and
+            record/serve it (losers record nothing)."""
+            nonlocal won, cancelled
+            tier = self.tiers[ti]
+            item = rec.item
+            lat = tier.finish(fn, rec)
+            pair = item.pair
+            arm = "twin" if item.hedge else "primary"
+            if pair is not None and pair.winner is None:
+                # first arm home wins; the sibling's slot is evicted NOW
+                pair.winner = arm
+                pair.winner_req = item.req
+                if item.hedge:
+                    won += 1
+                    self.metrics.inc("hedges_won")
+                else:
+                    cancelled += 1
+                    self.metrics.inc("hedges_cancelled")
+                self._evict_loser(pair)
+            elif pair is not None and pair.winner != arm:
+                return             # losing arm outran its eviction: drop
+            tier.metrics.record_latency(fn, lat)
+            served[tier.name] += 1
+
+        def admit_batch(ti: int, fn: str, batch: List[_Queued]) -> None:
+            in_flight, finished = self.tiers[ti].admit(fn, batch)
+            for rec in in_flight:
+                if rec.item.pair is not None:
+                    rec.item.pair.set_ref(rec.item.hedge, ti, rec)
+            for rec in finished:
+                retire(ti, fn, rec)
+
+        def admit_round() -> bool:
+            admitted_any = False
+            for (ti, fn), lst in pending.items():
+                if not lst:
+                    continue
+                lst[:] = [it for it in lst if not self._settle_resolved(it)]
+                tier = self.tiers[ti]
+                budget = min(tier.free_slots(fn),
+                             tier.capacity(fn) - tier.inflight_count(fn))
+                if budget <= 0 or not lst:
+                    continue
+                batch, pending[(ti, fn)] = lst[:budget], lst[budget:]
+                admit_batch(ti, fn, batch)
+                admitted_any = True
+            return admitted_any
+
+        while True:
+            # (1) one decode step across every endpoint with work
+            stepped = False
+            for ti, tier in enumerate(self.tiers):
+                for fn in tier.endpoints:
+                    if tier.inflight_count(fn) == 0:
+                        continue
+                    stepped = True
+                    for rec in tier.step(fn):
+                        retire(ti, fn, rec)
+            if stepped:
+                steps += 1
+            # (2) admit into freed slots, same step — also under a step
+            # cap, so paced ticks keep admitting fresh arrivals into free
+            # slots alongside the slot-resident work
+            admitted = False
+            if not adm_capped():
+                admitted = admit_round()
+                if admitted:
+                    waves += 1
+            if stepped and stp_capped():
+                break              # in-flight work carries over to next tick
+            if self.in_flight == 0:
+                if not any(pending.values()):
+                    break
+                if adm_capped():
+                    break          # leftovers requeue below
+            if stepped or admitted:
+                continue
+            if not any(pending.values()):
+                break              # only resolved-pair items were swept
+            # Stalled: nothing decoding, nothing admissible.
+            progress = False
+            if self.topology.waterfall:
+                # Waterfall: a tier with no admitted capacity (e.g. scaled
+                # to zero with scale-up disabled) spills its pending load
+                # over the link to the next tier's work queue.
+                for (ti, fn), lst in list(pending.items()):
+                    tier = self.tiers[ti]
+                    if (lst and ti < last
+                            and min(tier.free_slots(fn), tier.capacity(fn)
+                                    - tier.inflight_count(fn)) <= 0):
+                        for it in lst:
+                            self._cross_link(it, ti)
+                        pending.setdefault((ti + 1, fn), []).extend(lst)
+                        pending[(ti, fn)] = []
+                        spilled += len(lst)
+                        progress = True
+            if progress:
+                continue
+            # Scale-from-zero floor: a queued request implies >= 1 desired
+            # replica next scrape; don't deadlock on degenerate autoscaling
+            # bounds in the meantime.
+            for (ti, fn), lst in pending.items():
+                if lst and self.tiers[ti].free_slots(fn) > 0:
+                    admit_batch(ti, fn, [lst.pop(0)])
+                    waves += 1
+                    progress = True
+                    break
+            if not progress:
+                raise RuntimeError("scheduler wedged: pending work but "
+                                   "no free slot on any tier")
+
+        # Tick over: unserved hedge twins are abandoned — the pair resolves
+        # to the primary, which records normally when it completes.
+        for lst in pending.values():
+            for it in lst:
+                if it.hedge and it.pair.winner is None:
+                    it.pair.winner = "primary"
+                    cancelled += 1
+                    self.metrics.inc("hedges_cancelled")
+        # Unserved primaries whose twin already won adopt the twin's
+        # result; the rest go back to *their tier's* gateway, keeping
+        # their original submit time and tick stamp so the backlog age the
+        # next scrape reads stays monotone.  A primary whose twin is still
+        # slot-resident (steps capped) keeps its pair link — the race
+        # settles next tick.
+        adopted = 0
+        requeue: Dict[int, List[_Queued]] = {}
+        for (ti, fn), lst in pending.items():
+            for it in lst:
+                if it.hedge:
+                    continue
+                pair = it.pair
+                if pair is not None and pair.winner == "twin":
+                    self._adopt(it, pair)
+                    adopted += 1
+                    continue
+                if pair is not None and pair.winner == "primary":
+                    it.pair = None
+                requeue.setdefault(ti, []).append(it)
+        for ti, lst in requeue.items():
+            for it in sorted(lst, key=lambda it: it.t_submit):
+                if not self.gateways[ti].push(it):
+                    # the tier's bounded backlog is full: the request is
+                    # dropped for good (queue-proxy 503) and says so
+                    it.req.failed = True
+                    self._reject(ti, it.fn)
+                    if it.pair is not None and it.pair.winner is None:
+                        # a dropped primary can never adopt: abandon the
+                        # race and evict its still-running twin too
+                        it.pair.winner = "primary"
+                        cancelled += 1
+                        self.metrics.inc("hedges_cancelled")
+                        self._evict_loser(it.pair)
+        return {"served": served, "hedges_won": won,
+                "hedges_cancelled": cancelled, "spilled": spilled,
+                "waves": waves, "steps": steps,
+                "inflight": self.in_flight}
+
+    # -- legacy run-to-completion wave scheduler -------------------------------
+
+    def _run_waves(self, pending: Dict[Tuple[int, str], List[_Queued]],
+                   pairs: List[_HedgePair]) -> Dict:
+        """Drain every tier's gateway in autoscaler-budgeted waves, each
+        run to completion (the pre-async baseline kept for
+        ``bench_continuous_vs_wave``)."""
+        served: Dict[str, int] = {t.name: 0 for t in self.tiers}
+        last = len(self.tiers) - 1
+        waves = spilled = 0
 
         def dispatch(ti: int, fn: str, batch: List[_Queued]) -> None:
             nonlocal waves
@@ -607,14 +1040,18 @@ class EdgeCloudContinuum:
                     continue
                 pair = it.pair
                 if pair is not None and pair.twin_lat is not None:
-                    it.req.output = pair.twin_req.output
-                    it.req.t_first = pair.twin_req.t_first
-                    it.req.t_done = pair.twin_req.t_done
+                    pair.winner = "twin"
+                    pair.winner_req = pair.twin_req
+                    self._adopt(it, pair)
                     pair.twin_tier.metrics.record_latency(it.fn,
                                                           pair.twin_lat)
                     served[pair.twin_tier.name] += 1
                     adopted += 1
                     continue
+                if pair is not None:
+                    # the unserved twin is dropped with its primary
+                    # requeued: the hedge is over (counted cancelled)
+                    pair.winner = "primary"
                 it.pair = None       # a requeued primary records normally
                 requeue.setdefault(ti, []).append(it)
         for ti, lst in requeue.items():
@@ -626,38 +1063,29 @@ class EdgeCloudContinuum:
                     self._reject(ti, it.fn)
 
         # Resolve hedge pairs: only the winning arm's latency feeds the
-        # controller windows, so a slow loser cannot bias R_t.
+        # controller windows, so a slow loser cannot bias R_t.  Both arms
+        # ran to completion here (no mid-flight cancellation in wave mode);
+        # ``winner`` is stamped so pair-level accounting stays consistent.
         won = adopted
+        cancelled = 0
         for pair in pairs:
             if pair.primary_lat is None:
+                if pair.winner == "primary" and pair.twin_lat is None:
+                    cancelled += 1   # both arms unserved: hedge abandoned
                 continue         # primary requeued or adopted; handled above
             if pair.twin_lat is not None and pair.twin_lat < pair.primary_lat:
                 pair.twin_tier.metrics.record_latency(pair.fn, pair.twin_lat)
+                pair.winner = "twin"
                 won += 1
             else:
                 pair.primary_tier.metrics.record_latency(pair.fn,
                                                          pair.primary_lat)
-        if hedged:
-            self.metrics.inc("hedges_fired", hedged)
+                pair.winner = "primary"
+                cancelled += 1
         if won:
             self.metrics.inc("hedges_won", won)
-
-        # Per-tick rejection count, like every sibling field (submit-time
-        # rejections since the last tick land in this tick's record).
-        rejected_total = sum(g.rejected for g in self.gateways)
-        rejected_tick = rejected_total - self._rejected_seen
-        self._rejected_seen = rejected_total
-        rec = {"R": float(R.mean()) if len(R) else 0.0,
-               "edge": served[self.tiers[0].name],
-               "cloud": served[self.tiers[-1].name],
-               "tiers": dict(served),
-               "hedged": hedged, "hedges_won": won,
-               "spilled": spilled, "waves": waves,
-               "backlog": {t.name: len(g)
-                           for t, g in zip(self.tiers, self.gateways)},
-               "rejected": rejected_tick,
-               "replicas": {t.name: {fn: t.replicas(fn)
-                                     for fn in t.autoscalers}
-                            for t in self.tiers}}
-        self.log.append(rec)
-        return rec
+        if cancelled:
+            self.metrics.inc("hedges_cancelled", cancelled)
+        return {"served": served, "hedges_won": won,
+                "hedges_cancelled": cancelled, "spilled": spilled,
+                "waves": waves, "steps": 0, "inflight": 0}

@@ -1,0 +1,331 @@
+"""The continuous-batching async serving loop + hedge-loser cancellation.
+
+Covers the PR-4 tentpole: persistent in-flight slots with
+admit -> decode step -> retire/cancel scheduling (short requests no
+longer wait on long co-resident ones), hedge pairs that cancel the
+losing twin the step its sibling completes (slot reusable the same
+step, no latency sample for the loser, pair-level accounting
+``hedges_fired == hedges_won + hedges_cancelled + open``), requeued
+leftovers keeping their original submit/tick stamps (monotone backlog
+age), and cross-tick slot residency under ``max_steps_per_tick``.
+"""
+
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core.policy import StaticSplit
+from repro.core.replication import AutoscalingPolicy, FunctionSpec
+from repro.core.topology import LinkSpec, TierSpec, Topology
+from repro.models import model_zoo
+from repro.platform import Continuum, Request
+from repro.serving.tiers import Tier, TierConfig, _Queued
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = configs.get_smoke_config("stablelm-1.6b")
+    params = model_zoo.init(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _req(rid, max_new=1, length=6):
+    return Request(rid=rid, tokens=np.arange(length, dtype=np.int32),
+                   max_new=max_new)
+
+
+def _queued(rid, max_new=1, t_submit=0.0):
+    return _Queued("fn", _req(rid, max_new), t_submit=t_submit)
+
+
+class _AlwaysHedge(StaticSplit):
+    """Keep all primaries at the ingress tier, hedge every queued item."""
+
+    def __init__(self):
+        super().__init__(0.0)
+
+    def hedge(self, key, ages_s, fn_ids, latencies, valid):
+        return np.ones(len(fn_ids), bool)
+
+
+# ---- Tier-level continuous loop ---------------------------------------------
+
+def test_tier_admit_step_retire(model):
+    cfg, params = model
+    tier = Tier("t", TierConfig(slots=4, max_len=64))
+    tier.deploy("fn", cfg, params, AutoscalingPolicy())
+    short, long = _queued(0, max_new=2), _queued(1, max_new=5)
+    in_flight, finished = tier.admit("fn", [short, long])
+    assert len(in_flight) == 2 and not finished
+    assert tier.inflight_count("fn") == 2
+    assert tier.endpoints["fn"].active == 2
+    done = tier.step("fn")                      # both got their 2nd token
+    assert [r.item.req.rid for r in done] == [0]
+    assert tier.inflight_count("fn") == 1       # short retired mid-stream
+    assert tier.endpoints["fn"].active == 1     # ... and freed its slot
+    lat = tier.finish("fn", done[0])
+    assert lat > 0.0 and short.req.output.shape == (2,)
+    for _ in range(3):
+        done = tier.step("fn")
+    assert [r.item.req.rid for r in done] == [1]
+    tier.finish("fn", done[0])
+    assert long.req.output.shape == (5,) and tier.inflight_count("fn") == 0
+
+
+def test_tier_cancel_frees_slot_same_step(model):
+    """The hedge-cancellation primitive: an evicted in-flight request
+    frees its slot immediately — a new admission claims the SAME slot
+    within the same scheduler step, before any further decode."""
+    cfg, params = model
+    tier = Tier("t", TierConfig(slots=2, max_len=64))
+    tier.deploy("fn", cfg, params, AutoscalingPolicy())
+    a, b = _queued(0, max_new=8), _queued(1, max_new=8)
+    tier.admit("fn", [a, b])
+    assert tier.free_slots("fn") == 0
+    loser_slot = next(iter(tier.inflight["fn"]))
+    rec = tier.cancel("fn", loser_slot)
+    assert rec.item.req.rid in (0, 1)
+    assert tier.free_slots("fn") == 1           # freed immediately
+    in_flight, _ = tier.admit("fn", [_queued(2, max_new=3)])
+    assert in_flight[0].slot == loser_slot      # same slot, same step
+    done = tier.step("fn")                      # survivors keep decoding
+    assert not done and tier.inflight_count("fn") == 2
+
+
+def test_cancelled_slot_does_not_corrupt_neighbors(model):
+    """Eviction mid-stream (masked decode rows) must not perturb the
+    surviving co-resident stream: tokens match a solo run."""
+    cfg, params = model
+    tier = Tier("t", TierConfig(slots=2, max_len=64))
+    tier.deploy("fn", cfg, params, AutoscalingPolicy())
+
+    def run(with_neighbor):
+        keep = _queued(0, max_new=6)
+        items = [keep] + ([_queued(1, max_new=6)] if with_neighbor else [])
+        tier.admit("fn", items)
+        if with_neighbor:
+            other = next(s for s, r in tier.inflight["fn"].items()
+                         if r.item.req.rid == 1)
+        done = []
+        for step in range(6):
+            if with_neighbor and step == 2:
+                tier.cancel("fn", other)        # evict mid-decode
+            done += tier.step("fn")
+        [rec] = done
+        tier.finish("fn", rec)
+        return list(keep.req.output)
+
+    assert run(True) == run(False)
+
+
+# ---- continuum-level: mixed lengths, hedge cancellation ---------------------
+
+def _two_tier(model, policy, **kw):
+    cfg, params = model
+    cc = Continuum(edge=TierConfig(slots=2, max_len=64),
+                   cloud=TierConfig(slots=4, max_len=64),
+                   policy=policy, seed=0, **kw)
+    cc.deploy(FunctionSpec(name="fn", arch="stablelm-1.6b"), cfg, params)
+    return cc
+
+
+def test_short_requests_overtake_long_in_flight(model):
+    """The tentpole behaviour: with a backlog of mixed lengths, a short
+    request admitted into a freed slot completes while a long co-resident
+    one is still decoding — it no longer waits for the wave to end."""
+    cc = _two_tier(model, policy=0.0)           # everything at the edge
+    long = _req(0, max_new=16)
+    shorts = [_req(1 + i, max_new=2) for i in range(4)]
+    cc.submit("fn", long)
+    for r in shorts:
+        cc.submit("fn", r)
+    rec = cc.tick()
+    assert rec["edge"] == 5 and rec["inflight"] == 0
+    # every short request finished before the long one, although the
+    # 2-slot tier was full from step one
+    assert all(r.t_done < long.t_done for r in shorts)
+    # and the whole tick took ~max(need) shared decode steps, not a
+    # wave-serial sum (16 + 2 + 2 + ...)
+    assert rec["steps"] <= 16
+    assert rec["waves"] >= 2                    # admissions happened mid-run
+
+
+def test_hedge_loser_evicted_when_sibling_completes(model):
+    """A hedged request whose primary finishes first has its slot-resident
+    twin cancelled the same step: `hedges_cancelled` increments, the
+    loser records no latency sample, and the tick ends without running
+    the twin to completion."""
+    cfg, params = model
+    # cloud slot is busy with a long request until step 6, so the twin is
+    # admitted late and is mid-decode when the primary (8 steps) retires.
+    topo = Topology(
+        tiers=(TierSpec("edge", slots=2, max_len=64),
+               TierSpec("cloud", slots=1, max_len=64)),
+        links=(LinkSpec(rtt_s=0.0),), waterfall=False)
+    cc = Continuum.from_topology(topo, policy=_AlwaysHedge(), seed=0)
+    cc.deploy(FunctionSpec(name="blk", arch="stablelm-1.6b"), cfg, params)
+    cc.deploy(FunctionSpec(name="fn", arch="stablelm-1.6b"), cfg, params)
+    # occupy the cloud with a non-hedged long request (pushed straight to
+    # the cloud gateway, past the 0%-split ingress routing)
+    blocker = _Queued("blk", _req(9, max_new=6), t_submit=time.perf_counter())
+    cc.gateways[1].push(blocker, force=True)
+    hedged = _req(1, max_new=8)
+    assert cc.submit("fn", hedged)
+    rec = cc.tick()
+    assert rec["hedged"] == 1
+    assert cc.metrics.counters["hedges_fired"] == 1
+    assert cc.metrics.counters["hedges_cancelled"] == 1
+    assert cc.metrics.counters.get("hedges_won", 0) == 0
+    assert cc.hedges_open == 0
+    # primary finished after 7 decode steps; the twin (admitted when the
+    # blocker retired at step 5) was NOT run to completion (that would
+    # have taken until step 12)
+    assert 7 <= rec["steps"] < 12
+    assert rec["inflight"] == 0                 # loser's slot freed
+    assert cc.tiers[1].endpoints["fn"].active == 0
+    assert hedged.output is not None and hedged.output.shape == (8,)
+    # winner-only accounting: edge has exactly one "fn" sample, the
+    # cancelled twin recorded nothing on the cloud
+    assert len(cc.tiers[0].metrics.latency_values("fn")) == 1
+    assert len(cc.tiers[1].metrics.latency_values("fn")) == 0
+    assert len(cc.tiers[1].metrics.latency_values("blk")) == 1
+
+
+def test_hedge_accounting_identity(model):
+    """hedges_fired == hedges_won + hedges_cancelled + hedges_open after
+    every tick, and winner-only latency: one sample per request."""
+    cc = _two_tier(model, policy=_AlwaysHedge())
+    rid = 0
+    for tick in range(4):
+        for _ in range(3):
+            cc.submit("fn", _req(rid, max_new=1 + rid % 3))
+            rid += 1
+        cc.tick()
+        c = cc.metrics.counters
+        assert c["hedges_fired"] == (c["hedges_won"]
+                                     + c["hedges_cancelled"]
+                                     + cc.hedges_open)
+        assert cc.hedges_open == 0              # default: ticks run dry
+    samples = sum(len(t.metrics.latency_values("fn")) for t in cc.tiers)
+    assert samples == rid                       # exactly one arm recorded
+    served = sum(sum(r["tiers"].values()) for r in cc.log)
+    assert served == rid                        # ... and served once
+
+
+def test_hedge_race_survives_tick_boundary(model):
+    """With max_steps_per_tick the twin can stay slot-resident across the
+    tick boundary while the primary requeues; the race settles next tick
+    and the request is served exactly once."""
+    cfg, params = model
+    topo = Topology(
+        tiers=(TierSpec("edge", slots=2, max_len=64,
+                        autoscaling=AutoscalingPolicy(min_scale=0,
+                                                      max_scale=0)),
+               TierSpec("cloud", slots=4, max_len=64)),
+        links=(LinkSpec(rtt_s=0.0),), waterfall=False)
+    cc = Continuum.from_topology(topo, policy=_AlwaysHedge(), seed=0,
+                                 max_steps_per_tick=2)
+    cc.deploy(FunctionSpec(name="fn", arch="stablelm-1.6b"), cfg, params)
+    req = _req(1, max_new=6)
+    assert cc.submit("fn", req)
+    rec = cc.tick()
+    # the twin is mid-decode on the cloud; the primary waits at the
+    # zero-capacity edge with its pair link intact
+    assert rec["inflight"] == 1 and cc.hedges_open == 1
+    ticks = 1 + cc.drain()
+    assert cc.hedges_open == 0
+    assert cc.metrics.counters["hedges_won"] == 1
+    assert req.output is not None and req.output.shape == (6,)
+    served = sum(sum(r["tiers"].values()) for r in cc.log)
+    assert served == 1 and ticks >= 2
+
+
+def test_max_steps_keeps_requests_in_flight_across_ticks(model):
+    cc = _two_tier(model, policy=0.0, max_steps_per_tick=3)
+    long = _req(0, max_new=12)
+    cc.submit("fn", long)
+    rec = cc.tick()
+    assert rec["inflight"] == 1 and rec["steps"] == 3
+    assert long.output is None
+    # a short request submitted mid-flight is admitted into a free slot
+    # next tick while the long one keeps decoding
+    short = _req(1, max_new=2)
+    cc.submit("fn", short)
+    rec2 = cc.tick()
+    assert short.output is not None and long.output is None
+    assert rec2["inflight"] == 1
+    cc.drain()
+    assert long.output is not None and long.output.shape == (12,)
+    served = sum(r["edge"] + r["cloud"] for r in cc.log)
+    assert served == 2
+
+
+def test_paced_tick_still_admits_alongside_inflight(model):
+    """Regression: with max_steps_per_tick=1 every tick must still run
+    its admission pass — a free slot may not sit idle (fresh arrivals
+    starving behind a long slot-resident request) just because the step
+    budget was spent decoding."""
+    cc = _two_tier(model, policy=0.0, max_steps_per_tick=1)
+    long = _req(0, max_new=12)
+    cc.submit("fn", long)
+    cc.tick()                                   # long is slot-resident
+    short = _req(1, max_new=2)
+    cc.submit("fn", short)
+    rec = cc.tick()                             # 1 decode step + admission
+    assert rec["waves"] == 1                    # the short was admitted...
+    assert rec["inflight"] == 2                 # ...into the free slot
+    rec2 = cc.tick()
+    assert short.output is not None             # and finished next step
+    assert long.output is None and rec2["inflight"] == 1
+    cc.drain()
+    assert long.output is not None
+
+
+# ---- satellite: requeue keeps tick bookkeeping ------------------------------
+
+def test_requeue_preserves_submit_and_tick_stamps(model):
+    """Wave-budget leftovers go back to their gateway with their ORIGINAL
+    t_submit and tick stamp, so the backlog age each scrape reads grows
+    monotonically instead of resetting on every requeue."""
+    cfg, params = model
+    cc = Continuum(edge=TierConfig(slots=2, max_len=64),
+                   cloud=TierConfig(slots=4, max_len=64),
+                   policy=0.0, seed=0, max_waves_per_tick=1)
+    cc.deploy(FunctionSpec(
+        name="fn", arch="stablelm-1.6b",
+        autoscaling=AutoscalingPolicy(min_scale=1, max_scale=1,
+                                      target_concurrency=1.0)), cfg, params)
+    for i in range(4):
+        assert cc.submit("fn", _req(i))
+    stamps = {it.req.rid: (it.t_submit, it.tick_no)
+              for it in cc.gateways[0].items}
+    cc.tick()                                   # serves 1, requeues 3
+    leftovers = list(cc.gateways[0].items)
+    assert len(leftovers) == 3
+    for it in leftovers:
+        assert (it.t_submit, it.tick_no) == stamps[it.req.rid]
+    ages1 = cc.gateways[0].backlog_ages(
+        time.perf_counter(), cc._tick_no, cc._fn_ids, 1)
+    assert len(ages1[0]) == 3                   # all leftovers are backlog
+    cc.tick()                                   # serves 1 more
+    ages2 = cc.gateways[0].backlog_ages(
+        time.perf_counter(), cc._tick_no, cc._fn_ids, 1)
+    # the same requests, older now: monotone backlog age
+    assert len(ages2[0]) == 2
+    assert min(ages2[0]) > min(ages1[0]) > 0.0
+
+
+def test_requeued_items_survive_to_completion(model):
+    cc = _two_tier(model, policy=0.0, max_waves_per_tick=1)
+    reqs = [_req(i, max_new=2) for i in range(5)]
+    for r in reqs:
+        assert cc.submit("fn", r)
+    for _ in range(8):
+        if cc.queued == 0 and cc.in_flight == 0:
+            break
+        cc.tick()
+    assert all(r.output is not None for r in reqs)
+    assert sum(r["edge"] + r["cloud"] for r in cc.log) == 5

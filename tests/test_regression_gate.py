@@ -1,0 +1,129 @@
+"""The CI benchmark regression gate (benchmarks/check_regression.py):
+metric resolution, the >25%-drop rule, combined-JSON loading, and the
+committed goldens passing their own gate."""
+
+import json
+import os
+
+from benchmarks import check_regression as cr
+
+
+GOLDEN = {
+    "serving_bench": {
+        "scheduler": {"batched_speedup": 3.0,
+                      "batched": {"served": 78}},
+        "continuous_vs_wave": {"p95_speedup": 5.0, "p50_speedup": 4.0,
+                               "continuous": {"served": 35},
+                               "wave": {"served": 35}},
+        "prefill_bucketing": {"bucketed_speedup": 2.0},
+        "policies": {"edge_only": {"served": 78}, "auto": {"served": 78}},
+        "closed_loop": {"onset_detected": True},
+    },
+    "controller_micro": {
+        "route_batch_B4096_us": 100.0,
+        "route_batch_dense_B4096_us": 4000.0,   # 40x speedup
+    },
+}
+
+
+def _fresh(**overrides):
+    fresh = json.loads(json.dumps(GOLDEN))     # deep copy
+    for path, v in overrides.items():
+        cur = fresh
+        parts = path.split(".")
+        for p in parts[:-1]:
+            cur = cur[p]
+        cur[parts[-1]] = v
+    return fresh
+
+
+def test_identical_results_pass():
+    assert cr.compare(_fresh(), GOLDEN) == []
+
+
+def test_small_drop_within_threshold_passes():
+    fresh = _fresh(**{"serving_bench.scheduler.batched_speedup": 2.4})
+    assert cr.compare(fresh, GOLDEN) == []     # -20% < 25%
+
+
+def test_large_ratio_drop_fails():
+    fresh = _fresh(**{"serving_bench.continuous_vs_wave.p95_speedup": 3.0})
+    problems = cr.compare(fresh, GOLDEN)       # -40%
+    assert len(problems) == 1
+    assert "continuous_vs_wave.p95_speedup" in problems[0]
+
+
+def test_derived_route_speedup_gate():
+    fresh = _fresh(**{"controller_micro.route_batch_B4096_us": 200.0})
+    problems = cr.compare(fresh, GOLDEN)       # 20x vs golden 40x
+    assert any("route_speedup_B4096" in p for p in problems)
+
+
+def test_count_mismatch_fails():
+    fresh = _fresh(**{"serving_bench.policies.auto.served": 70})
+    problems = cr.compare(fresh, GOLDEN)
+    assert any("policies.auto.served" in p for p in problems)
+
+
+def test_flag_regression_fails():
+    fresh = _fresh(**{"serving_bench.closed_loop.onset_detected": False})
+    problems = cr.compare(fresh, GOLDEN)
+    assert any("onset_detected" in p for p in problems)
+
+
+def test_missing_metric_in_fresh_fails():
+    fresh = _fresh()
+    del fresh["serving_bench"]["continuous_vs_wave"]
+    problems = cr.compare(fresh, GOLDEN)
+    assert any("missing" in p for p in problems)
+
+
+def test_golden_without_metric_is_skipped():
+    golden = json.loads(json.dumps(GOLDEN))
+    del golden["serving_bench"]["continuous_vs_wave"]
+    assert cr.compare(_fresh(), golden) == []  # golden predates the metric
+
+
+def test_load_results_dir_and_combined_file(tmp_path):
+    d = tmp_path / "results"
+    d.mkdir()
+    for bench, payload in GOLDEN.items():
+        with open(d / f"{bench}.json", "w") as f:
+            json.dump(payload, f)
+    combined = tmp_path / "combined.json"
+    with open(combined, "w") as f:
+        json.dump(GOLDEN, f)                   # run.py --json schema
+    from_dir = cr.load_results(str(d))
+    from_file = cr.load_results(str(combined))
+    assert from_dir == from_file == GOLDEN
+
+
+def test_committed_goldens_pass_their_own_gate():
+    """The gate must pass when a fresh run exactly reproduces the
+    committed benchmarks/results/*.json — and every serving-bench stable
+    metric must actually exist in the goldens."""
+    golden = cr.load_results(cr.BASELINE)
+    assert cr.compare(golden, golden) == []
+    derived = cr.derive(golden)
+    for bench, path, _ in cr.STABLE_METRICS:
+        assert cr.dig(derived.get(bench, {}), path) is not None, \
+            f"golden missing {bench}:{path} — refresh benchmarks/results"
+
+
+def test_main_skip_run_pass_and_fail(tmp_path, capsys):
+    d = tmp_path / "fresh"
+    d.mkdir()
+    for bench, payload in GOLDEN.items():
+        with open(d / f"{bench}.json", "w") as f:
+            json.dump(payload, f)
+    g = tmp_path / "golden.json"
+    with open(g, "w") as f:
+        json.dump(GOLDEN, f)
+    ok = cr.main(["--fresh", str(d), "--baseline", str(g), "--skip-run"])
+    assert ok == 0
+    bad = json.loads(json.dumps(GOLDEN))
+    bad["serving_bench"]["scheduler"]["batched_speedup"] = 0.5
+    with open(d / "serving_bench.json", "w") as f:
+        json.dump(bad["serving_bench"], f)
+    assert cr.main(["--fresh", str(d), "--baseline", str(g),
+                    "--skip-run"]) == 1
