@@ -44,6 +44,13 @@ STABLE_METRICS: List[Tuple[str, str, str]] = [
     ("serving_bench", "continuous_vs_wave.continuous.served", "count"),
     ("serving_bench", "continuous_vs_wave.wave.served", "count"),
     ("serving_bench", "closed_loop.onset_detected", "flag"),
+    # mid-stream migration: identical arrival routing in both arms, so
+    # served counts are deterministic and must match exactly; the p95
+    # win's magnitude is machine-relative, but its existence is not
+    ("serving_bench", "migration.p95_improved", "flag"),
+    ("serving_bench", "migration.route_only.served", "count"),
+    ("serving_bench", "migration.migrate.served", "count"),
+    ("serving_bench", "migration.migrate.migrations_completed", "count"),
     ("controller_micro", "route_speedup_B4096", "ratio"),
 ]
 

@@ -25,6 +25,7 @@ for label, policy in (
     ("100% offload", 100.0),
     ("auto (paper)", "auto"),
     ("auto+net-aware", "auto+net"),     # beyond-paper extension
+    ("auto+migrate", "auto+migrate"),   # also moves IN-SERVICE work
 ):
     rows.append((label, Continuum.simulate("matmult", policy, cfg)))
 
@@ -43,7 +44,15 @@ Reading the table:
     link is the bottleneck the paper notes offloading 'makes it worse';
   * the paper's auto controller lands between the extremes;
   * the net-aware variant keeps offload below link saturation — the
-    'more sophisticated strategy' the paper's §4.2 calls for.""")
+    'more sophisticated strategy' the paper's §4.2 calls for;
+  * auto+migrate additionally moves requests already IN SERVICE at the
+    edge once R_t crosses its threshold (remaining work resumes in the
+    cloud after the state crosses the link) — the edge drains during
+    the burst instead of riding it out.""")
+mig = rows[-1][1]
+print(f"  auto+migrate moved {mig.migrations_fired} in-service requests "
+      f"({mig.migrations_completed} landed, {mig.migrations_aborted} "
+      f"aborted back to the edge)")
 
 # ---- beyond two tiers: the same controller over a device/edge/cloud chain
 topo = Topology.device_edge_cloud(device_slots=2, edge_slots=4,

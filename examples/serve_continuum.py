@@ -30,7 +30,13 @@ topo = Topology(
            TierSpec("cloud", slots=12, max_len=64, extra_latency_s=0.02)),
     links=(LinkSpec(rtt_s=0.005, bandwidth_Bps=50e6),
            LinkSpec(rtt_s=0.04, bandwidth_Bps=100e6)))
-cc = Continuum.from_topology(topo, policy="auto", seed=0)
+# auto+migrate: when a boundary's R_t crosses the threshold, resident
+# long decodes ship their KV-cache down-chain and resume mid-stream
+# instead of holding the tier's slots hostage.  The step cap paces each
+# tick, so long requests stay slot-resident ACROSS ticks — the state a
+# migration can actually move.
+cc = Continuum.from_topology(topo, policy="auto+migrate", seed=0,
+                             max_steps_per_tick=6)
 for arch in ARCHS:
     cfg = configs.get_smoke_config(arch)
     params = model_zoo.init(jax.random.PRNGKey(hash(arch) % 2**31), cfg)
@@ -74,5 +80,10 @@ print(f"continuous batching: {served} requests shared {steps} decode "
 print(f"per-tier gateways: spilled={sum(r['spilled'] for r in cc.log)} "
       f"down-chain, rejected={sum(r['rejected'] for r in cc.log)} "
       f"at bounded backlogs; hedges_open={cc.hedges_open}")
+print(f"mid-stream migration: "
+      f"{int(cc.metrics.counter('migrations_completed'))} resident "
+      f"requests shipped their KV-cache down-chain and resumed without "
+      f"re-prefill ({int(cc.metrics.counter('migrations_aborted'))} "
+      f"aborted back to source)")
 print("steady-state replication writes:", cc.replicator.writes,
       "(no feedback loop)")

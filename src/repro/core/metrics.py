@@ -77,6 +77,11 @@ class MetricsRegistry:
     def inc(self, name: str, v: float = 1.0) -> None:
         self.counters[name] += v
 
+    def counter(self, name: str) -> float:
+        """Read a counter without materializing it (``counters`` is a
+        defaultdict — bare indexing would create zero-valued entries)."""
+        return float(self.counters.get(name, 0.0))
+
     def set_gauge(self, name: str, v: float) -> None:
         self.gauges[name] = v
 

@@ -10,13 +10,17 @@ single control plane both now consume:
   * :class:`Policy` — the protocol every traffic policy implements
     (``init_state / observe / update / route``), plus :meth:`Policy.parse`
     so the established shorthands (``0.0``..``100.0``, ``"auto"``,
-    ``"auto+net"``, ``"auto+hedge"``) keep working everywhere.
+    ``"auto+net"``, ``"auto+hedge"``, ``"auto+migrate"``) keep working
+    everywhere.
   * Concrete policies wrapping the existing primitives:
       - :class:`StaticSplit`     — fixed percentage (paper Table 2 columns);
       - :class:`AutoOffload`     — the paper's Eqs (1)-(4) controller;
       - :class:`NetAwareOffload` — beyond-paper link-capacity cap (§4.2);
       - :class:`HedgedOffload`   — auto + p99 straggler hedging on top of
-        :func:`repro.core.router.hedged_mask`.
+        :func:`repro.core.router.hedged_mask`;
+      - :class:`MigratingOffload` — auto + live mid-stream migration of
+        slot-resident requests once R_t crosses a threshold (the
+        ``migrate`` modifier composes with ``net``/``hedge`` as well).
   * :class:`ControlLoop` — one scrape-and-update cycle: latency windows,
     in-flight queue-age mixing, demand RPS, policy update.  The simulator
     and the live continuum drive the *same* code, so their R_t
@@ -58,6 +62,16 @@ class Policy:
     #: lazily-built jitted routers (shared by all route*() calls)
     _route_jit = None
     _route_tiers_jit = None
+    #: Mid-stream migration knob: when set, the live continuous scheduler
+    #: migrates slot-resident requests down-chain whenever this
+    #: boundary's R_t reaches the threshold (percent) — in addition to
+    #: routing new arrivals.  ``None`` disables migration (the default;
+    #: routing-only is the paper's behaviour).
+    migrate_threshold: Optional[float] = None
+    #: A row is a migration victim only if it still has at least this
+    #: many tokens to generate — nearly-done rows are cheaper to finish
+    #: in place than to ship.
+    migrate_min_remaining: int = 2
 
     # -- state ------------------------------------------------------------
     def init_state(self, num_functions: int) -> Any:
@@ -179,19 +193,25 @@ class Policy:
                 pass
             parts = s.split("+")
             mods = set(parts[1:])
-            if parts[0] == "auto" and mods <= {"net", "hedge"}:
+            if parts[0] == "auto" and mods <= {"net", "hedge", "migrate"}:
                 if "net" in mods:
                     net = NetAwareOffload(cfg,
                                           link_bytes_per_s=link_bytes_per_s,
                                           req_bytes=req_bytes)
-                    if "hedge" in mods:
-                        pol = HedgedOffload(net.cfg)
-                        pol.spec = "auto+net+hedge"
-                        return pol
-                    return net
-                if "hedge" in mods:
-                    return HedgedOffload(cfg)
-                return AutoOffload(cfg)
+                    pol = HedgedOffload(net.cfg) if "hedge" in mods else net
+                elif "hedge" in mods:
+                    pol = HedgedOffload(cfg)
+                elif "migrate" in mods:
+                    pol = MigratingOffload(cfg)
+                else:
+                    pol = AutoOffload(cfg)
+                if "migrate" in mods and pol.migrate_threshold is None:
+                    # the modifier composes with net/hedge variants too
+                    pol.migrate_threshold = MigratingOffload.default_threshold
+                pol.spec = "auto" + "".join(
+                    "+" + m for m in ("net", "hedge", "migrate")
+                    if m in mods)
+                return pol
         raise ValueError(f"unknown policy spec {spec!r}")
 
 
@@ -278,6 +298,33 @@ class HedgedOffload(AutoOffload):
             warnings.simplefilter("ignore", RuntimeWarning)  # all-NaN rows
             p = np.nanpercentile(lat, self.hedge_quantile * 100.0, axis=-1)
         return np.where(np.isfinite(p), p, np.inf).astype(np.float32)
+
+
+class MigratingOffload(AutoOffload):
+    """Auto controller + live mid-stream migration (``"auto+migrate"``).
+
+    Routing alone only redirects *new arrivals*: once a request is
+    admitted into a tier's continuous-batching slots it is pinned there,
+    so a burst of long decodes holds the slots hostage while R_t
+    uselessly diverts fresh traffic.  With this variant, whenever a
+    boundary's R_t reaches ``migrate_threshold`` the live scheduler also
+    selects ``ceil(eligible * R_t / 100)`` slot-resident victims
+    (longest-remaining first), ships their KV/state rows over the
+    boundary's link (real cache bytes + token tail on the request's
+    latency clock) and resumes them down-chain without re-prefill.  A
+    landing that finds the destination full is *aborted*: the row
+    resumes at its source, never lost.
+    """
+
+    spec = "auto+migrate"
+    default_threshold = 50.0
+
+    def __init__(self, cfg: Optional[offload.OffloadConfig] = None,
+                 migrate_threshold: float = default_threshold,
+                 migrate_min_remaining: int = 2):
+        super().__init__(cfg)
+        self.migrate_threshold = float(migrate_threshold)
+        self.migrate_min_remaining = int(migrate_min_remaining)
 
 
 class ControlLoop:

@@ -100,6 +100,12 @@ class SimResult:
     tier_counts: Dict[str, int] = dataclasses.field(default_factory=dict)
     # requests that overflowed a tier and were spilled down the chain
     spilled: int = 0
+    # mid-stream migrations (policies with a migrate_threshold): fired =
+    # in-service requests shipped down-chain; aborted = destination full
+    # at landing, resumed at the source instead — never lost
+    migrations_fired: int = 0
+    migrations_completed: int = 0
+    migrations_aborted: int = 0
 
     def summary(self) -> Dict[str, float]:
         out = {
@@ -116,12 +122,16 @@ class SimResult:
             out[f"served_{name}"] = n
         if self.spilled:
             out["spilled"] = self.spilled
+        if self.migrations_fired:
+            out["migrations_fired"] = self.migrations_fired
+            out["migrations_completed"] = self.migrations_completed
+            out["migrations_aborted"] = self.migrations_aborted
         return out
 
 
 # Event kinds, ordered for deterministic tie-breaking (ties never reach the
 # kind field — the monotone sequence number breaks them first).
-_ARRIVAL, _DONE, _CONTROL, _METRIC = range(4)
+_ARRIVAL, _DONE, _CONTROL, _METRIC, _MIGRATE = range(5)
 
 
 def _service_sample(rng: np.random.Generator, mean: float, cv: float) -> float:
@@ -264,6 +274,14 @@ class ContinuumSimulator:
         # must not see).
         R_cur = np.array(self.control.R_all[:N - 1, 0], np.float64)
         successes = failures = spilled = 0
+        # In-service bookkeeping for mid-stream migration: every started
+        # service gets a token; migrating a request deletes its token so
+        # the already-queued _DONE event is recognized as stale when it
+        # pops.  (Policies without a migrate_threshold never delete, so
+        # their event trace — and RNG draw sequence — is unchanged.)
+        svc_seq = itertools.count()
+        svc_live: Dict[int, Tuple[int, float, float]] = {}  # tok -> (j, arr, t_done)
+        mig_fired = mig_completed = mig_aborted = mig_transit = 0
         # Demand per boundary this interval: boundary b sees the requests
         # that reached tier b (routing or spill) — what its net-aware cap
         # divides the link capacity by.
@@ -293,7 +311,21 @@ class ContinuumSimulator:
                 note_busy(ready)
             tier.busy += 1
             svc = _service_sample(self.rng, tier.service_mean, prof.cv)
-            push(ready + svc, _DONE, (j, arr))
+            tok = next(svc_seq)
+            svc_live[tok] = (j, arr, ready + svc)
+            push(ready + svc, _DONE, (j, arr, tok))
+
+        def resume_service(j: int, t: float, arr: float, remaining: float):
+            """Restart a migrated request with its *remaining* work (no
+            fresh service sample — migration moves the request, it does
+            not restart it)."""
+            tier = tiers[j]
+            if j == 0:
+                note_busy(t)
+            tier.busy += 1
+            tok = next(svc_seq)
+            svc_live[tok] = (j, arr, t + remaining)
+            push(t + remaining, _DONE, (j, arr, tok))
 
         def cross_link(l: int, ready: float) -> float:
             """Serialize one payload over link l (FIFO pipe model:
@@ -303,6 +335,60 @@ class ContinuumSimulator:
             link_free_at[l] = start + xfer
             link_bytes[l] += prof.payload_bytes
             return link_free_at[l] + topo.links[l].rtt_s
+
+        def backfill(j: int, t: float):
+            """A slot freed (completion or migration): admit the next
+            queued request, dropping timed-out waiters."""
+            nonlocal failures
+            tier = tiers[j]
+            while tier.queue:
+                (qarr,) = tier.queue.popleft()
+                if t - qarr > cfg.timeout_s:
+                    failures += 1
+                    if j < last:
+                        self.tier_metrics[j].record_latency(
+                            prof.name, t - qarr)
+                    continue
+                start_service(j, t, qarr)
+                break
+
+        def fire_migrations(t: float):
+            """Mid-stream migration, the simulator's in-service transfer:
+            every boundary whose policy crossed its migrate_threshold
+            ships ceil(in_service * R_t/100) requests (longest remaining
+            service first) over its link; the request resumes down-chain
+            with its remaining work scaled by the service-speed ratio.
+            The payload serializes over the link's FIFO pipe, so
+            migration egress shows up in ``net_links_MBps`` like any
+            other crossing."""
+            nonlocal mig_fired, mig_transit
+            for b in range(N - 1):
+                pol = self.control.policies[b]
+                thr = pol.migrate_threshold
+                if thr is None or float(R_cur[b]) < thr:
+                    continue
+                in_svc = [(tok, rec) for tok, rec in svc_live.items()
+                          if rec[0] == b]
+                n_mig = min(len(in_svc),
+                            int(np.ceil(len(in_svc) * float(R_cur[b])
+                                        / 100.0)))
+                if n_mig <= 0:
+                    continue
+                # longest remaining service first (most slot-hungry);
+                # token order breaks ties deterministically
+                in_svc.sort(key=lambda e: (-(e[1][2] - t), e[0]))
+                for tok, (j, arr, t_done) in in_svc[:n_mig]:
+                    del svc_live[tok]          # the queued _DONE is stale
+                    if j == 0:
+                        note_busy(t)
+                    tiers[j].busy -= 1
+                    mig_fired += 1
+                    mig_transit += 1
+                    if b + 1 < n_bounds:
+                        arrivals_in_interval[b + 1] += 1
+                    push(cross_link(b, t), _MIGRATE,
+                         (b + 1, arr, t_done - t, j))
+                    backfill(j, t)             # the freed slot backfills
 
         def admit(j: int, ready: float, arr: float):
             """Hand a request to tier j; overflow spills down the chain
@@ -342,7 +428,10 @@ class ContinuumSimulator:
                 push(t + self.rng.exponential(1.0 / self._rate(t)), _ARRIVAL)
 
             elif kind == _DONE:
-                j, arr = payload
+                j, arr, tok = payload
+                if tok not in svc_live:
+                    continue       # stale: the request migrated mid-service
+                del svc_live[tok]
                 tier = tiers[j]
                 if j == 0:
                     note_busy(t)
@@ -358,17 +447,7 @@ class ContinuumSimulator:
                     completed_lat.append(lat)
                 else:
                     failures += 1
-                # admit next from queue, dropping timed-out waiters
-                while tier.queue:
-                    (qarr,) = tier.queue.popleft()
-                    if t - qarr > cfg.timeout_s:
-                        failures += 1
-                        if j < last:
-                            self.tier_metrics[j].record_latency(
-                                prof.name, t - qarr)
-                        continue
-                    start_service(j, t, qarr)
-                    break
+                backfill(j, t)
 
             elif kind == _CONTROL:
                 # One shared scrape-and-update cycle (ControlLoop) per
@@ -389,6 +468,33 @@ class ContinuumSimulator:
                 R_cur = np.array(R_all[:N - 1, 0], np.float64)
                 push(t + cfg.control_interval_s, _CONTROL)
                 arrivals_in_interval = [0] * n_bounds
+                # Mid-stream migration (policies with a migrate_threshold
+                # only): fresh R_t may now warrant moving in-service work
+                fire_migrations(t)
+
+            elif kind == _MIGRATE:
+                # A migrated request's state landed at its destination.
+                dst, arr, remaining, src = payload
+                mig_transit -= 1
+                if tiers[dst].busy < tiers[dst].spec.slots:
+                    # remaining *work* is invariant; the time to finish it
+                    # scales with the destination's service speed
+                    mig_completed += 1
+                    resume_service(dst, t, arr,
+                                   remaining * tiers[dst].service_mean
+                                   / tiers[src].service_mean)
+                elif tiers[src].busy < tiers[src].spec.slots:
+                    # destination full: ABORT — resume at the source
+                    mig_aborted += 1
+                    resume_service(src, t, arr, remaining)
+                else:
+                    # both ends full: the landed state waits and retries
+                    # next control interval — remaining work preserved,
+                    # bounded queues untouched, never silently dropped
+                    # (a request stuck past the timeout still fails on
+                    # completion, like any late finisher)
+                    mig_transit += 1
+                    push(t + cfg.control_interval_s, _MIGRATE, payload)
 
             elif kind == _METRIC:
                 note_busy(t)
@@ -408,8 +514,10 @@ class ContinuumSimulator:
                 off_s.append(float(R_cur[0]) if len(R_cur) else 0.0)
                 push(t + cfg.metric_interval_s, _METRIC)
 
-        # Drain: everything still queued at the end never completed.
+        # Drain: everything still queued, in service, or in a migration
+        # transfer at the end never completed.
         failures += sum(len(tr.queue) + tr.busy for tr in tiers)
+        failures += mig_transit
 
         return SimResult(
             policy=str(self.policy), workload=prof.name,
@@ -419,7 +527,10 @@ class ContinuumSimulator:
             net_MBps=np.asarray(net_s), offload_pct=np.asarray(off_s),
             net_links_MBps=np.asarray(net_links),
             tier_counts={tr.spec.name: tr.served for tr in tiers},
-            spilled=spilled)
+            spilled=spilled,
+            migrations_fired=mig_fired,
+            migrations_completed=mig_completed,
+            migrations_aborted=mig_aborted)
 
 
 def run_policy_sweep(workload: str,

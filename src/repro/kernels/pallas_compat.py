@@ -1,0 +1,18 @@
+"""Version compatibility for the Pallas TPU surface.
+
+The kernels in this package target the current Pallas API, where the
+Mosaic compiler-parameter dataclass is ``pltpu.CompilerParams``.  Older
+jax releases (< 0.5, including the one baked into this image) expose the
+same dataclass as ``pltpu.TPUCompilerParams``.  Resolve the name once
+here so every kernel module works (and its CPU ``interpret=True`` tests
+run) on either release.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams
+
+__all__ = ["CompilerParams"]

@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.pallas_compat import CompilerParams
+
 
 def _kernel(a_ref, b_ref, h0_ref, hs_ref, hfin_ref, h_ref, *, nc: int,
             chunk: int):
@@ -90,7 +92,7 @@ def ssd_scan(a, b, h0, *, chunk: int = 128, blk_i: int = 256,
             jax.ShapeDtypeStruct((B, Ip, N), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((blk_i, N), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(a, b, h0)

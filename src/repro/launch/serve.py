@@ -47,7 +47,8 @@ def main():
     ap.add_argument("--max-new", type=int, default=4)
     ap.add_argument("--policy", default="auto",
                     help="traffic policy: 0..100 | auto | auto+net | "
-                         "auto+hedge")
+                         "auto+hedge | auto+migrate (modifiers compose, "
+                         "e.g. auto+net+migrate)")
     ap.add_argument("--net-aware", action="store_true",
                     help="shorthand for --policy auto+net")
     ap.add_argument("--scheduler", default="continuous",
@@ -107,9 +108,11 @@ def main():
         rec = cc.tick()
         per_tier = " ".join(f"{nm}={rec['tiers'][nm]:3d}" for nm in names)
         backlog = sum(rec["backlog"].values())
+        mig = (f" migrated={rec['migrated']:2d}"
+               if rec["migrations_fired"] or rec["migrated"] else "")
         print(f"round={rnd:3d} rps={rps:5.1f} queued={n:3d} {per_tier} "
               f"steps={rec['steps']:3d} inflight={rec['inflight']:2d} "
-              f"backlog={backlog:3d} R_t={rec['R']:5.1f}%")
+              f"backlog={backlog:3d} R_t={rec['R']:5.1f}%{mig}")
     drained = cc.drain()           # finish slot-resident stragglers
 
     totals = {nm: sum(r["tiers"][nm] for r in cc.log) for nm in names}
@@ -128,6 +131,7 @@ def main():
           f"drain_ticks={drained} "
           f"spilled={sum(r['spilled'] for r in cc.log)} "
           f"rejected={sum(r['rejected'] for r in cc.log)} "
+          f"migrated={int(cc.metrics.counter('migrations_completed'))} "
           f"hedges_open={cc.hedges_open}")
 
 

@@ -46,8 +46,8 @@ from typing import Dict, Optional, Sequence
 
 from repro.core import offload
 from repro.core.policy import (AutoOffload, ControlLoop, HedgedOffload,
-                               NetAwareOffload, Policy, PolicySpec,
-                               StaticSplit)
+                               MigratingOffload, NetAwareOffload, Policy,
+                               PolicySpec, StaticSplit)
 from repro.core.simulator import ContinuumSimulator, SimConfig, SimResult
 from repro.core.topology import LinkSpec, TierSpec, Topology
 from repro.serving.engine import Request
@@ -57,7 +57,7 @@ __all__ = [
     "Continuum", "TierConfig", "TierSpec", "LinkSpec", "Topology",
     "Gateway", "SimConfig", "SimResult", "Request",
     "Policy", "StaticSplit", "AutoOffload", "NetAwareOffload",
-    "HedgedOffload", "ControlLoop",
+    "HedgedOffload", "MigratingOffload", "ControlLoop",
 ]
 
 

@@ -38,6 +38,28 @@ class Request:
     failed: bool = False
 
 
+def _cache_len_axes(cfg: ModelConfig, slots: int, max_len: int) -> list:
+    """Per-leaf sequence-length axis of the cache pytree, or None for
+    leaves whose size does not depend on ``max_len`` (recurrent state).
+
+    Derived exactly, like :func:`_cache_batch_axes`: the length axis is
+    wherever the abstract cache shape changes when ``max_len`` does.
+    """
+    a = jax.tree_util.tree_leaves(
+        model_zoo.init_cache(cfg, slots, max_len, abstract=True))
+    b = jax.tree_util.tree_leaves(
+        model_zoo.init_cache(cfg, slots, max_len + 1, abstract=True))
+    axes = []
+    for la, lb in zip(a, b):
+        axis = None
+        for i, (x, y) in enumerate(zip(la.shape, lb.shape)):
+            if x != y:
+                axis = i
+                break
+        axes.append(axis)
+    return axes
+
+
 def _cache_batch_axes(cfg: ModelConfig, slots: int, max_len: int) -> list:
     """Per-leaf slot-axis of the cache pytree, or None for leaves that do
     not depend on the batch size.
@@ -94,6 +116,8 @@ class Endpoint:
             return model_zoo.prefill(cfg, params, batch, cache)
 
         batch_axes = _cache_batch_axes(cfg, slots, max_len)
+        self._batch_axes = batch_axes
+        self._len_axes = _cache_len_axes(cfg, slots, max_len)
 
         def _decode(params, cache, tokens, t, active):
             """One decode step with a per-row active mask: inactive rows
@@ -150,6 +174,29 @@ class Endpoint:
                 out.append(pl.at[idx].set(rows))
             return logits, jax.tree_util.tree_unflatten(treedef, out)
 
+        def _extract_row(cache, slot):
+            """Slice one slot's cache rows out of the pool: a pytree of
+            per-slot leaves (batch axis kept at size 1) that can be
+            shipped to a peer endpoint of the same model/max_len —
+            mid-stream migration's unit of state."""
+            leaves = jax.tree_util.tree_leaves(cache)
+            return [jnp.take(l, slot[None], axis=ax)
+                    for l, ax in zip(leaves, batch_axes) if ax is not None]
+
+        def _insert_row(cache, rows, slot):
+            """Scatter one extracted row state into this pool at ``slot``
+            (the other side of migration: resume without re-prefill)."""
+            leaves, treedef = jax.tree_util.tree_flatten(cache)
+            it = iter(rows)
+            out = []
+            for l, ax in zip(leaves, batch_axes):
+                if ax is None:
+                    out.append(l)
+                    continue
+                idx = (slice(None),) * ax + (slot[None],)
+                out.append(l.at[idx].set(next(it)))
+            return jax.tree_util.tree_unflatten(treedef, out)
+
         # ``donate`` governs every jitted step that consumes the cache
         # (we always rebind ``self.cache`` to the result).
         dn = (2,) if donate else ()
@@ -159,6 +206,9 @@ class Endpoint:
         self._reset = jax.jit(_reset_slot, donate_argnums=(0,) if donate else ())
         self._restore = jax.jit(_restore_slot,
                                 donate_argnums=(0,) if donate else ())
+        self._extract = jax.jit(_extract_row)
+        self._insert = jax.jit(_insert_row,
+                               donate_argnums=(0,) if donate else ())
         # Length padding is sound only for the dense family: causal
         # masking hides padded positions there, but recurrent state
         # threads through every token, and MoE expert capacity is
@@ -206,6 +256,55 @@ class Endpoint:
     @property
     def active(self) -> int:
         return sum(not f for f in self.slot_free)
+
+    # -- mid-stream migration state -----------------------------------------
+    def compatible_with(self, other: "Endpoint") -> bool:
+        """Row states are interchangeable between two endpoints iff they
+        serve the same model at the same context budget (every cache leaf
+        then has identical non-batch dimensions)."""
+        return other.cfg is self.cfg and other.max_len == self.max_len
+
+    def extract_rows(self, slots: List[int]) -> List[List[jax.Array]]:
+        """Slice the given slots' cache rows out of the pool.
+
+        Returns one row state per slot — a pytree (list) of per-slot
+        leaves, each the corresponding cache leaf with the batch axis
+        narrowed to size 1.  Leaves that do not depend on the batch size
+        are omitted (they are parameters of the pool, not of a request).
+        One jitted gather per row keeps a single compiled shape
+        regardless of how many rows migrate at once.
+        """
+        return [self._extract(self.cache, jnp.asarray(s, jnp.int32))
+                for s in slots]
+
+    def insert_rows(self, rows: List[List[jax.Array]], slots: List[int],
+                    positions: List[int]) -> None:
+        """Scatter extracted row states into *claimed* slots of this pool
+        and set their decode positions — the receiving half of mid-stream
+        migration: decode resumes at ``positions`` with no re-prefill.
+        """
+        for state, slot, pos in zip(rows, slots, positions):
+            self.cache = self._insert(self.cache, state,
+                                      jnp.asarray(slot, jnp.int32))
+            self.slot_pos[slot] = min(pos, self.max_len)
+
+    def cache_nbytes_per_row(self, length: int) -> float:
+        """Bytes of one slot's live cache state at decode position
+        ``length`` — what a migration actually ships over a link.
+
+        Leaves with a sequence axis (KV blocks) count only their filled
+        positions; recurrent state leaves (no length axis) count in full.
+        """
+        total = 0.0
+        leaves = jax.tree_util.tree_leaves(self.cache)
+        for leaf, bax, sax in zip(leaves, self._batch_axes, self._len_axes):
+            if bax is None:
+                continue
+            per_row = leaf.nbytes / leaf.shape[bax]
+            if sax is not None:
+                per_row *= min(length, self.max_len) / leaf.shape[sax]
+            total += per_row
+        return total
 
     # -- steps --------------------------------------------------------------
     def prefill_one(self, slot: int, tokens: np.ndarray) -> int:

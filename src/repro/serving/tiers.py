@@ -34,6 +34,18 @@ boundary or (with ``topology.waterfall``) spilling a stalled tier's load
 charging its RTT + payload serialization to the request's latency clock
 and counting the boundary crossing.
 
+Policies carrying a ``migrate_threshold`` (``"auto+migrate"``) extend
+offloading to **slot-resident** work: when a boundary's R_t reaches the
+threshold, the tier cancels its most slot-hungry in-flight rows (longest
+remaining decode first), extracts their KV/state rows from the cache
+pool, and ships them over the link — ``nbytes`` = live cache bytes at
+the row's position plus the token tail — and the destination re-admits
+them into free slots *without re-prefill*, resuming decode at the same
+position (token-stream bit-identity is pinned by tests).  A landing that
+finds the destination full ABORTS: the row resumes at its source, never
+lost; transfers still in flight when a step-capped tick ends land on a
+later tick.
+
 The controller sees the continuum the way the paper's Knative deployment
 does (queue-proxy depth/age gauges per component): boundary b is fed tier
 b's latency windows, tier b's **own gateway backlog ages**, and the
@@ -60,6 +72,7 @@ from __future__ import annotations
 import dataclasses
 import math
 import time
+import warnings
 from collections import deque
 from typing import Deque, Dict, List, Optional, Tuple
 
@@ -110,6 +123,27 @@ class _InFlight:
     toks: List[int]               # generated tokens so far (first from prefill)
     need: int                     # total tokens to generate
     done_at: float = 0.0
+
+
+@dataclasses.dataclass
+class _Transit:
+    """One migrated request's extracted state, in flight over a link.
+
+    Created by :meth:`EdgeCloudContinuum._fire_migrations` (the source
+    tier already cancelled the row and freed its slot); resolved by
+    :meth:`EdgeCloudContinuum._land_migrations` once the wall clock
+    passes ``t_land`` — possibly ticks later, when the link is slow.
+    """
+    item: _Queued
+    fn: str
+    rows: List                     # Endpoint.extract_rows state (one row)
+    pos: int                       # decode position at extraction
+    toks: List[int]                # tokens generated so far
+    need: int                      # total tokens to generate
+    src: int                       # source tier index
+    dst: int                       # destination tier index
+    t_land: float                  # wall-clock landing time
+    nbytes: float                  # cache bytes + token tail shipped
 
 
 @dataclasses.dataclass
@@ -434,7 +468,8 @@ class EdgeCloudContinuum:
                  topology: Optional[Topology] = None,
                  reject_latency_s: float = 0.005,
                  scheduler: str = "continuous",
-                 max_steps_per_tick: Optional[int] = None):
+                 max_steps_per_tick: Optional[int] = None,
+                 req_bytes: Optional[float] = None):
         if scheduler not in ("continuous", "wave"):
             raise ValueError(
                 f"scheduler must be 'continuous' or 'wave', got {scheduler!r}")
@@ -452,7 +487,21 @@ class EdgeCloudContinuum:
             for spec in topology.tiers]
         self.offload_cfg = offload_cfg or offload.OffloadConfig()
         self._policy_spec: PolicySpec = policy
-        self.policy = Policy.parse(policy, offload_cfg=self.offload_cfg)
+        # Average request payload hint for net-aware caps.  The simulator
+        # derives this from its workload profile; the live runtime takes
+        # it as a constructor hint so an auto+net deployment can divide
+        # its links by the real payload (and sim-live R_t parity holds).
+        self.req_bytes = req_bytes
+        self.policy = Policy.parse(policy, offload_cfg=self.offload_cfg,
+                                   req_bytes=req_bytes)
+        if scheduler == "wave" and self.policy.migrate_threshold is not None:
+            # the wave scheduler runs every admitted request to
+            # completion — there is no slot-resident state to migrate
+            warnings.warn(
+                "mid-stream migration (migrate_threshold="
+                f"{self.policy.migrate_threshold}) requires the "
+                "continuous scheduler; scheduler='wave' will never "
+                "migrate", stacklevel=2)
         self.window = window
         self.control_interval_s = control_interval_s
         # Fast rejections are part of the latency distribution Eq (1)
@@ -472,6 +521,13 @@ class EdgeCloudContinuum:
             {} for _ in range(self._num_boundaries)]
         # Platform-level counters (hedging outcomes etc.).
         self.metrics = MetricsRegistry([])
+        # Mid-stream migrations currently in flight over a link, and the
+        # cumulative per-link egress bytes (every crossing: routing,
+        # spill, hedge twins, migrated cache state) — the live
+        # counterpart of the simulator's net_links_MBps series.
+        self.migrations: List[_Transit] = []
+        self.link_bytes: List[float] = [0.0] * len(topology.links)
+        self._link_bytes_seen: List[float] = [0.0] * len(topology.links)
         # None = drain every gateway every tick; an int caps the admission
         # rounds per tick, so overload leaves per-tier *backlogs* whose
         # in-flight ages the next scrape mixes into Eq (1) (the
@@ -513,17 +569,25 @@ class EdgeCloudContinuum:
 
     @property
     def in_flight(self) -> int:
-        """Slot-resident requests across every tier (continuous scheduler;
-        nonzero between ticks only under ``max_steps_per_tick``)."""
-        return sum(t.inflight_count(fn)
-                   for t in self.tiers for fn in t.endpoints)
+        """Slot-resident requests across every tier plus migrated state
+        still in flight over a link (continuous scheduler; nonzero
+        between ticks only under ``max_steps_per_tick`` or while a
+        cross-tick migration is landing)."""
+        return (sum(t.inflight_count(fn)
+                    for t in self.tiers for fn in t.endpoints)
+                + len(self.migrations))
+
+    @property
+    def migrations_open(self) -> int:
+        """Mid-stream migrations fired but not yet landed/aborted."""
+        return len(self.migrations)
 
     @property
     def hedges_open(self) -> int:
         """Hedge pairs still racing (fired but neither won nor cancelled)."""
-        c = self.metrics.counters
-        return int(c["hedges_fired"] - c["hedges_won"]
-                   - c["hedges_cancelled"])
+        c = self.metrics.counter
+        return int(c("hedges_fired") - c("hedges_won")
+                   - c("hedges_cancelled"))
 
     # -- deployment (paper §3.3.1) ------------------------------------------
     def deploy(self, spec: FunctionSpec, model_cfg: ModelConfig, params) -> None:
@@ -546,7 +610,8 @@ class EdgeCloudContinuum:
                 Policy.parse(self._policy_spec, offload_cfg=self.offload_cfg,
                              link_bytes_per_s=(
                                  links[min(b, len(links) - 1)].bandwidth_Bps
-                                 if links else None))
+                                 if links else None),
+                             req_bytes=self.req_bytes)
                 for b in range(self._num_boundaries)]
             self.control = ControlLoop(
                 self.policy, len(self.fn_names), window=self.window,
@@ -588,6 +653,7 @@ class EdgeCloudContinuum:
         if l < len(self.topology.links):
             item.t_submit -= self.topology.links[l].latency_s(
                 item.req.tokens.nbytes)
+            self.link_bytes[l] += item.req.tokens.nbytes
         if not item.hedge:
             self._count_crossing(l + 1, item.fn)
 
@@ -633,6 +699,11 @@ class EdgeCloudContinuum:
         R = self.controller_update()
         self._clock += self.control_interval_s
         self._tick_no += 1
+        # Mid-stream migration: boundaries whose R_t crossed their
+        # policy's threshold ship slot-resident victims down-chain NOW —
+        # freed slots are admissible this very tick, the state lands
+        # when its link transfer completes (possibly ticks later).
+        mig_fired = self._fire_migrations()
         last = len(self.tiers) - 1
         hedged = 0
         pairs: List[_HedgePair] = []
@@ -701,7 +772,11 @@ class EdgeCloudContinuum:
         for ti, tier in enumerate(self.tiers):
             for fn, asc in tier.autoscalers.items():
                 conc = (len(pending.get((ti, fn), []))
-                        + tier.inflight_count(fn))
+                        + tier.inflight_count(fn)
+                        # migrated state headed here is inbound demand —
+                        # the destination must not scale to zero under it
+                        + sum(1 for tr in self.migrations
+                              if tr.dst == ti and tr.fn == fn))
                 asc.observe(self._clock, float(conc))
                 asc.desired(self._clock)
 
@@ -716,12 +791,19 @@ class EdgeCloudContinuum:
         rejected_tick = rejected_total - self._rejected_seen
         self._rejected_seen = rejected_total
         served = body.pop("served")
+        # Per-tick link egress (MB), like every sibling field — routing,
+        # spill, twins, and migrated cache state all count.
+        link_MB = [(b - s) / 1e6 for b, s in
+                   zip(self.link_bytes, self._link_bytes_seen)]
+        self._link_bytes_seen = list(self.link_bytes)
         rec = {"R": float(R.mean()) if len(R) else 0.0,
                "edge": served[self.tiers[0].name],
                "cloud": served[self.tiers[-1].name],
                "tiers": dict(served),
                "hedged": hedged,
+               "migrations_fired": mig_fired,
                **body,
+               "link_MB": link_MB,
                "backlog": {t.name: len(g)
                            for t, g in zip(self.tiers, self.gateways)},
                "rejected": rejected_tick,
@@ -770,6 +852,134 @@ class EdgeCloudContinuum:
         item.pair = None           # twin lost/abandoned: runs normally
         return False
 
+    # -- mid-stream migration (continuous scheduler only) ----------------------
+
+    def _fire_migrations(self) -> int:
+        """Launch mid-stream migrations for every boundary whose policy
+        carries a ``migrate_threshold`` that its current R_t reaches.
+
+        Tier b selects ``ceil(eligible * R_t/100)`` victims among its
+        slot-resident rows — longest remaining decode first (the most
+        slot-hungry work) — cancels them locally via the eviction
+        machinery, extracts their KV/state rows, and ships them over
+        link b: ``nbytes`` is the live cache bytes at the row's decode
+        position plus its token tail, the transfer occupies the
+        request's clock until it lands, and the bytes count toward the
+        link's egress like any other crossing.  Hedge twins and rows of
+        already-resolved pairs never migrate (duplicate work is evicted,
+        not shipped).
+        """
+        if self.control is None or self.scheduler != "continuous":
+            return 0
+        fired = 0
+        now = time.perf_counter()
+        for b in range(min(self._num_boundaries, len(self.tiers) - 1)):
+            pol = self.control.policies[b]
+            thr = pol.migrate_threshold
+            if thr is None:
+                continue
+            tier, dst = self.tiers[b], self.tiers[b + 1]
+            link = self.topology.links[b]
+            for fn, fl in tier.inflight.items():
+                if not fl:
+                    continue
+                R_b = float(self.control.R_all[b][self._fn_ids[fn]])
+                if R_b < thr:
+                    continue
+                ep = tier.endpoints[fn]
+                dep = dst.endpoints.get(fn)
+                if dep is None or not ep.compatible_with(dep):
+                    continue       # rows only transplant onto a twin pool
+                eligible = [
+                    rec for rec in fl.values()
+                    if not rec.item.hedge
+                    and (rec.item.pair is None
+                         or rec.item.pair.winner is None)
+                    and rec.need - len(rec.toks) >= pol.migrate_min_remaining]
+                n = min(len(eligible), math.ceil(len(eligible) * R_b / 100.0))
+                if n <= 0:
+                    continue
+                eligible.sort(key=lambda r: (-(r.need - len(r.toks)), r.slot))
+                victims = eligible[:n]
+                states = ep.extract_rows([r.slot for r in victims])
+                for rec, state in zip(victims, states):
+                    pos = int(ep.slot_pos[rec.slot])
+                    tier.cancel(fn, rec.slot)      # slot frees NOW
+                    nbytes = (ep.cache_nbytes_per_row(pos)
+                              + 4.0 * (len(rec.item.req.tokens)
+                                       + len(rec.toks)))
+                    self.link_bytes[b] += nbytes
+                    self._count_crossing(b + 1, fn)
+                    self.migrations.append(_Transit(
+                        item=rec.item, fn=fn, rows=state, pos=pos,
+                        toks=rec.toks, need=rec.need, src=b, dst=b + 1,
+                        t_land=now + link.latency_s(nbytes),
+                        nbytes=nbytes))
+                    fired += 1
+        if fired:
+            self.metrics.inc("migrations_fired", fired)
+        return fired
+
+    def _readmit(self, ti: int, tr: _Transit, force: bool = False) -> bool:
+        """Insert a landed row state into tier ``ti``'s pool and resume
+        its decode (no re-prefill).  Respects the autoscaler-admitted
+        budget unless ``force`` (the migration analogue of the
+        scale-from-zero floor: a resident request implies >= 1 desired
+        replica, so a both-ends-scaled-to-zero deadlock resumes anyway).
+        """
+        tier = self.tiers[ti]
+        ep = tier.endpoints[tr.fn]
+        if not force and min(
+                tier.free_slots(tr.fn),
+                tier.capacity(tr.fn) - tier.inflight_count(tr.fn)) <= 0:
+            return False
+        slot = ep.try_claim()
+        if slot is None:
+            return False
+        ep.insert_rows([tr.rows], [slot], [tr.pos])
+        rec = _InFlight(tr.item, slot, tr.toks, tr.need)
+        tier.inflight[tr.fn][slot] = rec
+        if tr.item.pair is not None:
+            tr.item.pair.set_ref(tr.item.hedge, ti, rec)
+        return True
+
+    def _land_migrations(self) -> Tuple[int, int]:
+        """Resolve in-flight migrations whose transfer completed.
+
+        A landing row re-enters decode at the destination; a full
+        destination ABORTS the migration and the row resumes at its
+        source instead — never lost (both ends full: it stays in
+        transit and is retried next scheduler step).  A row whose hedge
+        pair resolved against it mid-flight is dropped (its twin already
+        served the request) and counts as aborted.  Returns
+        ``(completed, aborted)``.
+        """
+        if not self.migrations:
+            return 0, 0
+        now = time.perf_counter()
+        completed = aborted = 0
+        still: List[_Transit] = []
+        for tr in self.migrations:
+            if now < tr.t_land:
+                still.append(tr)
+                continue
+            pair = tr.item.pair
+            if pair is not None and pair.winner is not None:
+                if pair.winner == "twin":
+                    self._adopt(tr.item, pair)
+                self.metrics.inc("migrations_aborted")
+                aborted += 1
+            elif self._readmit(tr.dst, tr):
+                self.metrics.inc("migrations_completed")
+                completed += 1
+            elif self._readmit(tr.src, tr):
+                self.metrics.inc("migrations_aborted")
+                aborted += 1
+            else:
+                still.append(tr)
+        self.migrations = still
+        return completed, aborted
+
     def _run_continuous(self, pending: Dict[Tuple[int, str], List[_Queued]]
                         ) -> Dict:
         """The continuous-batching decode loop over every tier.
@@ -787,6 +997,7 @@ class EdgeCloudContinuum:
         last = len(self.tiers) - 1
         waves = steps = spilled = 0
         won = cancelled = 0
+        mig_completed = mig_aborted = 0
 
         def adm_capped() -> bool:
             return (self.max_waves_per_tick is not None
@@ -845,7 +1056,46 @@ class EdgeCloudContinuum:
                 admitted_any = True
             return admitted_any
 
+        def await_landing() -> None:
+            """Nothing to decode or admit until a transfer lands: wait
+            out the earliest link arrival (sub-tick landings; a
+            step-capped tick instead breaks out of the loop and the
+            landing happens a later tick — the cross-tick case)."""
+            nonlocal mig_completed, mig_aborted
+            wait = (min(tr.t_land for tr in self.migrations)
+                    - time.perf_counter())
+            if wait > 0:
+                time.sleep(wait)
+            c, a = self._land_migrations()
+            mig_completed += c
+            mig_aborted += a
+            if not (c or a):
+                # Landing blocked on capacity at BOTH ends (e.g. scaled
+                # to zero): resume anyway — the migration analogue of
+                # the scale-from-zero floor.  Only a transit whose link
+                # transfer has actually completed may be force-landed;
+                # one exists, since we just slept to the earliest t_land.
+                now = time.perf_counter()
+                idx = next(i for i, tr in enumerate(self.migrations)
+                           if tr.t_land <= now)
+                tr = self.migrations.pop(idx)
+                if self._readmit(tr.dst, tr, force=True):
+                    self.metrics.inc("migrations_completed")
+                    mig_completed += 1
+                elif self._readmit(tr.src, tr, force=True):
+                    self.metrics.inc("migrations_aborted")
+                    mig_aborted += 1
+                else:
+                    raise RuntimeError(
+                        "scheduler wedged: migrated state cannot "
+                        "land on any tier")
+
         while True:
+            # (0) land migrated state whose link transfer completed: the
+            # rows re-enter the destination's decode stream mid-tick
+            c, a = self._land_migrations()
+            mig_completed += c
+            mig_aborted += a
             # (1) one decode step across every endpoint with work
             stepped = False
             for ti, tier in enumerate(self.tiers):
@@ -875,7 +1125,10 @@ class EdgeCloudContinuum:
             if stepped or admitted:
                 continue
             if not any(pending.values()):
-                break              # only resolved-pair items were swept
+                if not self.migrations:
+                    break          # only resolved-pair items were swept
+                await_landing()    # idle until the next transfer arrives
+                continue
             # Stalled: nothing decoding, nothing admissible.
             progress = False
             if self.topology.waterfall:
@@ -905,6 +1158,9 @@ class EdgeCloudContinuum:
                     progress = True
                     break
             if not progress:
+                if self.migrations:
+                    await_landing()    # a landing frees slots/capacity
+                    continue
                 raise RuntimeError("scheduler wedged: pending work but "
                                    "no free slot on any tier")
 
@@ -953,6 +1209,8 @@ class EdgeCloudContinuum:
         return {"served": served, "hedges_won": won,
                 "hedges_cancelled": cancelled, "spilled": spilled,
                 "waves": waves, "steps": steps,
+                "migrated": mig_completed,
+                "migrations_aborted": mig_aborted,
                 "inflight": self.in_flight}
 
     # -- legacy run-to-completion wave scheduler -------------------------------
@@ -1088,4 +1346,5 @@ class EdgeCloudContinuum:
             self.metrics.inc("hedges_cancelled", cancelled)
         return {"served": served, "hedges_won": won,
                 "hedges_cancelled": cancelled, "spilled": spilled,
-                "waves": waves, "steps": 0, "inflight": 0}
+                "waves": waves, "steps": 0, "migrated": 0,
+                "migrations_aborted": 0, "inflight": 0}

@@ -34,6 +34,19 @@ from jax.sharding import Mesh, PartitionSpec as P
 PyTree = Any
 
 
+def _pvary(x, axis_name):
+    """Mark ``x`` device-varying over ``axis_name``.
+
+    ``lax.pvary`` exists only on jax versions with varying-manual-axes
+    tracking (check_vma); older releases have no such annotation (their
+    ``check_rep=False`` shard_map accepts untyped collectives), so the
+    identity is the correct fallback.
+    """
+    if hasattr(jax.lax, "pvary"):
+        return jax.lax.pvary(x, (axis_name,))
+    return x
+
+
 @dataclasses.dataclass(frozen=True)
 class CompressionConfig:
     enabled: bool = False
@@ -94,7 +107,7 @@ def ring_allreduce_int8(x: jax.Array, axis_name: str) -> jax.Array:
     acc = x.reshape(n, chunks, *x.shape[1:]).astype(jnp.int32)
     # mark device-varying up front: ppermute outputs are varying over the
     # axis, and a lax loop carry must keep a consistent varying type
-    acc = jax.lax.pvary(acc, (axis_name,))
+    acc = _pvary(acc, axis_name)
 
     def rs_step(i, acc_blk):
         acc, blk = acc_blk
@@ -120,8 +133,8 @@ def ring_allreduce_int8(x: jax.Array, axis_name: str) -> jax.Array:
         out = out.at[pos].set(recv)
         return out, recv
 
-    out0 = jax.lax.pvary(jnp.zeros((n, chunks) + x.shape[1:], jnp.int32),
-                         (axis_name,)).at[(idx + 1) % n].set(own)
+    out0 = _pvary(jnp.zeros((n, chunks) + x.shape[1:], jnp.int32),
+                  axis_name).at[(idx + 1) % n].set(own)
     out, _ = jax.lax.fori_loop(0, n - 1, ag_step, (out0, own))
     return out.reshape(x.shape).astype(jnp.int32)
 

@@ -96,9 +96,9 @@ def test_allreduce_compressed_single_device_mean():
                                atol=1e-6)
 
 
-@pytest.mark.skipif(not hasattr(jax.lax, "pvary"),
-                    reason="ring_allreduce_int8 needs jax.lax.pvary")
 def test_ring_allreduce_int8_matches_psum():
+    # runs on any jax: compression._pvary degrades to identity where
+    # jax.lax.pvary is missing (check_rep/check_vma is off either way)
     mesh = _mesh1d(1)   # ring degenerates to identity at n=1
     x = jnp.arange(-8, 8, dtype=jnp.int8)
 

@@ -1,0 +1,367 @@
+"""Live mid-stream request migration with KV-cache transfer.
+
+The tentpole behaviour: once a request is admitted into a tier's
+continuous-batching slots it used to be pinned there — R_t only
+redirected *new arrivals*.  With a ``migrate_threshold`` policy the live
+scheduler cancels slot-resident victims, ships their cache rows over the
+boundary's :class:`LinkSpec` (real cache bytes + token tail), and the
+destination resumes decode at the same position with **no re-prefill**.
+
+The core correctness pin is token-stream bit-identity: a request
+migrated mid-decode must produce the identical token sequence as the
+same request served unmigrated on a single tier.  Edge cases covered per
+the issue: abort on full destination (row resumes at source, never
+lost), cross-tick landing over a slow link, and the migrate-vs-hedge
+interaction (a migrated primary keeps its ``_HedgePair`` link and the
+pair accounting identity holds every tick).
+"""
+
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core.policy import MigratingOffload, Policy, StaticSplit
+from repro.core.replication import AutoscalingPolicy, FunctionSpec
+from repro.core.simulator import ContinuumSimulator, SimConfig
+from repro.core.topology import LinkSpec, TierSpec, Topology
+from repro.models import model_zoo
+from repro.platform import Continuum, Request, TierConfig
+from repro.serving.engine import Endpoint
+from repro.serving.tiers import _Queued
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = configs.get_smoke_config("stablelm-1.6b")
+    params = model_zoo.init(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _req(rid, max_new=8, length=6):
+    return Request(rid=rid, tokens=np.arange(length, dtype=np.int32),
+                   max_new=max_new)
+
+
+class _Migrate(StaticSplit):
+    """Static split + a migration threshold (deterministic in tests)."""
+
+    def __init__(self, pct, thr=50.0):
+        super().__init__(pct)
+        self.migrate_threshold = thr
+
+
+# ---- engine primitives ------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["stablelm-1.6b", "rwkv6-7b"])
+def test_extract_insert_roundtrip_bit_identity(arch):
+    """Decode k steps on one endpoint, transplant the row into a
+    *different* pool (with a busy neighbor), keep decoding: the token
+    stream matches an unmigrated solo run bit for bit — for attention
+    caches AND recurrent state (rwkv6's rows have no length axis)."""
+    cfg = configs.get_smoke_config(arch)
+    params = model_zoo.init(jax.random.PRNGKey(0), cfg)
+    prompt = np.arange(6, dtype=np.int32)
+
+    solo_ep = Endpoint(cfg, params, slots=2, max_len=64)
+    s = solo_ep.try_claim()
+    tok = solo_ep.prefill_one(s, prompt)
+    solo = [tok]
+    for _ in range(9):
+        tok = solo_ep.decode_all({s: tok})[s]
+        solo.append(tok)
+
+    src = Endpoint(cfg, params, slots=2, max_len=64)
+    dst = Endpoint(cfg, params, slots=4, max_len=64)
+    s = src.try_claim()
+    tok = src.prefill_one(s, prompt)
+    got = [tok]
+    for _ in range(4):
+        tok = src.decode_all({s: tok})[s]
+        got.append(tok)
+    [state] = src.extract_rows([s])
+    pos = int(src.slot_pos[s])
+    src.release(s)
+    # a busy neighbor on the destination must not perturb the insert
+    other = dst.try_claim()
+    dst.prefill_one(other, np.arange(3, dtype=np.int32))
+    d = dst.try_claim()
+    dst.insert_rows([state], [d], [pos])
+    for _ in range(5):
+        tok = dst.decode_all({d: tok})[d]
+        got.append(tok)
+    assert got == solo
+
+
+def test_cache_nbytes_per_row_scales_with_position(model):
+    cfg, params = model
+    ep = Endpoint(cfg, params, slots=2, max_len=64)
+    n10, n64 = ep.cache_nbytes_per_row(10), ep.cache_nbytes_per_row(64)
+    assert 0 < n10 < n64
+    # beyond the context budget the row cannot grow
+    assert ep.cache_nbytes_per_row(1000) == n64
+    # KV leaves dominate: bytes scale ~linearly with filled positions
+    assert n64 / n10 > 3.0
+
+
+def test_endpoint_compatibility_gate(model):
+    cfg, params = model
+    a = Endpoint(cfg, params, slots=2, max_len=64)
+    b = Endpoint(cfg, params, slots=8, max_len=64)
+    c = Endpoint(cfg, params, slots=2, max_len=128)
+    assert a.compatible_with(b)          # pool size may differ
+    assert not a.compatible_with(c)      # context budget may not
+
+
+# ---- continuum-level migration ----------------------------------------------
+
+def _two_tier(model, policy, **kw):
+    cfg, params = model
+    cc = Continuum(edge=TierConfig(slots=2, max_len=64),
+                   cloud=TierConfig(slots=4, max_len=64),
+                   policy=policy, seed=0, **kw)
+    cc.deploy(FunctionSpec(name="fn", arch="stablelm-1.6b"), cfg, params)
+    return cc
+
+
+def _resident(cc, req, tier=0):
+    """Admit a request straight into a tier's slots (bypassing routing),
+    the deterministic way to pre-saturate a tier in tests."""
+    item = _Queued("fn", req, t_submit=time.perf_counter())
+    cc.tiers[tier].admit("fn", [item])
+    return item
+
+
+def test_migration_mid_decode_bit_identity(model):
+    """The acceptance pin: a request migrated mid-decode produces the
+    identical token sequence as the same request served unmigrated."""
+    solo_cc = _two_tier(model, policy=0.0)
+    solo = _req(0, max_new=12)
+    solo_cc.submit("fn", solo)
+    solo_cc.tick()
+    assert solo.output is not None
+
+    pol = _Migrate(100.0, thr=None)      # threshold off: no migration yet
+    cc = _two_tier(model, pol, max_steps_per_tick=3)
+    req = _req(0, max_new=12)
+    _resident(cc, req)
+    cc.tick()                            # 3 decode steps at the edge
+    assert req.output is None and cc.in_flight == 1
+    pol.migrate_threshold = 50.0         # R_t (100) now crosses: migrate
+    rec = cc.tick()
+    assert rec["migrations_fired"] == 1
+    cc.drain()
+    assert list(req.output) == list(solo.output)
+    assert cc.metrics.counter("migrations_completed") == 1
+    assert cc.metrics.counter("migrations_aborted") == 0
+    # served exactly once, at the destination
+    served = {t.name: sum(r["tiers"][t.name] for r in cc.log)
+              for t in cc.tiers}
+    assert served == {"edge": 0, "cloud": 1}
+    # the transfer shipped real cache bytes + token tail over link 0
+    assert cc.link_bytes[0] > cc.tiers[0].endpoints[
+        "fn"].cache_nbytes_per_row(6)
+
+
+def test_migration_latency_includes_link_cost(model):
+    """The transfer occupies the request's clock: with a chunky RTT the
+    migrated request's end-to-end latency includes the hop."""
+    cfg, params = model
+    topo = Topology(
+        tiers=(TierSpec("edge", slots=2, max_len=64),
+               TierSpec("cloud", slots=4, max_len=64)),
+        links=(LinkSpec(rtt_s=0.4),), waterfall=False)
+    cc = Continuum.from_topology(topo, policy=_Migrate(100.0), seed=0)
+    cc.deploy(FunctionSpec(name="fn", arch="stablelm-1.6b"), cfg, params)
+    req = _req(0, max_new=6)
+    _resident(cc, req)
+    t0 = time.perf_counter()
+    cc.tick()
+    cc.drain()
+    assert req.output is not None
+    assert req.t_done - t0 >= 0.4        # waited out the link
+    assert cc.metrics.counter("migrations_completed") == 1
+
+
+def test_migration_aborted_on_full_destination(model):
+    """Destination full at landing: the migration ABORTS and the row
+    resumes at its source — finishes correctly, never lost."""
+    cfg, params = model
+    topo = Topology(
+        tiers=(TierSpec("edge", slots=2, max_len=64),
+               TierSpec("cloud", slots=1, max_len=64)),
+        links=(LinkSpec(rtt_s=0.0),), waterfall=False)
+    cc = Continuum.from_topology(topo, policy=_Migrate(100.0), seed=0,
+                                 max_steps_per_tick=4)
+    cc.deploy(FunctionSpec(name="fn", arch="stablelm-1.6b"), cfg, params)
+    # the cloud's only "fn" slot is held by a long blocker (endpoint
+    # pools are per-function: the destination must be full for "fn")
+    blocker = Request(rid=9, tokens=np.arange(6, dtype=np.int32),
+                      max_new=40)
+    item = _Queued("fn", blocker, t_submit=time.perf_counter())
+    cc.tiers[1].admit("fn", [item])
+    req = _req(0, max_new=10)
+    _resident(cc, req)
+    rec = cc.tick()                      # migration fires, cannot land
+    assert rec["migrations_fired"] == 1
+    cc.drain()
+    assert cc.metrics.counter("migrations_aborted") >= 1
+    assert cc.metrics.counter("migrations_completed") == 0
+    assert req.output is not None and req.output.shape == (10,)
+    # compare against an unmigrated solo run: still bit-identical
+    solo_cc = _two_tier(model, policy=0.0)
+    solo = _req(0, max_new=10)
+    solo_cc.submit("fn", solo)
+    solo_cc.tick()
+    assert list(req.output) == list(solo.output)
+    # resumed (and served) at the source tier
+    assert sum(r["tiers"]["edge"] for r in cc.log) == 1
+
+
+def test_cross_tick_landing_over_slow_link(model):
+    """State in flight over a slow link when the tick ends: the transit
+    survives the tick boundary and lands during a later tick."""
+    cfg, params = model
+    topo = Topology(
+        tiers=(TierSpec("edge", slots=2, max_len=64),
+               TierSpec("cloud", slots=4, max_len=64)),
+        links=(LinkSpec(rtt_s=0.6),), waterfall=False)
+    cc = Continuum.from_topology(topo, policy=_Migrate(100.0), seed=0,
+                                 max_steps_per_tick=1)
+    cc.deploy(FunctionSpec(name="fn", arch="stablelm-1.6b"), cfg, params)
+    req = _req(0, max_new=8)
+    _resident(cc, req)
+    # a second resident row keeps the step-capped tick from waiting out
+    # the link inside the tick (max_new=2 -> ineligible to migrate)
+    keeper = _req(1, max_new=2)
+    _resident(cc, keeper)
+    rec = cc.tick()
+    assert rec["migrations_fired"] == 1
+    assert cc.migrations_open == 1       # still in flight over the link
+    assert rec["inflight"] >= 1          # ... and counted as in flight
+    ticks = 1 + cc.drain()
+    assert ticks >= 2                    # landed on a later tick
+    assert cc.migrations_open == 0
+    assert cc.metrics.counter("migrations_completed") == 1
+    assert req.output is not None and req.output.shape == (8,)
+    assert keeper.output is not None
+
+
+# ---- migrate-vs-hedge interaction -------------------------------------------
+
+class _HedgeMigrate(StaticSplit):
+    """Every queued request hedges; new arrivals stay at the ingress;
+    R_t = 60 drives migration (>= threshold 50) without routing anything
+    cloud-ward."""
+
+    def __init__(self):
+        super().__init__(60.0)
+        self.migrate_threshold = 50.0
+
+    def tier_distribution(self, R_all, num_tiers):
+        d = np.zeros((R_all.shape[1], num_tiers), np.float32)
+        d[:, 0] = 100.0
+        return d
+
+    def hedge(self, key, ages_s, fn_ids, latencies, valid):
+        return np.ones(len(fn_ids), bool)
+
+
+def test_migrated_primary_keeps_hedge_pair(model):
+    """A migrated primary keeps its pair link: the race still resolves
+    exactly once, `hedges_fired == hedges_won + hedges_cancelled +
+    hedges_open` holds after every tick, and the request is served once."""
+    cc = _two_tier(model, policy=_HedgeMigrate(), max_steps_per_tick=2)
+    req = _req(0, max_new=10)
+    assert cc.submit("fn", req)
+    for _ in range(12):
+        cc.tick()
+        c = cc.metrics.counter
+        assert c("hedges_fired") == (c("hedges_won")
+                                     + c("hedges_cancelled")
+                                     + cc.hedges_open)
+        assert (cc.metrics.counter("migrations_fired")
+                == c("migrations_completed") + c("migrations_aborted")
+                + cc.migrations_open)
+        if cc.queued == 0 and cc.in_flight == 0:
+            break
+    assert cc.queued == 0 and cc.in_flight == 0
+    assert cc.metrics.counter("hedges_fired") == 1
+    assert cc.metrics.counter("migrations_fired") >= 1
+    assert req.output is not None and req.output.shape == (10,)
+    served = sum(sum(r["tiers"].values()) for r in cc.log)
+    assert served == 1                   # exactly one arm recorded
+    samples = sum(len(t.metrics.latency_values("fn")) for t in cc.tiers)
+    assert samples == 1
+
+
+def test_hedge_twins_never_migrate(model):
+    """Twins are duplicate work: they are evicted when the race settles,
+    not shipped over a link.  Only the primary may migrate."""
+    cc = _two_tier(model, policy=_HedgeMigrate(), max_steps_per_tick=2)
+    req = _req(0, max_new=10)
+    assert cc.submit("fn", req)
+    cc.tick()                            # primary @ edge, twin @ cloud
+    cc.tick()                            # migration may fire at the edge
+    fired = cc.metrics.counter("migrations_fired")
+    # the cloud (where the twin sits) is the last tier: no boundary fires
+    # from it; and the edge's only eligible victim is the primary
+    assert fired <= 1
+    cc.drain()
+    assert req.output is not None
+
+
+# ---- policy parsing ---------------------------------------------------------
+
+def test_policy_parse_auto_migrate():
+    pol = Policy.parse("auto+migrate")
+    assert isinstance(pol, MigratingOffload)
+    assert pol.spec == "auto+migrate"
+    assert pol.migrate_threshold == MigratingOffload.default_threshold
+    assert Policy.parse("auto").migrate_threshold is None
+    combo = Policy.parse("auto+net+migrate")
+    assert combo.migrate_threshold is not None
+    assert combo.spec == "auto+net+migrate"
+    assert combo.cfg.net_aware
+    hm = Policy.parse("auto+hedge+migrate")
+    assert hm.migrate_threshold is not None and hasattr(hm, "hedge")
+
+
+# ---- simulator parity -------------------------------------------------------
+
+_SIM = SimConfig(duration_s=150.0, low_rps=2.0, high_rps=16.0,
+                 ramp_start_s=20.0, ramp_end_s=70.0, seed=0)
+
+
+def test_sim_migration_counters_and_accounting():
+    """The simulator's matching in-service transfer: migrations fire
+    under overload, the counter identity holds, and migration egress
+    shows up in the per-link net series."""
+    m = ContinuumSimulator("matmult", "auto+migrate", _SIM).run()
+    assert m.migrations_fired > 0
+    assert (m.migrations_fired
+            == m.migrations_completed + m.migrations_aborted)
+    assert m.net_links_MBps[0].max() > 0.0
+    assert "migrations_fired" in m.summary()
+
+
+def test_sim_migration_preserves_auto_when_disabled():
+    """A migrate-capable run with the threshold never crossed is
+    bit-identical to plain auto (the bookkeeping is inert)."""
+    a = ContinuumSimulator("matmult", "auto", _SIM).run()
+    pol = MigratingOffload(migrate_threshold=1000.0)   # unreachable
+    b = ContinuumSimulator("matmult", pol, _SIM).run()
+    assert b.migrations_fired == 0
+    assert (a.successes, a.failures) == (b.successes, b.failures)
+    np.testing.assert_array_equal(a.offload_pct, b.offload_pct)
+    np.testing.assert_array_equal(a.net_MBps, b.net_MBps)
+
+
+def test_sim_migration_recovers_successes():
+    """The paper scenario, simulated: offloading resident work serves at
+    least as many requests as routing new arrivals only."""
+    a = ContinuumSimulator("matmult", "auto", _SIM).run()
+    m = ContinuumSimulator("matmult", "auto+migrate", _SIM).run()
+    assert m.successes >= a.successes
