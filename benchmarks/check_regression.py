@@ -1,7 +1,7 @@
 """Benchmark regression gate for CI.
 
-Runs a fresh ``serving_bench`` + ``controller_micro`` pass, then compares
-the CPU-stable metrics against the committed goldens in
+Runs a fresh ``serving_bench`` + ``controller_micro`` + ``bench_chaos``
+pass, then compares the CPU-stable metrics against the committed goldens in
 ``benchmarks/results/*.json``.  Absolute wall-clock numbers vary wildly
 across machines, so the gate checks *relative* metrics (speedup ratios:
 throughput-shaped, machine-independent) and structural invariants
@@ -52,6 +52,26 @@ STABLE_METRICS: List[Tuple[str, str, str]] = [
     ("serving_bench", "migration.migrate.served", "count"),
     ("serving_bench", "migration.migrate.migrations_completed", "count"),
     ("controller_micro", "route_speedup_B4096", "ratio"),
+    # chaos scenarios: conservation + migration identities must hold in
+    # every arm, the adaptive controller must serve strictly more than
+    # the static split at the same offered trace, and — where the win is
+    # charged (machine-independent) rather than wall-clock — its
+    # interactive p95 must be lower.  cloud_partition's p95 is not
+    # gated (both arms pay wall-clock recovery costs there); its bite
+    # is that in-flight migrations really aborted and nothing was lost.
+    ("bench_chaos", "flash_crowd.conserved", "flag"),
+    ("bench_chaos", "flash_crowd.migration_identity", "flag"),
+    ("bench_chaos", "flash_crowd.auto_more_served", "flag"),
+    ("bench_chaos", "flash_crowd.auto_better_p95", "flag"),
+    ("bench_chaos", "edge_brownout.conserved", "flag"),
+    ("bench_chaos", "edge_brownout.migration_identity", "flag"),
+    ("bench_chaos", "edge_brownout.auto_more_served", "flag"),
+    ("bench_chaos", "edge_brownout.auto_better_p95", "flag"),
+    ("bench_chaos", "edge_brownout.aborted_transits", "flag"),
+    ("bench_chaos", "cloud_partition.conserved", "flag"),
+    ("bench_chaos", "cloud_partition.migration_identity", "flag"),
+    ("bench_chaos", "cloud_partition.auto_more_served", "flag"),
+    ("bench_chaos", "cloud_partition.aborted_transits", "flag"),
 ]
 
 
@@ -129,6 +149,9 @@ def run_benches(out_dir: str, benches: List[str]) -> None:
     if "controller" in benches:
         from benchmarks import controller_micro
         controller_micro.main(out_dir)
+    if "chaos" in benches:
+        from benchmarks import bench_chaos
+        bench_chaos.main(out_dir)
 
 
 def main(argv: Optional[List[str]] = None) -> int:
@@ -140,8 +163,9 @@ def main(argv: Optional[List[str]] = None) -> int:
                     help="where the fresh bench JSONs are written")
     ap.add_argument("--fresh", default=None,
                     help="compare these results instead of --out")
-    ap.add_argument("--benches", nargs="*", default=["serving", "controller"],
-                    choices=["serving", "controller"])
+    ap.add_argument("--benches", nargs="*",
+                    default=["serving", "controller", "chaos"],
+                    choices=["serving", "controller", "chaos"])
     ap.add_argument("--threshold", type=float, default=0.25,
                     help="max fractional drop allowed on ratio metrics")
     ap.add_argument("--skip-run", action="store_true",

@@ -6,6 +6,8 @@ One bench per paper artifact + the roofline report:
   fig2         — Figure 2 time series (latency/CPU/memory/network CSVs)
   controller   — Eqs (1)-(4) microbenchmarks (jitted + sketch paths)
   serving      — live two-tier engine + policy + scheduler comparisons
+  chaos        — trace + fault-injection scenarios (flash crowd, edge
+                 brownout, cloud partition) on the live continuum
   roofline     — §Roofline table from the dry-run artifacts
 
 Pass bench names to run a subset: ``python -m benchmarks.run table2 roofline``.
@@ -27,10 +29,10 @@ import os
 import time
 
 RESULTS = os.path.join(os.path.dirname(__file__), "results")
-BENCHES = ("table2", "fig2", "controller", "serving", "roofline")
+BENCHES = ("table2", "fig2", "controller", "serving", "chaos", "roofline")
 #: benches that write a results/<name>.json artifact (the gate's inputs)
 JSON_ARTIFACTS = {"table2": "table2", "controller": "controller_micro",
-                  "serving": "serving_bench"}
+                  "serving": "serving_bench", "chaos": "bench_chaos"}
 
 
 def main(argv=None):
@@ -73,6 +75,12 @@ def main(argv=None):
         print("\n" + "=" * 72 + "\nServing bench (live engine)\n" + "=" * 72)
         from benchmarks import serving_bench
         serving_bench.main(results_dir)
+
+    if "chaos" in wanted:
+        print("\n" + "=" * 72 + "\nChaos bench (traces + fault injection)\n"
+              + "=" * 72)
+        from benchmarks import bench_chaos
+        bench_chaos.main(results_dir)
 
     if "roofline" in wanted:
         print("\n" + "=" * 72 + "\n§Roofline — dry-run derived terms\n" + "=" * 72)

@@ -33,6 +33,7 @@ from repro.platform import (Continuum, LinkSpec, Request, TierConfig,
                             TierSpec, Topology)
 from repro.serving.engine import Endpoint
 from repro.serving.tiers import _Queued
+from repro.workloads.trace import request_rounds
 
 
 def bench_engine(arch: str = "stablelm-1.6b", steps: int = 30):
@@ -50,19 +51,9 @@ def bench_engine(arch: str = "stablelm-1.6b", steps: int = 30):
             "tokens_per_s_per_slot": 1.0 / dt}
 
 
-def _workload(rounds: int, seed: int, max_new: int = 6):
-    """The shared request schedule: (round, tokens, max_new) triples.
-
-    ``max_new`` is large enough that decode dominates prefill, so the
-    scheduler comparison measures what continuous batching shares (the
-    ``decode_all`` stream), not just prefill admission cost."""
-    rng = np.random.default_rng(seed)
-    sched = []
-    for rnd in range(rounds):
-        for _ in range(2 if rnd < 3 else 8):
-            sched.append((rnd, rng.integers(0, 128, 6).astype(np.int32),
-                          max_new))
-    return sched
+# the shared request schedule lives in repro.workloads.trace now
+# (bit-identical to the private copy this file used to carry)
+_workload = request_rounds
 
 
 def _mk_continuum(policy_cfg: offload.OffloadConfig, seed: int,

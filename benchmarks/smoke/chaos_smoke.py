@@ -1,0 +1,60 @@
+"""Chaos smoke run (CI): a short trace-driven live run through a link
+brownout and an edge crash — requests must be conserved (served + failed
+== submitted), crashed-tier residents must be replayed rather than lost,
+and the migration identity must balance after drain.
+
+    PYTHONPATH=src python benchmarks/smoke/chaos_smoke.py
+"""
+
+import jax
+
+from repro import configs
+from repro.core.replication import FunctionSpec
+from repro.models import model_zoo
+from repro.platform import (Continuum, FaultEvent, FaultSchedule, LinkSpec,
+                            TierSpec, Topology, Trace, edge_brownout,
+                            merge_schedules)
+
+
+def main():
+    topo = Topology(
+        tiers=(TierSpec("edge", slots=2, max_len=64,
+                        queue_depth_per_slot=8),
+               TierSpec("cloud", slots=4, max_len=64)),
+        links=(LinkSpec(rtt_s=0.02, bandwidth_Bps=50e6),))
+    cfg = configs.get_smoke_config("stablelm-1.6b")
+    params = model_zoo.init(jax.random.PRNGKey(0), cfg)
+
+    trace = Trace.poisson(rps=4.0, duration_s=6.0, fn_names=("fn",),
+                          seed=3, prompt_len=6, max_new=4)
+    faults = merge_schedules(
+        edge_brownout(1.0, 3.0, link=0, bw_mult=0.1, rtt_mult=4.0),
+        FaultSchedule((FaultEvent(t=4.0, kind="crash_tier", target=0),
+                       FaultEvent(t=5.0, kind="restore_tier", target=0))))
+    cc = Continuum.from_topology(topo, policy="auto+migrate", seed=0,
+                                 trace=trace, faults=faults,
+                                 max_steps_per_tick=4)
+    cc.deploy(FunctionSpec(name="fn", arch="stablelm-1.6b"), cfg, params)
+    for rnd in range(8):
+        rec = cc.tick()
+        print(rnd, rec["tiers"], "backlog:", rec["backlog"])
+    cc.drain()
+
+    reqs = cc.trace_requests
+    served = sum(1 for r in reqs if r.output is not None)
+    failed = sum(1 for r in reqs if r.failed)
+    c = cc.metrics.counter
+    assert len(reqs) == len(trace)
+    assert served + failed == len(reqs)
+    assert all((r.output is not None) != r.failed for r in reqs)
+    assert cc.queued == 0 and cc.in_flight == 0 and cc.migrations_open == 0
+    assert c("faults_applied") == len(faults)
+    assert c("migrations_fired") == (c("migrations_completed")
+                                     + c("migrations_aborted"))
+    print(f"chaos smoke OK: served {served}/{len(reqs)}, "
+          f"replayed {int(c('replayed'))}, "
+          f"faults {int(c('faults_applied'))}")
+
+
+if __name__ == "__main__":
+    main()

@@ -12,7 +12,8 @@ Runs the MatMult workload (the paper's network-bottleneck case) under:
 
 import numpy as np
 
-from repro.platform import Continuum, SimConfig, Topology
+from repro.platform import (Continuum, SimConfig, Topology, Trace,
+                            edge_brownout, tier_outage, merge_schedules)
 
 # push the ramp high enough that the paper controller wants ~100% offload
 # while the 100 MB/s link can only carry part of it — the regime where the
@@ -63,3 +64,23 @@ for label, policy in (("auto (3-tier)", "auto"), ("static 50%", 50.0)):
     r = Continuum.simulate("matmult", policy, cfg, topology=topo)
     per = " ".join(f"{n}={c}" for n, c in r.tier_counts.items())
     print(f"{label:>16} {r.successes:>6} {r.failures:>5} {r.spilled:>6}  {per}")
+
+# ---- traces & chaos: replace the built-in Poisson ramp with a bursty
+# MMPP trace, and inject faults mid-run — a link brownout followed by an
+# edge outage.  Crashed-tier residents are replayed (never silently
+# lost), and the conservation identity successes + failures == submitted
+# holds through every fault.
+trace = Trace.bursty(base_rps=4.0, burst_rps=24.0, duration_s=300.0,
+                     mean_on_s=30.0, mean_off_s=40.0,
+                     fn_names=("matmult",), seed=7)
+faults = merge_schedules(
+    edge_brownout(t0=60.0, t1=120.0, link=0, bw_mult=0.1, rtt_mult=5.0),
+    tier_outage(t0=180.0, t1=220.0, tier=0))
+print("\nbursty trace + brownout + edge outage (same trace, both policies):")
+print(f"{'policy':>16} {'ok':>6} {'fail':>5} {'replayed':>8} {'faults':>6}")
+for label, policy in (("static 50%", 50.0), ("auto+migrate", "auto+migrate")):
+    faults.reset()
+    r = Continuum.simulate("matmult", policy, cfg, trace=trace, faults=faults)
+    assert r.successes + r.failures == r.submitted
+    print(f"{label:>16} {r.successes:>6} {r.failures:>5} "
+          f"{r.replayed:>8} {r.faults_applied:>6}")

@@ -20,7 +20,8 @@ import numpy as np
 from repro import configs
 from repro.core.replication import FunctionSpec
 from repro.models import model_zoo
-from repro.platform import (Continuum, LinkSpec, Request, TierSpec, Topology)
+from repro.platform import (Continuum, LinkSpec, Request, TierSpec, Topology,
+                            Trace, tier_outage)
 
 ARCHS = ("stablelm-1.6b", "rwkv6-7b")
 
@@ -87,3 +88,28 @@ print(f"mid-stream migration: "
       f"aborted back to source)")
 print("steady-state replication writes:", cc.replicator.writes,
       "(no feedback loop)")
+
+# ---- traces & chaos on the live runtime: the same Trace/FaultSchedule
+# the simulator takes drives the real engine.  The device tier crashes
+# mid-run and comes back: its in-flight work is replayed down-chain, the
+# restore re-registers every FunctionSpec through core.replication, and
+# nothing is silently lost.
+trace = Trace.poisson(rps=5.0, duration_s=5.0, fn_names=(ARCHS[0],),
+                      seed=1, prompt_len=8, max_new=3)
+cc2 = Continuum.from_topology(topo, policy="auto", seed=0, trace=trace,
+                              faults=tier_outage(t0=2.0, t1=4.0, tier=0),
+                              max_steps_per_tick=6)
+cfg0 = configs.get_smoke_config(ARCHS[0])
+cc2.deploy(FunctionSpec(name=ARCHS[0], arch=ARCHS[0]), cfg0,
+           model_zoo.init(jax.random.PRNGKey(hash(ARCHS[0]) % 2**31), cfg0))
+for _ in range(7):
+    cc2.tick()
+cc2.drain()
+reqs = cc2.trace_requests
+ok = sum(1 for r in reqs if r.output is not None)
+assert ok + sum(1 for r in reqs if r.failed) == len(reqs) == len(trace)
+print(f"\nchaos replay: device crashed t=2..4s mid-trace; served "
+      f"{ok}/{len(reqs)}, replayed "
+      f"{int(cc2.metrics.counter('replayed'))} off the crashed tier, "
+      f"replication re-registered {int(cc2.replicators[0].writes)} specs "
+      f"on restore")

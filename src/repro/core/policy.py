@@ -251,6 +251,27 @@ class AutoOffload(Policy):
                                 np.asarray(demand_rps, np.float32))
         return state, np.asarray(R, np.float32)
 
+    def set_link_capacity(self, link_bytes_per_s: float) -> bool:
+        """Re-cap a net-aware controller against a changed link (fault
+        injection: brownout/partition shrinks the capacity, recovery
+        restores it).
+
+        The jitted update closes over ``self.cfg`` at trace time, so
+        mutating the dataclass alone would be silently ignored — the
+        closure must be rebuilt.  Controller *state* (the boundary's
+        OffloadState, held by the ControlLoop) is untouched: only the
+        capacity the next Eq-(4) cap divides by changes.  No-op (False)
+        for non-net-aware configs, whose updates never read the link.
+        """
+        if not self.cfg.net_aware:
+            return False
+        self.cfg = dataclasses.replace(
+            self.cfg, link_bytes_per_s=float(link_bytes_per_s))
+        self._update = jax.jit(
+            lambda s, lat, v, rps: offload.offload_update(
+                s, lat, self.cfg, valid=v, demand_rps=rps))
+        return True
+
 
 class NetAwareOffload(AutoOffload):
     """Beyond-paper §4.2 extension: cap the offloaded fraction by what the

@@ -28,7 +28,7 @@ import dataclasses
 import heapq
 import itertools
 from collections import deque
-from typing import Deque, Dict, List, Optional, Tuple
+from typing import Deque, Dict, List, Optional, Tuple, Union
 
 import numpy as np
 
@@ -37,6 +37,8 @@ from repro.core.metrics import MetricsRegistry
 from repro.core.policy import AutoOffload, ControlLoop, Policy, PolicySpec
 from repro.core.topology import LinkSpec, TierSpec, Topology
 from repro.core.workloads import PROFILES, WorkloadProfile
+from repro.workloads.faults import FaultSchedule, LinkState
+from repro.workloads.trace import ArrivalProcess, RampedPoisson, Trace
 
 
 @dataclasses.dataclass(frozen=True)
@@ -106,6 +108,12 @@ class SimResult:
     migrations_fired: int = 0
     migrations_completed: int = 0
     migrations_aborted: int = 0
+    # fault injection: requests submitted overall (for the conservation
+    # identity successes + failures == submitted), requests replayed off a
+    # crashed tier, fault events applied
+    submitted: int = 0
+    replayed: int = 0
+    faults_applied: int = 0
 
     def summary(self) -> Dict[str, float]:
         out = {
@@ -126,12 +134,15 @@ class SimResult:
             out["migrations_fired"] = self.migrations_fired
             out["migrations_completed"] = self.migrations_completed
             out["migrations_aborted"] = self.migrations_aborted
+        if self.faults_applied:
+            out["faults_applied"] = self.faults_applied
+            out["replayed"] = self.replayed
         return out
 
 
 # Event kinds, ordered for deterministic tie-breaking (ties never reach the
 # kind field — the monotone sequence number breaks them first).
-_ARRIVAL, _DONE, _CONTROL, _METRIC, _MIGRATE = range(5)
+_ARRIVAL, _DONE, _CONTROL, _METRIC, _MIGRATE, _FAULT = range(6)
 
 
 def _service_sample(rng: np.random.Generator, mean: float, cv: float) -> float:
@@ -185,13 +196,36 @@ class ContinuumSimulator:
     def __init__(self, workload: str, policy: PolicySpec,
                  cfg: SimConfig = SimConfig(),
                  offload_cfg: Optional[offload.OffloadConfig] = None,
-                 topology: Optional[Topology] = None):
+                 topology: Optional[Topology] = None,
+                 trace: Optional[Union[ArrivalProcess, Trace]] = None,
+                 faults: Optional[FaultSchedule] = None):
         if workload not in PROFILES:
             raise ValueError(f"unknown workload {workload!r}")
         self.profile: WorkloadProfile = PROFILES[workload]
         self.cfg = cfg
         self.policy = policy
         self.topology = topology or cfg.default_topology()
+        # Arrivals come from repro.workloads in either form: an
+        # inline-draw ArrivalProcess (the default is the historical ramp,
+        # bit-identical draws) or a materialized Trace (per-request
+        # times/payloads replayed verbatim; the simulator is a
+        # single-function apparatus, so the trace's fn column only sets
+        # per-request payload bytes here).
+        self.trace: Optional[Trace] = None
+        if trace is None:
+            self.arrivals: Optional[ArrivalProcess] = RampedPoisson(
+                cfg.low_rps, cfg.high_rps, cfg.ramp_start_s, cfg.ramp_end_s)
+        elif isinstance(trace, Trace):
+            self.arrivals = None
+            self.trace = trace
+        elif isinstance(trace, ArrivalProcess):
+            self.arrivals = trace
+        else:
+            raise TypeError(f"trace must be an ArrivalProcess or Trace, "
+                            f"got {type(trace).__name__}")
+        self.faults = faults
+        if faults is not None:
+            faults.validate(self.topology.num_tiers)
         self.rng = np.random.default_rng(cfg.seed)
         # One latency registry per non-terminal tier: registry b feeds
         # controller boundary b.  (The deepest tier's latencies are not fed
@@ -227,13 +261,10 @@ class ContinuumSimulator:
 
     # ------------------------------------------------------------------
     def _rate(self, t: float) -> float:
-        c = self.cfg
-        if t < c.ramp_start_s:
-            return c.low_rps
-        if t >= c.ramp_end_s:
-            return c.high_rps
-        frac = (t - c.ramp_start_s) / (c.ramp_end_s - c.ramp_start_s)
-        return c.low_rps + frac * (c.high_rps - c.low_rps)
+        """Inline-draw arrival rate (consolidated in repro.workloads:
+        the default RampedPoisson computes the historical ramp with the
+        identical float expressions, so draws are bit-identical)."""
+        return self.arrivals.rate(t)
 
     def _choose_tier(self, u: float, R_cur: np.ndarray) -> int:
         """Pick a tier from one uniform draw and the per-boundary R_t.
@@ -266,6 +297,12 @@ class ContinuumSimulator:
         # --- state ----------------------------------------------------
         tiers = [_SimTier(spec, _tier_service_mean(prof, topo, i))
                  for i, spec in enumerate(topo.tiers)]
+        # Fault overlay: links are crossed through their mutable LinkState
+        # (identity multipliers while healthy — the float math is
+        # unchanged), and crashed tiers forward traffic but cannot serve.
+        link_state = [LinkState(l) for l in topo.links]
+        tier_up = [True] * N
+        submitted = replayed = faults_applied = 0
         link_free_at = [0.0] * len(topo.links)
         link_bytes = [0.0] * len(topo.links)
         # Per-boundary R_t for the tier chooser: exactly N-1 rows (empty
@@ -301,9 +338,20 @@ class ContinuumSimulator:
             last_busy_t = t
 
         # --- seed events ------------------------------------------------
-        push(self.rng.exponential(1.0 / self._rate(0.0)), _ARRIVAL)
+        if self.trace is not None:
+            # materialized trace: event i chains event i+1 at trace.t[i+1]
+            if len(self.trace):
+                push(float(self.trace.t[0]), _ARRIVAL, (0,))
+            duration = self.trace.duration_s
+        else:
+            push(self.rng.exponential(1.0 / self._rate(0.0)), _ARRIVAL)
+            duration = cfg.duration_s
         push(cfg.control_interval_s, _CONTROL)
         push(cfg.metric_interval_s, _METRIC)
+        if self.faults is not None:
+            self.faults.reset()
+            for ev in self.faults:
+                push(ev.t, _FAULT, (ev,))
 
         def start_service(j: int, ready: float, arr: float):
             tier = tiers[j]
@@ -327,14 +375,40 @@ class ContinuumSimulator:
             svc_live[tok] = (j, arr, t + remaining)
             push(t + remaining, _DONE, (j, arr, tok))
 
-        def cross_link(l: int, ready: float) -> float:
+        def cross_link(l: int, ready: float,
+                       nbytes: Optional[float] = None) -> float:
             """Serialize one payload over link l (FIFO pipe model:
-            saturation shows up as link_free_at running ahead of time)."""
-            xfer = prof.payload_bytes / topo.links[l].bandwidth_Bps
+            saturation shows up as link_free_at running ahead of time).
+            The fault overlay's degraded bandwidth/RTT apply here; a
+            materialized trace's per-request payload overrides the
+            profile's for the arrival hop walk."""
+            nb = prof.payload_bytes if nbytes is None else nbytes
+            xfer = nb / link_state[l].bandwidth_Bps
             start = max(ready, link_free_at[l])
             link_free_at[l] = start + xfer
-            link_bytes[l] += prof.payload_bytes
-            return link_free_at[l] + topo.links[l].rtt_s
+            link_bytes[l] += nb
+            return link_free_at[l] + link_state[l].rtt_s
+
+        def route_target(j: int) -> Optional[int]:
+            """Resolve an assigned tier against the fault state: crashed
+            tiers forward but cannot serve, a partitioned link cuts off
+            everything past it.  Prefer the shallowest serviceable tier
+            at or past the assignment, else the deepest one before it;
+            None when nothing can serve (the request 503s)."""
+            if self.faults is None:
+                return j
+            reach = 0
+            for l in range(N - 1):
+                if not link_state[l].up:
+                    break
+                reach = l + 1
+            up = [i for i in range(reach + 1) if tier_up[i]]
+            if not up:
+                return None
+            for i in up:
+                if i >= j:
+                    return i
+            return up[-1]
 
         def backfill(j: int, t: float):
             """A slot freed (completion or migration): admit the next
@@ -367,6 +441,8 @@ class ContinuumSimulator:
                 thr = pol.migrate_threshold
                 if thr is None or float(R_cur[b]) < thr:
                     continue
+                if not (link_state[b].up and tier_up[b + 1]):
+                    continue       # no migrating into a partition/crash
                 in_svc = [(tok, rec) for tok, rec in svc_live.items()
                           if rec[0] == b]
                 n_mig = min(len(in_svc),
@@ -396,11 +472,11 @@ class ContinuumSimulator:
             nonlocal failures, spilled
             tier = tiers[j]
             cap = tier.queue_cap
-            if tier.busy < tier.spec.slots:
+            if tier_up[j] and tier.busy < tier.spec.slots:
                 start_service(j, ready, arr)
-            elif cap is None or len(tier.queue) < cap:
+            elif tier_up[j] and (cap is None or len(tier.queue) < cap):
                 tier.queue.append((arr,))
-            elif topo.waterfall and j < last:
+            elif topo.waterfall and j < last and link_state[j].up:
                 spilled += 1
                 if j + 1 < n_bounds:
                     arrivals_in_interval[j + 1] += 1
@@ -414,18 +490,36 @@ class ContinuumSimulator:
 
         while events:
             t, _, kind, payload = heapq.heappop(events)
-            if t > cfg.duration_s:
+            if t > duration:
                 break
 
             if kind == _ARRIVAL:
+                submitted += 1
                 j = self._choose_tier(self.rng.uniform(), R_cur)
-                for b in range(min(j + 1, n_bounds)):
-                    arrivals_in_interval[b] += 1
-                ready = t
-                for l in range(j):
-                    ready = cross_link(l, ready)
-                admit(j, ready, t)
-                push(t + self.rng.exponential(1.0 / self._rate(t)), _ARRIVAL)
+                arr_bytes = (float(self.trace.payload_bytes[payload[0]])
+                             if payload else None)
+                jt = route_target(j)
+                if jt is None:
+                    # every serviceable tier is unreachable: fast 503,
+                    # visible to Eq (1) like any queue-proxy reject
+                    failures += 1
+                    self.tier_metrics[0].record_latency(
+                        prof.name, cfg.reject_latency_s)
+                else:
+                    j = jt
+                    for b in range(min(j + 1, n_bounds)):
+                        arrivals_in_interval[b] += 1
+                    ready = t
+                    for l in range(j):
+                        ready = cross_link(l, ready, arr_bytes)
+                    admit(j, ready, t)
+                if payload:            # materialized trace: chain next row
+                    i = payload[0]
+                    if i + 1 < len(self.trace):
+                        push(float(self.trace.t[i + 1]), _ARRIVAL, (i + 1,))
+                else:
+                    push(t + self.rng.exponential(1.0 / self._rate(t)),
+                         _ARRIVAL)
 
             elif kind == _DONE:
                 j, arr, tok = payload
@@ -476,14 +570,28 @@ class ContinuumSimulator:
                 # A migrated request's state landed at its destination.
                 dst, arr, remaining, src = payload
                 mig_transit -= 1
-                if tiers[dst].busy < tiers[dst].spec.slots:
+                if not (link_state[dst - 1].up and tier_up[dst]):
+                    # partitioned mid-transfer (or target crashed): the
+                    # state never arrives — ABORT back to the source
+                    if tier_up[src] and tiers[src].busy < tiers[src].spec.slots:
+                        mig_aborted += 1
+                        resume_service(src, t, arr, remaining)
+                    elif tier_up[src]:
+                        # source momentarily full: retry the abort
+                        mig_transit += 1
+                        push(t + cfg.control_interval_s, _MIGRATE, payload)
+                    else:
+                        # both ends gone: accounted, never silent
+                        mig_aborted += 1
+                        failures += 1
+                elif tiers[dst].busy < tiers[dst].spec.slots:
                     # remaining *work* is invariant; the time to finish it
                     # scales with the destination's service speed
                     mig_completed += 1
                     resume_service(dst, t, arr,
                                    remaining * tiers[dst].service_mean
                                    / tiers[src].service_mean)
-                elif tiers[src].busy < tiers[src].spec.slots:
+                elif tier_up[src] and tiers[src].busy < tiers[src].spec.slots:
                     # destination full: ABORT — resume at the source
                     mig_aborted += 1
                     resume_service(src, t, arr, remaining)
@@ -495,6 +603,49 @@ class ContinuumSimulator:
                     # completion, like any late finisher)
                     mig_transit += 1
                     push(t + cfg.control_interval_s, _MIGRATE, payload)
+
+            elif kind == _FAULT:
+                (ev,) = payload
+                faults_applied += 1
+                if ev.kind in ("degrade_link", "partition_link",
+                               "restore_link"):
+                    ls = link_state[ev.target]
+                    ls.apply(ev)
+                    # a net-aware boundary re-caps against the new link
+                    pol = self.control.policies[
+                        min(ev.target, len(self.control.policies) - 1)]
+                    if isinstance(pol, AutoOffload):
+                        pol.set_link_capacity(ls.effective_capacity())
+                elif ev.kind == "crash_tier":
+                    i = ev.target
+                    tier_up[i] = False
+                    if i == 0:
+                        note_busy(t)
+                    # every resident service and queued request is lost
+                    # with the tier's state — collect, then replay each
+                    # at a reachable serviceable tier (fresh service
+                    # sample: the work restarts) or count it failed.
+                    resident = [(tok, rec) for tok, rec in svc_live.items()
+                                if rec[0] == i]
+                    lost = []
+                    for tok, (_, arr, _t_done) in resident:
+                        del svc_live[tok]   # its queued _DONE is now stale
+                        lost.append(arr)
+                    tiers[i].busy = 0
+                    lost += [qarr for (qarr,) in tiers[i].queue]
+                    tiers[i].queue.clear()
+                    for arr in lost:
+                        alt = route_target(i)
+                        if alt is None:
+                            failures += 1
+                            continue
+                        replayed += 1
+                        ready = t
+                        for l in range(min(i, alt), max(i, alt)):
+                            ready = cross_link(l, ready)
+                        admit(alt, ready, arr)
+                else:          # restore_tier: the pool comes back idle
+                    tier_up[ev.target] = True
 
             elif kind == _METRIC:
                 note_busy(t)
@@ -515,9 +666,12 @@ class ContinuumSimulator:
                 push(t + cfg.metric_interval_s, _METRIC)
 
         # Drain: everything still queued, in service, or in a migration
-        # transfer at the end never completed.
+        # transfer at the end never completed.  A transit cut off by the
+        # horizon is an aborted migration (terminally, fired ==
+        # completed + aborted — nothing stays "open" past the run).
         failures += sum(len(tr.queue) + tr.busy for tr in tiers)
         failures += mig_transit
+        mig_aborted += mig_transit
 
         return SimResult(
             policy=str(self.policy), workload=prof.name,
@@ -530,7 +684,9 @@ class ContinuumSimulator:
             spilled=spilled,
             migrations_fired=mig_fired,
             migrations_completed=mig_completed,
-            migrations_aborted=mig_aborted)
+            migrations_aborted=mig_aborted,
+            submitted=submitted, replayed=replayed,
+            faults_applied=faults_applied)
 
 
 def run_policy_sweep(workload: str,

@@ -31,6 +31,14 @@ point the launchers, examples and benchmarks use:
                               topology=Topology.device_edge_cloud())
     table = Continuum.sweep("matmult", policies=(0.0, 50.0, "auto"))
 
+    # traces & chaos (repro.workloads): both deployments accept the same
+    # workload trace and timed fault schedule
+    tr = Trace.bursty(base_rps=2.0, burst_rps=24.0, duration_s=120.0)
+    res = Continuum.simulate("io", "auto+migrate", trace=tr,
+                             faults=edge_brownout(30.0, 60.0))
+    cc = Continuum.from_topology(topo, policy="auto+migrate", trace=tr,
+                                 faults=edge_brownout(30.0, 60.0))
+
 Policy shorthands accepted everywhere: a number in [0, 100] (static
 split), ``"auto"`` (paper Eqs (1)-(4)), ``"auto+net"`` (link-capacity
 cap), ``"auto+hedge"`` (p99 straggler hedging), or any
@@ -52,12 +60,18 @@ from repro.core.simulator import ContinuumSimulator, SimConfig, SimResult
 from repro.core.topology import LinkSpec, TierSpec, Topology
 from repro.serving.engine import Request
 from repro.serving.tiers import EdgeCloudContinuum, Gateway, TierConfig
+from repro.workloads.faults import (FaultEvent, FaultSchedule,
+                                    cloud_partition, edge_brownout,
+                                    merge_schedules, tier_outage)
+from repro.workloads.trace import Trace
 
 __all__ = [
     "Continuum", "TierConfig", "TierSpec", "LinkSpec", "Topology",
     "Gateway", "SimConfig", "SimResult", "Request",
     "Policy", "StaticSplit", "AutoOffload", "NetAwareOffload",
     "HedgedOffload", "MigratingOffload", "ControlLoop",
+    "Trace", "FaultEvent", "FaultSchedule",
+    "edge_brownout", "cloud_partition", "tier_outage", "merge_schedules",
 ]
 
 
@@ -94,21 +108,30 @@ class Continuum(EdgeCloudContinuum):
     def simulate(cls, workload: str, policy: PolicySpec,
                  cfg: Optional[SimConfig] = None,
                  offload_cfg: Optional[offload.OffloadConfig] = None,
-                 topology: Optional[Topology] = None
+                 topology: Optional[Topology] = None,
+                 trace=None, faults: Optional[FaultSchedule] = None
                  ) -> SimResult:
         """One simulator run of ``workload`` under ``policy`` (over the
-        paper's 2-tier apparatus, or any explicit ``topology``)."""
+        paper's 2-tier apparatus, or any explicit ``topology``); an
+        optional :class:`~repro.workloads.trace.Trace` replaces the
+        built-in ramped-Poisson arrivals and an optional
+        :class:`~repro.workloads.faults.FaultSchedule` injects link/tier
+        faults mid-run."""
         return ContinuumSimulator(workload, policy, cfg or SimConfig(),
                                   offload_cfg=offload_cfg,
-                                  topology=topology).run()
+                                  topology=topology,
+                                  trace=trace, faults=faults).run()
 
     @classmethod
     def sweep(cls, workload: str,
               policies: Sequence[PolicySpec] = (0.0, 25.0, 50.0, 75.0,
                                                 100.0, "auto"),
               cfg: Optional[SimConfig] = None,
-              topology: Optional[Topology] = None) -> Dict[str, SimResult]:
+              topology: Optional[Topology] = None,
+              trace=None, faults: Optional[FaultSchedule] = None
+              ) -> Dict[str, SimResult]:
         """The paper's Table 2 row for one workload."""
         cfg = cfg or SimConfig()
-        return {str(p): cls.simulate(workload, p, cfg, topology=topology)
+        return {str(p): cls.simulate(workload, p, cfg, topology=topology,
+                                     trace=trace, faults=faults)
                 for p in policies}

@@ -33,6 +33,9 @@ class Request:
     output: Optional[np.ndarray] = None
     t_first: float = 0.0
     t_done: float = 0.0
+    # charged end-to-end latency as the platform accounts it (includes
+    # backdated link-crossing charges the wall-clock stamps miss)
+    latency_s: Optional[float] = None
     # set by the runtime when a bounded gateway rejects/drops the request
     # (the live 503) — ``output`` will never be filled
     failed: bool = False

@@ -82,12 +82,15 @@ import numpy as np
 from repro.core import offload
 from repro.core.autoscaler import Autoscaler
 from repro.core.metrics import MetricsRegistry
-from repro.core.policy import ControlLoop, Policy, PolicySpec
+from repro.core.policy import AutoOffload, ControlLoop, Policy, PolicySpec
 from repro.core.replication import (AutoscalingPolicy, FunctionSpec,
                                     ReplicationController)
 from repro.core.topology import TierSpec, Topology
 from repro.models.common import ModelConfig
 from repro.serving.engine import Endpoint, Request
+from repro.workloads.faults import (LINK_KINDS, FaultEvent, FaultSchedule,
+                                    LinkState)
+from repro.workloads.trace import Trace
 
 
 @dataclasses.dataclass
@@ -375,7 +378,9 @@ class Tier:
         req = rec.item.req
         req.output = np.asarray(rec.toks, np.int32)
         req.t_done = rec.done_at
-        return rec.done_at - rec.item.t_submit + self.cfg.extra_latency_s
+        req.latency_s = (rec.done_at - rec.item.t_submit
+                         + self.cfg.extra_latency_s)
+        return req.latency_s
 
     # -- serving -----------------------------------------------------------
     def serve_batch(self, fn_name: str,
@@ -442,6 +447,7 @@ class Tier:
                 self.metrics.record_latency(fn_name, lat)
             req.output = np.asarray(outs[slot], np.int32)
             req.t_done = done_at[slot]
+            req.latency_s = lat
             ep.release(slot)
             results.append((req.output, lat))
         return results
@@ -469,7 +475,10 @@ class EdgeCloudContinuum:
                  reject_latency_s: float = 0.005,
                  scheduler: str = "continuous",
                  max_steps_per_tick: Optional[int] = None,
-                 req_bytes: Optional[float] = None):
+                 req_bytes: Optional[float] = None,
+                 trace: Optional[Trace] = None,
+                 faults: Optional[FaultSchedule] = None,
+                 trace_vocab: int = 128):
         if scheduler not in ("continuous", "wave"):
             raise ValueError(
                 f"scheduler must be 'continuous' or 'wave', got {scheduler!r}")
@@ -507,8 +516,16 @@ class EdgeCloudContinuum:
         # Fast rejections are part of the latency distribution Eq (1)
         # scrapes (queue-proxy 503 semantics, same as the simulator).
         self.reject_latency_s = reject_latency_s
-        self.replicator = ReplicationController()
+        # One reconciler per shallower tier: each edge cluster mirrors the
+        # cloud specs independently, so a crashed tier's view can be wiped
+        # and rebuilt (scale-from-zero re-registration) without touching
+        # its siblings.  ``replicator`` keeps the historical single-edge
+        # attribute as a view of the first one.
+        self.replicators: List[ReplicationController] = [
+            ReplicationController()
+            for _ in range(max(len(self.tiers) - 1, 1))]
         self.cloud_specs: Dict[str, FunctionSpec] = {}
+        self._artifacts: Dict[str, Tuple[ModelConfig, object]] = {}
         self.fn_names: List[str] = []
         self._fn_ids: Dict[str, int] = {}
         self.control: Optional[ControlLoop] = None
@@ -547,11 +564,37 @@ class EdgeCloudContinuum:
         self._clock = 0.0          # logical control-plane time (scrapes)
         self._tick_no = 0
         self._rejected_seen = 0    # for per-tick deltas in tick() records
+        # Fault overlay (repro.workloads.faults): links are crossed
+        # through their mutable LinkState (identity multipliers while
+        # healthy) and crashed tiers forward traffic but cannot serve.
+        # The schedule is applied against the logical clock at the top of
+        # each tick; apply_fault() is also public so tests can drive the
+        # live runtime and the simulator through identical fault events.
+        self.link_state: List[LinkState] = [LinkState(l)
+                                            for l in topology.links]
+        self.tier_up: List[bool] = [True] * len(self.tiers)
+        self.faults = faults
+        if faults is not None:
+            faults.validate(len(self.tiers))
+            faults.reset()
+        # Trace-driven arrivals (repro.workloads.trace): rows are
+        # submitted at the top of the tick covering their arrival time,
+        # with prompt tokens drawn from a dedicated deterministic RNG.
+        self.trace = trace
+        self.trace_vocab = trace_vocab
+        self.trace_requests: List[Request] = []
+        self._trace_pos = 0
+        self._trace_rng = np.random.default_rng(seed)
 
     # Ingress / deepest tier aliases (the historical two-tier attributes).
     @property
     def edge(self) -> Tier:
         return self.tiers[0]
+
+    @property
+    def replicator(self) -> ReplicationController:
+        """The ingress tier's reconciler (historical single-edge view)."""
+        return self.replicators[0]
 
     @property
     def cloud(self) -> Tier:
@@ -595,9 +638,10 @@ class EdgeCloudContinuum:
         every shallower tier of the chain."""
         self.cloud.deploy(spec.name, model_cfg, params, spec.autoscaling)
         self.cloud_specs[spec.name] = spec
-        changed = self.replicator.reconcile(self.cloud_specs)
-        if changed.get(spec.name, True):
-            for tier in self.tiers[:-1]:
+        self._artifacts[spec.name] = (model_cfg, params)
+        for i, tier in enumerate(self.tiers[:-1]):
+            changed = self.replicators[i].reconcile(self.cloud_specs)
+            if changed.get(spec.name, True):
                 tier.deploy(spec.name, model_cfg, params, spec.autoscaling)
         if spec.name not in self.fn_names:
             self._fn_ids[spec.name] = len(self.fn_names)
@@ -651,11 +695,148 @@ class EdgeCloudContinuum:
         backlog age include time in flight, as in the simulator) and count
         the boundary crossing for per-boundary demand."""
         if l < len(self.topology.links):
-            item.t_submit -= self.topology.links[l].latency_s(
+            item.t_submit -= self.link_state[l].latency_s(
                 item.req.tokens.nbytes)
             self.link_bytes[l] += item.req.tokens.nbytes
         if not item.hedge:
             self._count_crossing(l + 1, item.fn)
+
+    # -- fault injection (repro.workloads.faults) -----------------------------
+
+    def _route_target(self, j: int) -> Optional[int]:
+        """Resolve an assigned tier against the fault state: crashed
+        tiers forward but cannot serve, a partitioned link cuts off
+        everything past it.  Prefer the shallowest serviceable tier at or
+        past the assignment, else the deepest one before it; None when
+        nothing can serve (the request 503s)."""
+        if self.faults is None and all(self.tier_up):
+            return j
+        reach = 0
+        for l in range(len(self.tiers) - 1):
+            if not self.link_state[l].up:
+                break
+            reach = l + 1
+        up = [i for i in range(reach + 1) if self.tier_up[i]]
+        if not up:
+            return None
+        for i in up:
+            if i >= j:
+                return i
+        return up[-1]
+
+    def apply_fault(self, ev: FaultEvent) -> None:
+        """Apply one fault event NOW (also driven by the ``faults=``
+        schedule at the top of each tick).  Public so tests can push the
+        simulator and the live runtime through identical fault scripts."""
+        self.metrics.inc("faults_applied")
+        if ev.kind in LINK_KINDS:
+            ls = self.link_state[ev.target]
+            ls.apply(ev)
+            # a net-aware boundary re-caps against the changed link
+            if self.control is not None:
+                pol = self.control.policies[
+                    min(ev.target, len(self.control.policies) - 1)]
+                if isinstance(pol, AutoOffload):
+                    pol.set_link_capacity(ls.effective_capacity())
+        elif ev.kind == "crash_tier":
+            self._crash_tier(ev.target)
+        else:
+            self._restore_tier(ev.target)
+
+    def _replay(self, item: _Queued, away_from: int) -> None:
+        """Re-route one request lost to a crash/partition: back into a
+        reachable serviceable gateway (original submit stamp — the lost
+        work stays on its latency clock), or failed when nothing can
+        serve.  Nothing is ever silently dropped."""
+        self.metrics.inc("replayed")
+        tgt = self._route_target(away_from)
+        if tgt is None or not self.gateways[tgt].push(item, force=True):
+            item.req.failed = True
+            self._reject(0, item.fn)
+
+    def _crash_tier(self, i: int) -> None:
+        """Tier ``i`` goes down: slots, in-flight rows, backlog, and the
+        tier's replicated specs are lost.  Every resident primary replays
+        at a reachable tier; hedge arms resolve so the conservation and
+        hedge identities hold (a lost twin concedes to its primary, a
+        primary whose twin already won adopts the twin's result)."""
+        tier = self.tiers[i]
+        self.tier_up[i] = False
+        lost: List[_Queued] = self.gateways[i].pop_all()
+        for fn, fl in tier.inflight.items():
+            for rec in fl.values():
+                item = rec.item
+                pair = item.pair
+                if item.hedge:
+                    # a lost twin concedes: the primary serves normally
+                    if pair.winner is None:
+                        pair.winner = "primary"
+                        self.metrics.inc("hedges_cancelled")
+                    continue
+                if pair is not None and pair.winner == "twin":
+                    self._adopt(item, pair)      # already served by twin
+                    continue
+                lost.append(item)
+        # the crashed pool is gone: endpoints, autoscalers, in-flight
+        # rows, and (for a shallower tier) the replicated edge view —
+        # restore rebuilds all of it through the reconciler
+        tier.endpoints = {}
+        tier.autoscalers = {}
+        tier.inflight = {}
+        if i < len(self.tiers) - 1:
+            self.replicators[i] = ReplicationController()
+        for item in lost:
+            self._replay(item, i)
+
+    def _restore_tier(self, i: int) -> None:
+        """Tier ``i`` comes back empty.  A shallower tier re-registers
+        its functions through the replication path — fresh reconciler,
+        every spec reports changed, redeploy from the stored artifacts —
+        and the fresh autoscalers start at ``min_scale`` (scale-from-zero
+        when the policy allows it).  The deepest tier redeploys directly
+        (it *is* the spec source)."""
+        self.tier_up[i] = True
+        if i < len(self.tiers) - 1:
+            changed = self.replicators[i].reconcile(self.cloud_specs)
+        else:
+            changed = {name: True for name in self.cloud_specs}
+        for name, spec in self.cloud_specs.items():
+            if changed.get(name, True):
+                model_cfg, params = self._artifacts[name]
+                self.tiers[i].deploy(name, model_cfg, params,
+                                     spec.autoscaling)
+
+    # -- trace-driven arrivals (repro.workloads.trace) ------------------------
+
+    def _ingest_trace(self) -> int:
+        """Submit every trace row arriving within the interval this tick
+        covers.  Rows name functions by the trace's ``fn_names``; names
+        not deployed here fall back to deployment order by index."""
+        if self.trace is None:
+            return 0
+        horizon = self._clock + self.control_interval_s
+        n = 0
+        while (self._trace_pos < len(self.trace)
+               and float(self.trace.t[self._trace_pos]) < horizon):
+            i = self._trace_pos
+            self._trace_pos += 1
+            name = self.trace.fn_names[int(self.trace.fn[i])]
+            if name not in self._fn_ids:
+                if not self.fn_names:
+                    raise RuntimeError(
+                        "trace ingestion before any function is deployed")
+                name = self.fn_names[int(self.trace.fn[i])
+                                     % len(self.fn_names)]
+            req = Request(
+                rid=len(self.trace_requests),
+                tokens=self._trace_rng.integers(
+                    0, self.trace_vocab,
+                    max(int(self.trace.prompt_len[i]), 1)).astype(np.int32),
+                max_new=max(int(self.trace.max_new[i]), 1))
+            self.trace_requests.append(req)
+            self.submit(name, req)
+            n += 1
+        return n
 
     def controller_update(self) -> np.ndarray:
         """One scrape-and-update cycle through the shared ControlLoop:
@@ -696,6 +877,14 @@ class EdgeCloudContinuum:
         siblings), and admits queued requests into the freed slots the
         same step.  ``scheduler="wave"`` keeps the legacy
         run-to-completion wave drain as the before/after baseline."""
+        # Chaos first: fault events due on the logical clock reshape the
+        # continuum before anything routes, then trace rows arriving in
+        # this tick's interval enter the ingress gateway (their demand is
+        # part of this very scrape).
+        if self.faults is not None:
+            for ev in self.faults.due(self._clock):
+                self.apply_fault(ev)
+        self._ingest_trace()
         R = self.controller_update()
         self._clock += self.control_interval_s
         self._tick_no += 1
@@ -726,32 +915,39 @@ class EdgeCloudContinuum:
             self.key, hk = jax.random.split(self.key)
             hedge = self.control.hedge(hk, ages, fn_ids, lat, valid)
             for it, tj, hedge_it in zip(items, tier_idx, hedge):
-                j = int(tj)
+                j = self._route_target(int(tj))
+                if j is None:
+                    # no serviceable tier is reachable: the live 503
+                    it.req.failed = True
+                    self._reject(0, it.fn)
+                    continue
                 if bool(hedge_it) and it.pair is None:
                     # backup request on another tier (straggler hedge);
                     # only the winning arm's latency feeds the windows.
                     # An already-paired leftover is never re-hedged.
                     # The twin is stamped before the primary crosses any
                     # link, so it does not inherit the primary's hop cost.
-                    bj = 0 if j == last else last
-                    twin = Request(rid=it.req.rid, tokens=it.req.tokens,
-                                   max_new=it.req.max_new,
-                                   arrival_s=it.req.arrival_s)
-                    pair = _HedgePair(fn=it.fn)
-                    it.pair = pair
-                    twin_item = _Queued(it.fn, twin, it.t_submit,
-                                        tick_no=self._tick_no,
-                                        hedge=True, pair=pair)
-                    # the twin travels from the ingress gateway to its
-                    # backup tier, paying the same links a routed request
-                    # would (no crossing counters: it is duplicate work,
-                    # not demand) — else the twin-vs-primary win
-                    # comparison is biased toward the free-riding twin
-                    for l in range(bj):
-                        self._cross_link(twin_item, l)
-                    twins.append((bj, twin_item))
-                    pairs.append(pair)
-                    hedged += 1
+                    bj = self._route_target(0 if j == last else last)
+                    if bj is not None:
+                        twin = Request(rid=it.req.rid, tokens=it.req.tokens,
+                                       max_new=it.req.max_new,
+                                       arrival_s=it.req.arrival_s)
+                        pair = _HedgePair(fn=it.fn)
+                        it.pair = pair
+                        twin_item = _Queued(it.fn, twin, it.t_submit,
+                                            tick_no=self._tick_no,
+                                            hedge=True, pair=pair)
+                        # the twin travels from the ingress gateway to its
+                        # backup tier, paying the same links a routed
+                        # request would (no crossing counters: it is
+                        # duplicate work, not demand) — else the
+                        # twin-vs-primary win comparison is biased toward
+                        # the free-riding twin
+                        for l in range(bj):
+                            self._cross_link(twin_item, l)
+                        twins.append((bj, twin_item))
+                        pairs.append(pair)
+                        hedged += 1
                 for l in range(j):
                     self._cross_link(it, l)
                 self.gateways[j].push(it, force=True)
@@ -821,6 +1017,7 @@ class EdgeCloudContinuum:
         item.req.output = pair.winner_req.output
         item.req.t_first = pair.winner_req.t_first
         item.req.t_done = pair.winner_req.t_done
+        item.req.latency_s = pair.winner_req.latency_s
 
     def _evict_loser(self, pair: _HedgePair) -> None:
         """Cancel the losing arm of a just-resolved pair if it is still
@@ -878,8 +1075,10 @@ class EdgeCloudContinuum:
             thr = pol.migrate_threshold
             if thr is None:
                 continue
+            if not (self.link_state[b].up and self.tier_up[b + 1]):
+                continue       # no migrating into a partition/crash
             tier, dst = self.tiers[b], self.tiers[b + 1]
-            link = self.topology.links[b]
+            link = self.link_state[b]
             for fn, fl in tier.inflight.items():
                 if not fl:
                     continue
@@ -928,7 +1127,9 @@ class EdgeCloudContinuum:
         replica, so a both-ends-scaled-to-zero deadlock resumes anyway).
         """
         tier = self.tiers[ti]
-        ep = tier.endpoints[tr.fn]
+        ep = tier.endpoints.get(tr.fn)
+        if ep is None:             # tier crashed: its pool is gone
+            return False
         if not force and min(
                 tier.free_slots(tr.fn),
                 tier.capacity(tr.fn) - tier.inflight_count(tr.fn)) <= 0:
@@ -942,6 +1143,21 @@ class EdgeCloudContinuum:
         if tr.item.pair is not None:
             tr.item.pair.set_ref(tr.item.hedge, ti, rec)
         return True
+
+    def _abort_transit(self, tr: _Transit) -> None:
+        """A transit that can never land at its destination: resume at
+        the source, or — when the source too is crashed or has no free
+        slot — replay the request from scratch at a reachable gateway.
+        Counted aborted either way; never lost, never left in transit."""
+        self.metrics.inc("migrations_aborted")
+        pair = tr.item.pair
+        if pair is not None and pair.winner is not None:
+            if pair.winner == "twin":
+                self._adopt(tr.item, pair)
+            return
+        if self.tier_up[tr.src] and self._readmit(tr.src, tr, force=True):
+            return
+        self._replay(tr.item, tr.src)
 
     def _land_migrations(self) -> Tuple[int, int]:
         """Resolve in-flight migrations whose transfer completed.
@@ -960,6 +1176,15 @@ class EdgeCloudContinuum:
         completed = aborted = 0
         still: List[_Transit] = []
         for tr in self.migrations:
+            if (not self.link_state[tr.dst - 1].up
+                    or not self.tier_up[tr.dst]):
+                # the link partitioned (or the destination crashed) with
+                # the transfer in flight: the state never arrives —
+                # abort back to the source NOW, not at t_land, so
+                # drain() can never spin on an unlandable transit
+                self._abort_transit(tr)
+                aborted += 1
+                continue
             if now < tr.t_land:
                 still.append(tr)
                 continue
@@ -1138,6 +1363,8 @@ class EdgeCloudContinuum:
                 for (ti, fn), lst in list(pending.items()):
                     tier = self.tiers[ti]
                     if (lst and ti < last
+                            and self.link_state[ti].up
+                            and self.tier_up[ti + 1]
                             and min(tier.free_slots(fn), tier.capacity(fn)
                                     - tier.inflight_count(fn)) <= 0):
                         for it in lst:
@@ -1262,6 +1489,8 @@ class EdgeCloudContinuum:
                 for (ti, fn), lst in list(pending.items()):
                     tier = self.tiers[ti]
                     if (lst and ti < last
+                            and self.link_state[ti].up
+                            and self.tier_up[ti + 1]
                             and min(tier.free_slots(fn),
                                     tier.capacity(fn)) <= 0):
                         for it in lst:

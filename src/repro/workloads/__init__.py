@@ -1,0 +1,35 @@
+"""``repro.workloads`` — trace-driven workload harness + fault injection.
+
+Two halves, consumed identically by the simulator
+(:class:`repro.core.simulator.ContinuumSimulator`) and the live runtime
+(:class:`repro.serving.tiers.EdgeCloudContinuum` /
+:class:`repro.platform.Continuum`):
+
+  * :mod:`repro.workloads.trace`  — arrival traces: a materialized
+    :class:`~repro.workloads.trace.Trace` schema (per-request arrival
+    time, function, size, payload bytes) with deterministic seeded
+    generators (stationary Poisson, bursty MMPP on/off, diurnal sinusoid,
+    Zipf-skewed function popularity) and CSV replay/export, plus the
+    inline-draw :class:`~repro.workloads.trace.ArrivalProcess` form that
+    reproduces the historical rate-parameter arrivals bit-identically.
+  * :mod:`repro.workloads.faults` — a :class:`~repro.workloads.faults.\
+FaultSchedule` of timed :class:`~repro.workloads.faults.FaultEvent`\\ s
+    over a :class:`~repro.core.topology.Topology` (link degradation and
+    partition, tier crash and recovery), applied mid-run by both
+    deployments through a mutable :class:`~repro.workloads.faults.\
+LinkState` overlay.
+"""
+
+from repro.workloads.faults import (FaultEvent, FaultSchedule, LinkState,
+                                    cloud_partition, edge_brownout,
+                                    tier_outage)
+from repro.workloads.trace import (ArrivalProcess, RampedPoisson,
+                                   StationaryPoisson, Trace,
+                                   request_rounds)
+
+__all__ = [
+    "ArrivalProcess", "RampedPoisson", "StationaryPoisson", "Trace",
+    "request_rounds",
+    "FaultEvent", "FaultSchedule", "LinkState",
+    "edge_brownout", "cloud_partition", "tier_outage",
+]

@@ -1,0 +1,283 @@
+"""``repro.workloads``: trace generators, CSV replay, fault schedules,
+and chaos through the simulator (the live-runtime chaos paths are
+covered by ``test_fault_tolerance.py`` and ``test_parity_fuzz.py``)."""
+
+import numpy as np
+import pytest
+
+from repro.core.simulator import ContinuumSimulator, SimConfig
+from repro.core.topology import LinkSpec, TierSpec, Topology
+from repro.workloads.faults import (FaultEvent, FaultSchedule, LinkState,
+                                    cloud_partition, edge_brownout,
+                                    merge_schedules, tier_outage)
+from repro.workloads.trace import (RampedPoisson, StationaryPoisson, Trace,
+                                   request_rounds, trace_requests)
+
+
+# ---- trace generators ------------------------------------------------------
+
+def test_generators_deterministic():
+    for gen in (lambda s: Trace.poisson(4.0, 60.0, seed=s),
+                lambda s: Trace.bursty(2.0, 20.0, 60.0, seed=s),
+                lambda s: Trace.diurnal(4.0, 60.0, period_s=60.0, seed=s)):
+        a, b, c = gen(7), gen(7), gen(8)
+        np.testing.assert_array_equal(a.t, b.t)
+        np.testing.assert_array_equal(a.fn, b.fn)
+        assert len(c) and not np.array_equal(
+            a.t[:min(len(a), len(c))], c.t[:min(len(a), len(c))])
+
+
+def test_poisson_rate_and_bounds():
+    tr = Trace.poisson(rps=8.0, duration_s=200.0, seed=0)
+    assert tr.duration_s == 200.0
+    assert np.all(tr.t >= 0) and np.all(tr.t < 200.0)
+    assert np.all(np.diff(tr.t) >= 0)
+    assert abs(tr.mean_rps() - 8.0) / 8.0 < 0.15        # LLN at n~1600
+
+
+def test_bursty_is_bimodal():
+    """On-phase arrival density is much higher than off-phase: the
+    busiest 1s bucket of an MMPP trace far exceeds the base rate."""
+    tr = Trace.bursty(base_rps=2.0, burst_rps=40.0, duration_s=300.0,
+                      mean_on_s=10.0, mean_off_s=30.0, seed=1)
+    counts = tr.per_tick(1.0)[:, 0]
+    assert counts.max() >= 20                           # deep in a burst
+    assert np.median(counts) <= 6                       # mostly off-phase
+    base, burst = 2.0, 40.0
+    assert base < tr.mean_rps() < burst
+
+
+def test_diurnal_modulates_rate():
+    tr = Trace.diurnal(mean_rps=10.0, duration_s=600.0, period_s=600.0,
+                       amplitude=0.8, peak_at_s=0.0, seed=2)
+    # peak half-period (cos > 0) vs trough half-period
+    peak = np.sum((tr.t < 150.0) | (tr.t >= 450.0))
+    trough = np.sum((tr.t >= 150.0) & (tr.t < 450.0))
+    assert peak > 1.5 * trough
+    with pytest.raises(ValueError):
+        Trace.diurnal(4.0, 60.0, amplitude=1.5)
+
+
+def test_zipf_popularity_skew():
+    names = tuple(f"f{i}" for i in range(8))
+    tr = Trace.poisson(rps=20.0, duration_s=200.0, fn_names=names,
+                       seed=3, popularity="zipf", zipf_s=1.2)
+    counts = np.bincount(tr.fn, minlength=8)
+    assert counts[0] > 2 * counts[4]                    # head >> tail
+    uni = Trace.poisson(rps=20.0, duration_s=200.0, fn_names=names,
+                        seed=3, popularity="uniform")
+    ucounts = np.bincount(uni.fn, minlength=8)
+    assert ucounts.max() < 2 * max(ucounts.min(), 1)
+    with pytest.raises(ValueError):
+        Trace.poisson(4.0, 10.0, popularity="powerlaw")
+
+
+def test_trace_validation():
+    with pytest.raises(ValueError):                     # decreasing times
+        Trace(t=[2.0, 1.0], fn=[0, 0], prompt_len=[4, 4],
+              max_new=[2, 2], payload_bytes=[1.0, 1.0])
+    with pytest.raises(ValueError):                     # fn out of range
+        Trace(t=[1.0], fn=[3], prompt_len=[4], max_new=[2],
+              payload_bytes=[1.0], fn_names=("a",))
+    with pytest.raises(ValueError):                     # ragged columns
+        Trace(t=[1.0, 2.0], fn=[0], prompt_len=[4], max_new=[2],
+              payload_bytes=[1.0])
+
+
+def test_window_and_per_tick():
+    tr = Trace(t=[0.5, 1.1, 1.9, 3.2], fn=[0, 1, 0, 1],
+               prompt_len=[4] * 4, max_new=[2] * 4,
+               payload_bytes=[1.0] * 4, fn_names=("a", "b"),
+               duration_s=4.0)
+    np.testing.assert_array_equal(tr.window(1.0, 2.0), [1, 2])
+    counts = tr.per_tick(1.0)
+    assert counts.shape == (4, 2)
+    assert counts.sum() == 4
+    np.testing.assert_array_equal(counts[1], [1, 1])
+
+
+def test_csv_roundtrip_bit_faithful(tmp_path):
+    tr = Trace.bursty(2.0, 24.0, 60.0, fn_names=("alpha", "beta"),
+                      seed=5, popularity="zipf")
+    rt = tr.round_trip()
+    assert len(rt) == len(tr)
+    np.testing.assert_allclose(rt.t, tr.t, atol=1e-6)   # 6-decimal format
+    # per-row function *names* survive (index remap is allowed)
+    assert ([tr.fn_names[i] for i in tr.fn]
+            == [rt.fn_names[i] for i in rt.fn])
+    np.testing.assert_array_equal(rt.prompt_len, tr.prompt_len)
+    np.testing.assert_array_equal(rt.max_new, tr.max_new)
+    np.testing.assert_allclose(rt.payload_bytes, tr.payload_bytes)
+    # and through a real file
+    p = str(tmp_path / "trace.csv")
+    tr.to_csv(p)
+    again = Trace.from_csv(p)
+    np.testing.assert_allclose(again.t, rt.t)
+    with pytest.raises(ValueError):                     # header pinned
+        bad = tmp_path / "bad.csv"
+        bad.write_text("time,function\n")
+        Trace.from_csv(str(bad))
+
+
+def test_request_rounds_matches_historical_workload():
+    """The consolidated helper reproduces serving_bench's historical
+    private generator draw-for-draw."""
+    rng = np.random.default_rng(4)
+    expect = []
+    for rnd in range(6):
+        for _ in range(2 if rnd < 3 else 8):
+            expect.append((rnd, rng.integers(0, 128, 6).astype(np.int32), 6))
+    got = request_rounds(6, seed=4)
+    assert len(got) == len(expect)
+    for (r1, t1, m1), (r2, t2, m2) in zip(got, expect):
+        assert r1 == r2 and m1 == m2
+        np.testing.assert_array_equal(t1, t2)
+
+
+def test_trace_requests_tokens():
+    tr = Trace.poisson(5.0, 20.0, seed=6, prompt_len=7)
+    toks = trace_requests(tr, seed=0, vocab=64)
+    assert len(toks) == len(tr)
+    assert all(len(t) == 7 and t.dtype == np.int32 for t in toks)
+    assert all(t.min() >= 0 and t.max() < 64 for t in toks)
+
+
+# ---- fault schedules -------------------------------------------------------
+
+def test_fault_event_validation():
+    with pytest.raises(ValueError):
+        FaultEvent(1.0, "melt_link", 0)
+    with pytest.raises(ValueError):
+        FaultEvent(-1.0, "crash_tier", 0)
+    with pytest.raises(ValueError):
+        FaultEvent(1.0, "degrade_link", 0, bw_mult=0.0)
+
+
+def test_schedule_due_and_reset():
+    s = FaultSchedule([FaultEvent(5.0, "crash_tier", 0),
+                       FaultEvent(1.0, "partition_link", 0),
+                       FaultEvent(3.0, "restore_link", 0)])
+    assert [e.t for e in s] == [1.0, 3.0, 5.0]          # time-sorted
+    assert [e.t for e in s.due(3.0)] == [1.0, 3.0]
+    assert not s.exhausted
+    assert [e.t for e in s.due(100.0)] == [5.0]
+    assert s.exhausted and s.due(1e9) == []
+    s.reset()
+    assert len(s.due(10.0)) == 3
+
+
+def test_schedule_validate_against_topology():
+    ok = FaultSchedule([FaultEvent(1.0, "degrade_link", 0),
+                        FaultEvent(2.0, "crash_tier", 1)])
+    assert ok.validate(num_tiers=2) is ok
+    with pytest.raises(ValueError):                     # no link 1 in 2 tiers
+        FaultSchedule([FaultEvent(1.0, "partition_link", 1)]).validate(2)
+    with pytest.raises(ValueError):                     # no tier 3
+        FaultSchedule([FaultEvent(1.0, "crash_tier", 3)]).validate(3)
+
+
+def test_link_state_overlay():
+    ls = LinkState(LinkSpec(rtt_s=0.01, bandwidth_Bps=1e8))
+    healthy = ls.latency_s(1e6)
+    assert healthy == 0.01 + 1e6 / 1e8
+    ls.apply(FaultEvent(0.0, "degrade_link", 0, bw_mult=0.1, rtt_mult=4.0))
+    assert ls.latency_s(1e6) == pytest.approx(0.04 + 1e6 / 1e7)
+    assert ls.effective_capacity() == pytest.approx(1e7)
+    ls.apply(FaultEvent(0.0, "partition_link", 0))
+    assert not ls.up and ls.effective_capacity() <= 1e-6
+    ls.apply(FaultEvent(0.0, "restore_link", 0))
+    assert ls.up and ls.latency_s(1e6) == healthy
+    with pytest.raises(ValueError):
+        ls.apply(FaultEvent(0.0, "crash_tier", 0))
+
+
+def test_scenario_constructors_and_merge():
+    s = merge_schedules(edge_brownout(10.0, 20.0),
+                        cloud_partition(15.0, 25.0, link=1),
+                        tier_outage(5.0, 30.0, tier=2), None)
+    assert len(s) == 6
+    assert [e.t for e in s] == sorted(e.t for e in s)
+    kinds = {e.kind for e in s}
+    assert kinds == {"degrade_link", "restore_link", "partition_link",
+                     "crash_tier", "restore_tier"}
+
+
+# ---- chaos through the simulator ------------------------------------------
+
+_SIM = SimConfig(duration_s=90.0, low_rps=2.0, high_rps=10.0,
+                 ramp_start_s=20.0, ramp_end_s=60.0, seed=0)
+
+
+def test_sim_default_trace_is_ramped_poisson():
+    """Passing the consolidated RampedPoisson explicitly is bit-identical
+    to the simulator's built-in default arrivals (golden protection)."""
+    base = ContinuumSimulator("io", "auto", _SIM).run()
+    via = ContinuumSimulator(
+        "io", "auto", _SIM,
+        trace=RampedPoisson(_SIM.low_rps, _SIM.high_rps,
+                            _SIM.ramp_start_s, _SIM.ramp_end_s)).run()
+    assert base.summary() == via.summary()
+    assert base.successes == via.successes and base.failures == via.failures
+
+
+def test_sim_stationary_process():
+    res = ContinuumSimulator("io", "auto", _SIM,
+                             trace=StationaryPoisson(rps=4.0)).run()
+    assert res.submitted > 0
+    assert res.successes + res.failures == res.submitted
+
+
+def test_sim_materialized_trace_conservation():
+    tr = Trace.bursty(2.0, 24.0, 60.0, seed=9)
+    res = ContinuumSimulator("io", "auto+migrate", _SIM, trace=tr).run()
+    assert res.submitted == len(tr)
+    assert res.successes + res.failures == res.submitted
+
+
+def test_sim_brownout_conservation_and_counter():
+    res = ContinuumSimulator(
+        "io", "auto+net+migrate", _SIM,
+        faults=edge_brownout(30.0, 60.0, bw_mult=0.02, rtt_mult=10.0)).run()
+    assert res.faults_applied == 2
+    assert res.successes + res.failures == res.submitted
+    assert "faults_applied" in res.summary()
+
+
+def test_sim_tier_crash_replays_or_fails():
+    res = ContinuumSimulator("io", "auto", _SIM,
+                             faults=tier_outage(25.0, 50.0, tier=1)).run()
+    assert res.faults_applied == 2
+    assert res.successes + res.failures == res.submitted
+
+
+def test_sim_partition_migration_identity():
+    """Partition the link with migrations in flight: fired ==
+    completed + aborted (no transit left open after the run drains),
+    and the partition actually forces aborts."""
+    cfg = SimConfig(duration_s=90.0, low_rps=4.0, high_rps=16.0,
+                    ramp_start_s=10.0, ramp_end_s=40.0, seed=0)
+    topo = Topology(
+        tiers=(TierSpec("edge", slots=2, max_len=64,
+                        queue_depth_per_slot=8),
+               TierSpec("cloud", slots=16, max_len=64)),
+        links=(LinkSpec(rtt_s=0.05, bandwidth_Bps=1e6),))
+    res = ContinuumSimulator(
+        "io", "auto+migrate", cfg, topology=topo,
+        faults=cloud_partition(35.0, 55.0, link=0)).run()
+    assert res.successes + res.failures == res.submitted
+    assert res.migrations_fired > 0                     # not vacuous
+    assert res.migrations_aborted > 0                   # partition bit
+    assert (res.migrations_fired
+            == res.migrations_completed + res.migrations_aborted)
+
+
+def test_sim_faults_validated_against_topology():
+    with pytest.raises(ValueError):
+        ContinuumSimulator("io", "auto", _SIM,
+                           faults=FaultSchedule(
+                               [FaultEvent(1.0, "crash_tier", 5)]))
+
+
+def test_sim_rejects_bogus_trace():
+    with pytest.raises(TypeError):
+        ContinuumSimulator("io", "auto", _SIM, trace=[1.0, 2.0, 3.0])

@@ -124,3 +124,97 @@ def test_straggler_ratio_reported(tmp_path):
     t = _mk_trainer(str(tmp_path), 6)
     out = t.run()
     assert out["straggler_ratio"] >= 1.0
+
+
+# ---- serving-side fault tolerance: tier crash/restore through the
+# ---- replication path (repro.workloads.faults x core.replication)
+
+def _mk_continuum(**kwargs):
+    from repro.core.replication import FunctionSpec
+    from repro.models import model_zoo
+    from repro.platform import Continuum, TierConfig
+
+    cfg = configs.get_smoke_config(ARCH)
+    params = model_zoo.init(jax.random.PRNGKey(0), cfg)
+    cc = Continuum(edge=TierConfig(slots=2, max_len=64),
+                   cloud=TierConfig(slots=8, max_len=64),
+                   seed=0, **kwargs)
+    cc.deploy(FunctionSpec(name="fn", arch=ARCH), cfg, params)
+    return cc
+
+
+def test_serving_edge_crash_replays_residents():
+    """Crashing the edge mid-decode loses its slots and backlog, but
+    every resident request replays at the cloud: served-or-failed holds
+    for all of them and nothing is silently lost."""
+    from repro.platform import FaultEvent, Request
+    from repro.serving.engine import Request as _Req  # noqa: F401
+
+    cc = _mk_continuum(policy="auto", max_steps_per_tick=2)
+    rng = np.random.default_rng(0)
+    reqs = []
+    for rid in range(6):
+        r = Request(rid=rid, tokens=rng.integers(0, 64, 5).astype(np.int32),
+                    max_new=8)
+        cc.submit("fn", r)
+        reqs.append(r)
+    cc.tick()                                   # residents on both tiers
+    assert cc.in_flight > 0
+    cc.apply_fault(FaultEvent(0.0, "crash_tier", 0))
+    assert not cc.tier_up[0]
+    assert cc.tiers[0].endpoints == {}          # pool wiped
+    assert cc.metrics.counter("replayed") > 0 or cc.queued > 0
+    cc.drain()
+    for r in reqs:
+        assert (r.output is not None) != r.failed, r.rid
+    assert sum(1 for r in reqs if r.output is not None) == len(reqs)
+
+
+def test_serving_restore_reregisters_through_replication():
+    """Recovery is the replication path, not a special case: the fresh
+    ReplicationController reconciles against the cloud specs, every
+    function reports changed, and the redeploy (with a fresh autoscaler
+    at min_scale) re-registers the edge's endpoints from the stored
+    artifacts."""
+    from repro.platform import FaultEvent, Request
+
+    cc = _mk_continuum(policy="auto")
+    old_rep = cc.replicators[0]
+    assert old_rep.writes >= 1                  # initial deploy went through it
+    cc.apply_fault(FaultEvent(0.0, "crash_tier", 0))
+    fresh = cc.replicators[0]
+    assert fresh is not old_rep                 # edge view was lost with the tier
+    assert fresh.writes == 0
+    cc.apply_fault(FaultEvent(0.0, "restore_tier", 0))
+    assert cc.tier_up[0]
+    assert fresh.writes == 1                    # re-registered via reconcile
+    assert fresh.get("fn") is not None
+    assert "fn" in cc.tiers[0].endpoints        # pool rebuilt from artifacts
+    # and it actually serves again
+    r = Request(rid=0, tokens=np.arange(5, dtype=np.int32), max_new=3)
+    cc.submit("fn", r)
+    cc.drain()
+    assert r.output is not None and not r.failed
+
+
+def test_serving_deep_tier_crash_survivors_stay_local():
+    """The deepest tier going down leaves the shallow tier serving: its
+    requests during the outage stay local (no 503s while the edge has
+    capacity), and restore redeploys the cloud directly from the spec
+    source."""
+    from repro.platform import FaultEvent, Request
+
+    cc = _mk_continuum(policy="auto")
+    cc.apply_fault(FaultEvent(0.0, "crash_tier", 1))
+    rng = np.random.default_rng(1)
+    reqs = []
+    for rid in range(4):
+        r = Request(rid=rid, tokens=rng.integers(0, 64, 5).astype(np.int32),
+                    max_new=2)
+        cc.submit("fn", r)
+        reqs.append(r)
+    cc.drain()
+    for r in reqs:
+        assert r.output is not None and not r.failed
+    cc.apply_fault(FaultEvent(0.0, "restore_tier", 1))
+    assert "fn" in cc.tiers[1].endpoints        # direct redeploy (spec source)

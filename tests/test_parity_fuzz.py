@@ -31,12 +31,16 @@ import jax
 import numpy as np
 
 from repro import configs
+from repro.core.policy import AutoOffload
 from repro.core.replication import AutoscalingPolicy, FunctionSpec
 from repro.core.simulator import ContinuumSimulator, SimConfig
 from repro.core.topology import LinkSpec, TierSpec, Topology
 from repro.core.workloads import PROFILES
 from repro.models import model_zoo
 from repro.platform import Continuum, Request
+from repro.workloads.faults import (KINDS, FaultEvent, FaultSchedule,
+                                    LinkState)
+from repro.workloads.trace import Trace
 
 _POLICIES = (0.0, 37.5, 100.0, "auto", "auto+net", "auto+hedge",
              "auto+migrate", "auto+net+migrate")
@@ -162,3 +166,147 @@ def test_conservation_after_drain_fuzz(seed):
     assert c("migrations_fired") == (c("migrations_completed")
                                      + c("migrations_aborted")
                                      + cc.migrations_open)
+
+
+def _random_faults(rng: np.random.Generator, num_tiers: int,
+                   horizon_s: float) -> FaultSchedule:
+    """A random but always-valid fault script over ``num_tiers`` tiers.
+
+    Every degrade/partition/crash is paired with a restore before the
+    horizon, so the run always ends on a healthy (or at least reachable)
+    continuum and drain() has somewhere to put the survivors."""
+    events = []
+    for _ in range(int(rng.integers(1, 4))):
+        kind = KINDS[int(rng.integers(0, len(KINDS)))]
+        if kind in ("degrade_link", "partition_link", "restore_link"):
+            if num_tiers < 2:
+                continue
+            target = int(rng.integers(0, num_tiers - 1))
+        else:
+            target = int(rng.integers(0, num_tiers))
+            kind = "crash_tier"
+        t0 = float(rng.uniform(0.0, horizon_s * 0.5))
+        t1 = float(rng.uniform(t0 + 0.5, horizon_s * 0.8))
+        if kind == "degrade_link":
+            events.append(FaultEvent(t0, kind, target,
+                                     bw_mult=float(rng.uniform(0.01, 0.5)),
+                                     rtt_mult=float(rng.uniform(1.0, 20.0))))
+            events.append(FaultEvent(t1, "restore_link", target))
+        elif kind == "partition_link":
+            events.append(FaultEvent(t0, kind, target))
+            events.append(FaultEvent(t1, "restore_link", target))
+        elif kind == "crash_tier":
+            events.append(FaultEvent(t0, kind, target))
+            events.append(FaultEvent(t1, "restore_tier", target))
+    return FaultSchedule(events)
+
+
+@hypothesis.settings(max_examples=6)
+@hypothesis.given(st.integers(min_value=0, max_value=10_000))
+def test_conservation_under_faults_fuzz(seed):
+    """Chaos never breaks conservation: under a random fault schedule
+    (link degradation, partitions, tier crashes mid-run) every submitted
+    request still ends served-or-failed exactly once, with nothing left
+    queued, slot-resident, or stuck in a migration transfer."""
+    rng = np.random.default_rng(seed + 77_000)
+    cfg, params = _model()
+    num_tiers = int(rng.integers(1, 4))
+    tiers = tuple(
+        TierSpec(f"t{i}", slots=int(rng.integers(1, 3)), max_len=32,
+                 queue_depth_per_slot=(None if i == num_tiers - 1
+                                       else int(rng.integers(1, 4))))
+        for i in range(num_tiers))
+    topo = Topology(tiers,
+                    tuple(LinkSpec(rtt_s=0.0)
+                          for _ in range(num_tiers - 1)),
+                    waterfall=bool(rng.uniform() < 0.5))
+    policy = _POLICIES[int(rng.integers(0, len(_POLICIES)))]
+    horizon = 8.0
+    trace = Trace.poisson(rps=float(rng.uniform(1.0, 4.0)),
+                          duration_s=horizon, fn_names=("fn",),
+                          seed=seed, prompt_len=5,
+                          max_new=int(rng.integers(1, 5)))
+    faults = _random_faults(rng, num_tiers, horizon)
+    cc = Continuum.from_topology(
+        topo, policy=policy, seed=seed, trace=trace, faults=faults,
+        max_steps_per_tick=(None if rng.uniform() < 0.5
+                            else int(rng.integers(1, 4))))
+    cc.deploy(FunctionSpec(
+        name="fn", arch="stablelm-1.6b",
+        autoscaling=AutoscalingPolicy()), cfg, params)
+
+    for _ in range(int(horizon) + 4):
+        cc.tick()
+    cc.drain()
+
+    assert cc.queued == 0 and cc.in_flight == 0
+    assert cc.migrations_open == 0
+    reqs = cc.trace_requests
+    assert len(reqs) == len(trace)                 # all rows submitted
+    for r in reqs:                                 # completed XOR failed
+        assert (r.output is not None) != r.failed, r.rid
+    served = sum(1 for r in reqs if r.output is not None)
+    failed = sum(1 for r in reqs if r.failed)
+    assert served + failed == len(reqs)
+    c = cc.metrics.counter
+    assert c("hedges_fired") == (c("hedges_won") + c("hedges_cancelled")
+                                 + cc.hedges_open)
+    assert c("migrations_fired") == (c("migrations_completed")
+                                     + c("migrations_aborted")
+                                     + cc.migrations_open)
+    if len(faults):
+        assert c("faults_applied") == len(faults)
+
+
+@hypothesis.settings(max_examples=6)
+@hypothesis.given(st.integers(min_value=0, max_value=10_000))
+def test_step_tiers_parity_with_degraded_link(seed):
+    """R_t parity survives a degraded link: the live runtime's
+    apply_fault() re-caps its net-aware policies exactly the way the
+    simulator's _FAULT handler does, so both ControlLoops keep producing
+    bit-identical trajectories after the brownout."""
+    rng = np.random.default_rng(seed + 33_000)
+    num_tiers = int(rng.integers(2, 5))
+    topo = _topology(rng, num_tiers)
+    policy = ("auto+net", "auto+net+migrate")[int(rng.integers(0, 2))]
+    workload = _WORKLOADS[int(rng.integers(0, len(_WORKLOADS)))]
+    window = int(rng.integers(8, 33))
+
+    sim = ContinuumSimulator(workload, policy,
+                             SimConfig(duration_s=1.0, window=window),
+                             topology=topo)
+    cfg, params = _model()
+    cc = Continuum.from_topology(topo, policy=policy, seed=seed,
+                                 window=window,
+                                 req_bytes=PROFILES[workload].payload_bytes)
+    cc.deploy(FunctionSpec(name=workload, arch="stablelm-1.6b"),
+              cfg, params)
+
+    B = sim.control.num_boundaries
+    link = int(rng.integers(0, num_tiers - 1))
+    ev = FaultEvent(0.0, "degrade_link", link,
+                    bw_mult=float(rng.uniform(0.01, 0.2)),
+                    rtt_mult=float(rng.uniform(2.0, 10.0)))
+    # live side: the real fault path
+    cc.apply_fault(ev)
+    # sim side: what the simulator's _FAULT event handler does
+    ls = LinkState(topo.links[link])
+    ls.apply(ev)
+    pol = sim.control.policies[link]
+    assert isinstance(pol, AutoOffload)
+    assert pol.set_link_capacity(ls.effective_capacity())
+
+    for step in range(6):
+        lats = [rng.lognormal(-2.0, 1.0, (1, window)).astype(np.float32)
+                for _ in range(B)]
+        valids = [rng.uniform(size=(1, window)) < rng.uniform(0.2, 1.0)
+                  for _ in range(B)]
+        qages = [[list(rng.uniform(0.05, 6.0,
+                                   size=int(rng.integers(0, 5))))]
+                 for _ in range(B)]
+        arrivals = [[float(rng.integers(0, 12))] for _ in range(B)]
+        R_sim = np.array(sim.control.step_tiers(
+            lats, valids, queue_ages=qages, arrivals=arrivals))
+        R_live = np.array(cc.control.step_tiers(
+            lats, valids, queue_ages=qages, arrivals=arrivals))
+        np.testing.assert_array_equal(R_sim, R_live)
