@@ -1,7 +1,8 @@
 """Benchmark regression gate for CI.
 
 Runs a fresh ``serving_bench`` + ``controller_micro`` + ``bench_chaos``
-pass, then compares the CPU-stable metrics against the committed goldens in
++ ``bench_paged`` pass, then compares the CPU-stable metrics against the
+committed goldens in
 ``benchmarks/results/*.json``.  Absolute wall-clock numbers vary wildly
 across machines, so the gate checks *relative* metrics (speedup ratios:
 throughput-shaped, machine-independent) and structural invariants
@@ -72,6 +73,18 @@ STABLE_METRICS: List[Tuple[str, str, str]] = [
     ("bench_chaos", "cloud_partition.migration_identity", "flag"),
     ("bench_chaos", "cloud_partition.auto_more_served", "flag"),
     ("bench_chaos", "cloud_partition.aborted_transits", "flag"),
+    # paged KV cache: both arms serve the whole trace (deterministic
+    # counts), the paged pool packs strictly more resident requests per
+    # GB than the dense pool of the same bytes, the Zipf trace's prefix
+    # reuse keeps the hit rate above half, and a partial row's migration
+    # payload is smaller than the dense full row.
+    ("bench_paged", "dense.served", "count"),
+    ("bench_paged", "paged.served", "count"),
+    ("bench_paged", "served_equal", "flag"),
+    ("bench_paged", "paged_packs_more", "flag"),
+    ("bench_paged", "hit_rate_over_half", "flag"),
+    ("bench_paged", "resident_per_gb_ratio", "ratio"),
+    ("bench_paged", "migration_payload.paged_smaller", "flag"),
 ]
 
 
@@ -152,6 +165,9 @@ def run_benches(out_dir: str, benches: List[str]) -> None:
     if "chaos" in benches:
         from benchmarks import bench_chaos
         bench_chaos.main(out_dir)
+    if "paged" in benches:
+        from benchmarks import bench_paged
+        bench_paged.main(out_dir)
 
 
 def main(argv: Optional[List[str]] = None) -> int:
@@ -164,8 +180,8 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument("--fresh", default=None,
                     help="compare these results instead of --out")
     ap.add_argument("--benches", nargs="*",
-                    default=["serving", "controller", "chaos"],
-                    choices=["serving", "controller", "chaos"])
+                    default=["serving", "controller", "chaos", "paged"],
+                    choices=["serving", "controller", "chaos", "paged"])
     ap.add_argument("--threshold", type=float, default=0.25,
                     help="max fractional drop allowed on ratio metrics")
     ap.add_argument("--skip-run", action="store_true",

@@ -8,6 +8,8 @@ One bench per paper artifact + the roofline report:
   serving      — live two-tier engine + policy + scheduler comparisons
   chaos        — trace + fault-injection scenarios (flash crowd, edge
                  brownout, cloud partition) on the live continuum
+  paged        — paged KV-cache packing + prefix reuse on a Zipf trace
+                 (dense vs paged pools at equal bytes)
   roofline     — §Roofline table from the dry-run artifacts
 
 Pass bench names to run a subset: ``python -m benchmarks.run table2 roofline``.
@@ -29,10 +31,12 @@ import os
 import time
 
 RESULTS = os.path.join(os.path.dirname(__file__), "results")
-BENCHES = ("table2", "fig2", "controller", "serving", "chaos", "roofline")
+BENCHES = ("table2", "fig2", "controller", "serving", "chaos", "paged",
+           "roofline")
 #: benches that write a results/<name>.json artifact (the gate's inputs)
 JSON_ARTIFACTS = {"table2": "table2", "controller": "controller_micro",
-                  "serving": "serving_bench", "chaos": "bench_chaos"}
+                  "serving": "serving_bench", "chaos": "bench_chaos",
+                  "paged": "bench_paged"}
 
 
 def main(argv=None):
@@ -81,6 +85,12 @@ def main(argv=None):
               + "=" * 72)
         from benchmarks import bench_chaos
         bench_chaos.main(results_dir)
+
+    if "paged" in wanted:
+        print("\n" + "=" * 72 + "\nPaged KV-cache bench (packing + prefix "
+              "reuse)\n" + "=" * 72)
+        from benchmarks import bench_paged
+        bench_paged.main(results_dir)
 
     if "roofline" in wanted:
         print("\n" + "=" * 72 + "\n§Roofline — dry-run derived terms\n" + "=" * 72)

@@ -1,0 +1,23 @@
+"""``repro.cache`` — paged KV-cache management.
+
+The serving engine's cache pool is either *dense* (one ``max_len`` row
+per slot — the historical layout) or *paged*: a fixed pool of
+``page_size``-token pages, a per-request page table, refcounted pages
+with copy-on-write forking, and a prefix registry that lets requests
+sharing a system/function prompt reference the same resident pages.
+
+  * :class:`~repro.cache.pages.PagePool` — free-list allocator +
+    refcounts over a fixed page pool (host-side bookkeeping; the page
+    *contents* live in the endpoint's device arrays).
+  * :func:`~repro.cache.pages.pages_needed` — the one formula both the
+    live engine and the simulator's bytes-based tier-capacity model use
+    to size a request's page reservation.
+  * :class:`~repro.cache.prefix.PrefixRegistry` — prompt-hash ->
+    resident prefix pages (+ the cached first token), LRU-bounded.
+"""
+
+from repro.cache.pages import PagePool, pages_needed, pages_for_tokens
+from repro.cache.prefix import PrefixEntry, PrefixRegistry
+
+__all__ = ["PagePool", "pages_needed", "pages_for_tokens",
+           "PrefixEntry", "PrefixRegistry"]

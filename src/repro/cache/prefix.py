@@ -1,0 +1,103 @@
+"""Prefix-hash registry: shared system/function-prompt pages.
+
+Serverless LLM traffic is dominated by a few hot functions whose
+invocations share the same system/function prompt — the KV cache of that
+prompt is identical across invocations, yet a dense pool re-prefills it
+from token 0 every time (the LLM analogue of the cold-start cost the
+edge-serverless measurements call the dominant latency term).  The
+registry keys the *pages* holding an already-computed prompt prefix by a
+hash of its token ids; a new request whose prompt matches simply
+references those pages (refcount++, copy-on-write past the fork point)
+and skips prefill compute entirely — the cached ``first_token`` (the
+argmax the registering prefill produced) seeds its decode stream, so the
+token stream is bit-identical to having prefilled from scratch.
+
+The registry holds one reference on every page of every entry; LRU
+eviction (bounded ``capacity``) drops those references, and the pool
+frees a page once no table references it either.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.cache.pages import PagePool
+
+
+def prefix_key(tokens: np.ndarray) -> bytes:
+    """Stable identity of a token prefix (exact content, not a digest —
+    collisions would silently cross-wire two requests' caches)."""
+    return np.ascontiguousarray(np.asarray(tokens, np.int32)).tobytes()
+
+
+@dataclasses.dataclass
+class PrefixEntry:
+    """One registered prompt prefix resident in the pool."""
+    page_ids: Tuple[int, ...]          # pages covering positions [0, length)
+    length: int                        # prompt tokens covered
+    first_token: int                   # argmax at the last prompt position
+
+
+class PrefixRegistry:
+    """LRU-bounded map: prompt hash -> resident prefix pages."""
+
+    def __init__(self, pool: PagePool, capacity: int = 64):
+        if capacity < 0:
+            raise ValueError(f"capacity must be >= 0, got {capacity}")
+        self.pool = pool
+        self.capacity = capacity
+        self._entries: "OrderedDict[bytes, PrefixEntry]" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def lookup(self, tokens: np.ndarray) -> Optional[PrefixEntry]:
+        """Exact-prompt hit or None; hits refresh LRU order."""
+        entry = self._entries.get(prefix_key(tokens))
+        if entry is None:
+            self.misses += 1
+            return None
+        self._entries.move_to_end(prefix_key(tokens))
+        self.hits += 1
+        return entry
+
+    def register(self, tokens: np.ndarray, page_ids, first_token: int
+                 ) -> Optional[PrefixEntry]:
+        """Pin ``page_ids`` as the resident cache of ``tokens`` (the
+        registry takes one reference per page).  Registering an
+        already-known prompt is a no-op; a zero-capacity registry
+        registers nothing.  May evict the LRU entry."""
+        if self.capacity == 0:
+            return None
+        key = prefix_key(tokens)
+        if key in self._entries:
+            self._entries.move_to_end(key)
+            return self._entries[key]
+        entry = PrefixEntry(tuple(int(p) for p in page_ids),
+                            int(len(tokens)), int(first_token))
+        self.pool.retain(entry.page_ids)
+        self._entries[key] = entry
+        while len(self._entries) > self.capacity:
+            _, old = self._entries.popitem(last=False)
+            self.pool.release(old.page_ids)
+        return entry
+
+    def evict_lru(self) -> bool:
+        """Drop the least-recently-used entry (frees its references).
+        Returns False when the registry is empty."""
+        if not self._entries:
+            return False
+        _, old = self._entries.popitem(last=False)
+        self.pool.release(old.page_ids)
+        return True
+
+    def flush(self) -> None:
+        """Drop every entry (e.g. before endpoint teardown)."""
+        while self.evict_lru():
+            pass

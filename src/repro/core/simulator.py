@@ -32,6 +32,7 @@ from typing import Deque, Dict, List, Optional, Tuple, Union
 
 import numpy as np
 
+from repro.cache import pages_needed
 from repro.core import offload
 from repro.core.metrics import MetricsRegistry
 from repro.core.policy import AutoOffload, ControlLoop, Policy, PolicySpec
@@ -174,20 +175,50 @@ def _tier_service_mean(prof: WorkloadProfile, topo: Topology, i: int) -> float:
 
 
 class _SimTier:
-    """Mutable per-tier state inside one run."""
+    """Mutable per-tier state inside one run.
+
+    A tier whose spec declares ``page_size`` carries the same page
+    ledger the live paged endpoint keeps: every resident request holds
+    the pages its (prompt_len, max_new) extent reserves — the one shared
+    formula, :func:`repro.cache.pages_needed` — and admission requires
+    both a slot and the pages.  Dense tiers keep ``page_need == 0``
+    everywhere, so their math (and the event/RNG sequence) is untouched.
+    """
 
     def __init__(self, spec: TierSpec, service_mean: float):
         self.spec = spec
         self.service_mean = service_mean
         self.busy = 0
-        self.queue: Deque[Tuple[float]] = deque()   # (arrival_time,)
+        # (arrival_time, size) where size = (prompt_len, max_new) for
+        # trace-driven arrivals, None otherwise
+        self.queue: Deque[Tuple[float, Optional[Tuple[int, int]]]] = deque()
         self.served = 0
+        self.pages_total = getattr(spec, "total_pages", 0) or 0
+        self.pages_used = 0
 
     @property
     def queue_cap(self) -> Optional[int]:
         if self.spec.queue_depth_per_slot is None:
             return None
         return self.spec.slots * self.spec.queue_depth_per_slot
+
+    def page_need(self, size: Optional[Tuple[int, int]]) -> int:
+        """Pages a request of ``size`` reserves here (0 on dense tiers;
+        a size-less request conservatively reserves a full row — with
+        the default pool of ``slots`` full rows that makes the page gate
+        coincide exactly with the slot gate)."""
+        if getattr(self.spec, "page_size", None) is None:
+            return 0
+        if size is None:
+            return self.spec.pages_per_row
+        return pages_needed(size[0], max(size[1], 1),
+                            self.spec.page_size, self.spec.max_len)
+
+    def can_serve(self, size: Optional[Tuple[int, int]]) -> bool:
+        """Slot AND page availability (dense tiers: 0 + 0 <= 0)."""
+        return (self.busy < self.spec.slots
+                and self.pages_used + self.page_need(size)
+                <= self.pages_total)
 
 
 class ContinuumSimulator:
@@ -317,7 +348,9 @@ class ContinuumSimulator:
         # pops.  (Policies without a migrate_threshold never delete, so
         # their event trace — and RNG draw sequence — is unchanged.)
         svc_seq = itertools.count()
-        svc_live: Dict[int, Tuple[int, float, float]] = {}  # tok -> (j, arr, t_done)
+        # tok -> (j, arr, t_done, pages_held, size)
+        svc_live: Dict[int, Tuple[int, float, float, int,
+                                  Optional[Tuple[int, int]]]] = {}
         mig_fired = mig_completed = mig_aborted = mig_transit = 0
         # Demand per boundary this interval: boundary b sees the requests
         # that reached tier b (routing or spill) — what its net-aware cap
@@ -353,17 +386,21 @@ class ContinuumSimulator:
             for ev in self.faults:
                 push(ev.t, _FAULT, (ev,))
 
-        def start_service(j: int, ready: float, arr: float):
+        def start_service(j: int, ready: float, arr: float,
+                          size=None):
             tier = tiers[j]
             if j == 0:
                 note_busy(ready)
             tier.busy += 1
+            pages = tier.page_need(size)
+            tier.pages_used += pages
             svc = _service_sample(self.rng, tier.service_mean, prof.cv)
             tok = next(svc_seq)
-            svc_live[tok] = (j, arr, ready + svc)
+            svc_live[tok] = (j, arr, ready + svc, pages, size)
             push(ready + svc, _DONE, (j, arr, tok))
 
-        def resume_service(j: int, t: float, arr: float, remaining: float):
+        def resume_service(j: int, t: float, arr: float, remaining: float,
+                           size=None):
             """Restart a migrated request with its *remaining* work (no
             fresh service sample — migration moves the request, it does
             not restart it)."""
@@ -371,8 +408,10 @@ class ContinuumSimulator:
             if j == 0:
                 note_busy(t)
             tier.busy += 1
+            pages = tier.page_need(size)
+            tier.pages_used += pages
             tok = next(svc_seq)
-            svc_live[tok] = (j, arr, t + remaining)
+            svc_live[tok] = (j, arr, t + remaining, pages, size)
             push(t + remaining, _DONE, (j, arr, tok))
 
         def cross_link(l: int, ready: float,
@@ -416,14 +455,19 @@ class ContinuumSimulator:
             nonlocal failures
             tier = tiers[j]
             while tier.queue:
-                (qarr,) = tier.queue.popleft()
+                qarr, qsize = tier.queue.popleft()
                 if t - qarr > cfg.timeout_s:
                     failures += 1
                     if j < last:
                         self.tier_metrics[j].record_latency(
                             prof.name, t - qarr)
                     continue
-                start_service(j, t, qarr)
+                if not tier.can_serve(qsize):
+                    # freed capacity doesn't cover the head request's
+                    # page reservation: it keeps its place in line
+                    tier.queue.appendleft((qarr, qsize))
+                    break
+                start_service(j, t, qarr, qsize)
                 break
 
         def fire_migrations(t: float):
@@ -453,34 +497,37 @@ class ContinuumSimulator:
                 # longest remaining service first (most slot-hungry);
                 # token order breaks ties deterministically
                 in_svc.sort(key=lambda e: (-(e[1][2] - t), e[0]))
-                for tok, (j, arr, t_done) in in_svc[:n_mig]:
+                for tok, (j, arr, t_done, pages, size) in in_svc[:n_mig]:
                     del svc_live[tok]          # the queued _DONE is stale
                     if j == 0:
                         note_busy(t)
                     tiers[j].busy -= 1
+                    tiers[j].pages_used -= pages
                     mig_fired += 1
                     mig_transit += 1
                     if b + 1 < n_bounds:
                         arrivals_in_interval[b + 1] += 1
                     push(cross_link(b, t), _MIGRATE,
-                         (b + 1, arr, t_done - t, j))
+                         (b + 1, arr, t_done - t, j, size))
                     backfill(j, t)             # the freed slot backfills
 
-        def admit(j: int, ready: float, arr: float):
+        def admit(j: int, ready: float, arr: float, size=None):
             """Hand a request to tier j; overflow spills down the chain
-            (waterfall) or rejects, per the topology."""
+            (waterfall) or rejects, per the topology.  Paged tiers gate
+            on pages AND a slot (memory actually reserved), mirroring
+            ``Tier.admission_budget``."""
             nonlocal failures, spilled
             tier = tiers[j]
             cap = tier.queue_cap
-            if tier_up[j] and tier.busy < tier.spec.slots:
-                start_service(j, ready, arr)
+            if tier_up[j] and tier.can_serve(size):
+                start_service(j, ready, arr, size)
             elif tier_up[j] and (cap is None or len(tier.queue) < cap):
-                tier.queue.append((arr,))
+                tier.queue.append((arr, size))
             elif topo.waterfall and j < last and link_state[j].up:
                 spilled += 1
                 if j + 1 < n_bounds:
                     arrivals_in_interval[j + 1] += 1
-                admit(j + 1, cross_link(j, ready), arr)
+                admit(j + 1, cross_link(j, ready), arr, size)
             else:
                 # queue-proxy overflow: immediate 503
                 failures += 1
@@ -498,6 +545,11 @@ class ContinuumSimulator:
                 j = self._choose_tier(self.rng.uniform(), R_cur)
                 arr_bytes = (float(self.trace.payload_bytes[payload[0]])
                              if payload else None)
+                size = None
+                if payload:
+                    i = payload[0]
+                    size = (max(int(self.trace.prompt_len[i]), 1),
+                            max(int(self.trace.max_new[i]), 1))
                 jt = route_target(j)
                 if jt is None:
                     # every serviceable tier is unreachable: fast 503,
@@ -512,7 +564,7 @@ class ContinuumSimulator:
                     ready = t
                     for l in range(j):
                         ready = cross_link(l, ready, arr_bytes)
-                    admit(j, ready, t)
+                    admit(j, ready, t, size)
                 if payload:            # materialized trace: chain next row
                     i = payload[0]
                     if i + 1 < len(self.trace):
@@ -525,11 +577,12 @@ class ContinuumSimulator:
                 j, arr, tok = payload
                 if tok not in svc_live:
                     continue       # stale: the request migrated mid-service
-                del svc_live[tok]
+                rec = svc_live.pop(tok)
                 tier = tiers[j]
                 if j == 0:
                     note_busy(t)
                 tier.busy -= 1
+                tier.pages_used -= rec[3]
                 lat = t - arr
                 # Prometheus sees every completed request's latency,
                 # successful or not; only the success *counter* is gated.
@@ -555,7 +608,7 @@ class ContinuumSimulator:
                     lats.append(lat)
                     valids.append(valid)
                     bq = tiers[b].queue if b < len(tiers) else ()
-                    qages.append([[t - qarr for (qarr,) in bq]])
+                    qages.append([[t - qarr for qarr, _qsize in bq]])
                 R_all = self.control.step_tiers(
                     lats, valids, queue_ages=qages,
                     arrivals=[[c] for c in arrivals_in_interval])
@@ -568,14 +621,14 @@ class ContinuumSimulator:
 
             elif kind == _MIGRATE:
                 # A migrated request's state landed at its destination.
-                dst, arr, remaining, src = payload
+                dst, arr, remaining, src, size = payload
                 mig_transit -= 1
                 if not (link_state[dst - 1].up and tier_up[dst]):
                     # partitioned mid-transfer (or target crashed): the
                     # state never arrives — ABORT back to the source
-                    if tier_up[src] and tiers[src].busy < tiers[src].spec.slots:
+                    if tier_up[src] and tiers[src].can_serve(size):
                         mig_aborted += 1
-                        resume_service(src, t, arr, remaining)
+                        resume_service(src, t, arr, remaining, size)
                     elif tier_up[src]:
                         # source momentarily full: retry the abort
                         mig_transit += 1
@@ -584,17 +637,17 @@ class ContinuumSimulator:
                         # both ends gone: accounted, never silent
                         mig_aborted += 1
                         failures += 1
-                elif tiers[dst].busy < tiers[dst].spec.slots:
+                elif tiers[dst].can_serve(size):
                     # remaining *work* is invariant; the time to finish it
                     # scales with the destination's service speed
                     mig_completed += 1
                     resume_service(dst, t, arr,
                                    remaining * tiers[dst].service_mean
-                                   / tiers[src].service_mean)
-                elif tier_up[src] and tiers[src].busy < tiers[src].spec.slots:
+                                   / tiers[src].service_mean, size)
+                elif tier_up[src] and tiers[src].can_serve(size):
                     # destination full: ABORT — resume at the source
                     mig_aborted += 1
-                    resume_service(src, t, arr, remaining)
+                    resume_service(src, t, arr, remaining, size)
                 else:
                     # both ends full: the landed state waits and retries
                     # next control interval — remaining work preserved,
@@ -628,13 +681,14 @@ class ContinuumSimulator:
                     resident = [(tok, rec) for tok, rec in svc_live.items()
                                 if rec[0] == i]
                     lost = []
-                    for tok, (_, arr, _t_done) in resident:
+                    for tok, (_, arr, _t_done, _pg, rsize) in resident:
                         del svc_live[tok]   # its queued _DONE is now stale
-                        lost.append(arr)
+                        lost.append((arr, rsize))
                     tiers[i].busy = 0
-                    lost += [qarr for (qarr,) in tiers[i].queue]
+                    tiers[i].pages_used = 0
+                    lost += list(tiers[i].queue)
                     tiers[i].queue.clear()
-                    for arr in lost:
+                    for arr, lsize in lost:
                         alt = route_target(i)
                         if alt is None:
                             failures += 1
@@ -643,7 +697,7 @@ class ContinuumSimulator:
                         ready = t
                         for l in range(min(i, alt), max(i, alt)):
                             ready = cross_link(l, ready)
-                        admit(alt, ready, arr)
+                        admit(alt, ready, arr, lsize)
                 else:          # restore_tier: the pool comes back idle
                     tier_up[ev.target] = True
 

@@ -51,6 +51,14 @@ class TierSpec:
         each ``_SimTier`` queue, the live runtime bounds each tier's
         :class:`~repro.serving.tiers.Gateway` backlog at
         ``slots * queue_depth_per_slot``.
+
+    ``page_size`` switches this tier's endpoints to the paged KV pool
+    (``repro.cache``): admission is then bounded by free *pages* —
+    memory actually reserved — not slot count alone.  ``pool_pages``
+    sizes the pool (default ``slots * max_len/page_size``: the same
+    bytes a dense pool of ``slots`` rows holds).  Both deployments honor
+    it: the live tier's endpoints reserve page tables, the simulator's
+    per-tier capacity model tracks the same page ledger.
     """
 
     name: str
@@ -63,9 +71,39 @@ class TierSpec:
     autoscaling: Optional[AutoscalingPolicy] = None
     stable_window_s: float = 60.0
     panic_window_s: float = 6.0
+    # --- paged KV pool (None = dense per-slot rows) ---------------------
+    page_size: Optional[int] = None
+    pool_pages: Optional[int] = None
     # --- simulator-only knobs -------------------------------------------
     service_rate_mult: Optional[float] = None
     queue_depth_per_slot: Optional[int] = 8
+
+    def __post_init__(self):
+        if self.page_size is not None:
+            if self.page_size <= 0 or self.max_len % self.page_size:
+                raise ValueError(
+                    f"page_size must divide max_len ({self.max_len}), "
+                    f"got {self.page_size}")
+            ppr = self.max_len // self.page_size
+            if self.pool_pages is not None and self.pool_pages < ppr:
+                raise ValueError(
+                    f"pool_pages={self.pool_pages} cannot hold one full "
+                    f"row ({ppr} pages)")
+        elif self.pool_pages is not None:
+            raise ValueError("pool_pages requires page_size")
+
+    @property
+    def pages_per_row(self) -> int:
+        return 0 if self.page_size is None else self.max_len // self.page_size
+
+    @property
+    def total_pages(self) -> int:
+        """Usable pool pages (0 for dense tiers)."""
+        if self.page_size is None:
+            return 0
+        if self.pool_pages is not None:
+            return self.pool_pages
+        return self.slots * self.pages_per_row
 
 
 @dataclasses.dataclass(frozen=True)

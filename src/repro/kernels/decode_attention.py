@@ -74,6 +74,116 @@ def _kernel(q_ref, k_ref, v_ref, qp_ref, kp_ref, o_ref,
         o_ref[0, 0, :, :] = (acc_ref[...] / den).astype(o_ref.dtype)
 
 
+def _paged_kernel(pt_ref, q_ref, k_ref, v_ref, qp_ref, kp_ref, o_ref,
+                  acc_ref, m_ref, l_ref, *, scale: float,
+                  window: Optional[int], softcap: Optional[float], nk: int):
+    """Same online-softmax body as :func:`_kernel`, but each kv step's
+    K/V tile is fetched *through the page table*: the BlockSpec index map
+    reads ``pt_ref`` (scalar-prefetched, so the DMA address is known
+    before the step runs) and pulls page ``pt[b, ki]`` of the pool
+    instead of the ki-th contiguous tile of a dense row.  Pages holding
+    no valid positions (the null page a short row's table is padded
+    with) contribute nothing: their ``kv_pos`` entries are -1, the same
+    predicate that masks empty slots of a dense rolling cache.  With
+    ``blk_k == page_size`` the reduction order over positions is
+    identical to the dense kernel's, so outputs match bit-for-bit."""
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    qg = q_ref[0, 0, :, :].astype(jnp.float32) * scale       # (G, D)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)                # (page, D)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)                # (page, D)
+    qp = qp_ref[0]                                           # ()
+    kp = kp_ref[0, :]                                        # (page,)
+
+    s = jax.lax.dot_general(qg, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (G, page)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    d = qp - kp
+    ok = (kp >= 0) & (d >= 0)
+    if window is not None:
+        ok &= d < window
+    s = jnp.where(ok[None, :], s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    alive = m_new > NEG_INF / 2
+    p = jnp.where(alive[:, None], jnp.exp(s - m_new[:, None]), 0.0)
+    corr = jnp.where(alive, jnp.exp(m_prev - m_new), 1.0)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+    m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _out():
+        den = jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0, 0, :, :] = (acc_ref[...] / den).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "softcap",
+                                             "interpret"))
+def paged_decode_attention(q, k_pages, v_pages, page_tables, q_pos,
+                           kv_pos_pages, *,
+                           window: Optional[int] = None,
+                           softcap: Optional[float] = None,
+                           interpret: bool = False):
+    """Flash-decode over a paged KV pool.
+
+    q: (B,Hq,D); k_pages/v_pages: (P, page, Hkv, D) — the page pool;
+    page_tables: (B, pages_per_row) int32, short rows padded with the id
+    of a scrubbed null page (kv_pos == -1 everywhere); q_pos: (B,);
+    kv_pos_pages: (P, page).
+
+    Returns (B,Hq,D) in q.dtype — bit-identical to ``decode_attention``
+    with ``blk_k=page`` on the gathered contiguous view.
+    """
+    B, Hq, D = q.shape
+    page, Hkv = k_pages.shape[1], k_pages.shape[2]
+    ppr = page_tables.shape[1]
+    G = Hq // Hkv
+    scale = D ** -0.5
+
+    qg = q.reshape(B, Hkv, G, D)
+    kernel = functools.partial(_paged_kernel, scale=scale, window=window,
+                               softcap=softcap, nk=ppr)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, Hkv, ppr),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, h, ki, pt: (b, h, 0, 0)),
+            pl.BlockSpec((1, page, 1, D),
+                         lambda b, h, ki, pt: (pt[b, ki], 0, h, 0)),
+            pl.BlockSpec((1, page, 1, D),
+                         lambda b, h, ki, pt: (pt[b, ki], 0, h, 0)),
+            pl.BlockSpec((1,), lambda b, h, ki, pt: (b,)),
+            pl.BlockSpec((1, page), lambda b, h, ki, pt: (pt[b, ki], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D),
+                               lambda b, h, ki, pt: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, D), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(page_tables, qg, k_pages, v_pages, q_pos, kv_pos_pages)
+    return out.reshape(B, Hq, D)
+
+
 @functools.partial(jax.jit, static_argnames=("window", "softcap", "blk_k",
                                              "interpret"))
 def decode_attention(q, k, v, q_pos, kv_pos, *,

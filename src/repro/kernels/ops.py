@@ -72,6 +72,17 @@ def decode_attention(q, k, v, q_pos, kv_pos, window=None, softcap=None):
                                  softcap=softcap, interpret=_on_cpu())
 
 
+def paged_decode_attention(q, k_pages, v_pages, page_tables, q_pos,
+                           kv_pos_pages, window=None, softcap=None):
+    """Flash-decode straight off a paged KV pool (no gather roundtrip):
+    K/V tiles stream through the request's page table via scalar
+    prefetch.  Bit-identical to ``decode_attention`` with
+    ``blk_k=page_size`` on the gathered view."""
+    return _dec.paged_decode_attention(q, k_pages, v_pages, page_tables,
+                                       q_pos, kv_pos_pages, window=window,
+                                       softcap=softcap, interpret=_on_cpu())
+
+
 # --------------------------------------------------------------------------
 # WKV6
 # --------------------------------------------------------------------------

@@ -73,6 +73,7 @@ import dataclasses
 import math
 import time
 import warnings
+import zlib
 from collections import deque
 from typing import Deque, Dict, List, Optional, Tuple
 
@@ -254,8 +255,12 @@ class Tier:
 
     def deploy(self, fn_name: str, model_cfg: ModelConfig, params,
                autoscaling: Optional[AutoscalingPolicy] = None) -> None:
+        page_size = getattr(self.cfg, "page_size", None)
         self.endpoints[fn_name] = Endpoint(
-            model_cfg, params, slots=self.cfg.slots, max_len=self.cfg.max_len)
+            model_cfg, params, slots=self.cfg.slots, max_len=self.cfg.max_len,
+            paged=page_size is not None,
+            page_size=page_size if page_size is not None else 16,
+            total_pages=getattr(self.cfg, "pool_pages", None))
         self.inflight.setdefault(fn_name, {})
         self.metrics.register(fn_name)
         # A TierSpec that declares its own KPA bounds governs its whole
@@ -292,6 +297,33 @@ class Tier:
     def inflight_count(self, fn_name: str) -> int:
         return len(self.inflight.get(fn_name, ()))
 
+    def admission_budget(self, fn_name: str, items: List["_Queued"],
+                         cap: Optional[int] = None) -> int:
+        """How many of ``items`` (in order) this tier can admit right
+        now.  Dense pools: free slots (bounded by ``cap``, the caller's
+        KPA-admitted concurrency).  Paged pools additionally walk the
+        queue head charging each request the pages it must be able to
+        reserve (``Endpoint.page_need`` — sharing-blind, so never an
+        overclaim): admission is gated on *memory actually reserved*,
+        not slot count alone."""
+        ep = self.endpoints[fn_name]
+        budget = self.free_slots(fn_name)
+        if cap is not None:
+            budget = min(budget, cap)
+        budget = max(0, min(budget, len(items)))
+        if not ep.paged or budget == 0:
+            return budget
+        free = ep.admissible_pages
+        n = 0
+        for item in items[:budget]:
+            need = ep.page_need(len(item.req.tokens),
+                                max(item.req.max_new, 1))
+            if need > free:
+                break
+            free -= need
+            n += 1
+        return n
+
     # -- continuous-batching decode loop ------------------------------------
     # One scheduler step is: decode every in-flight slot once (``step``),
     # retire finished rows immediately, then admit queued requests into the
@@ -312,13 +344,15 @@ class Tier:
         ep = self.endpoints[fn_name]
         claimed: List[Tuple[_Queued, int]] = []
         for item in items:
-            slot = ep.try_claim()
+            slot = ep.try_claim(tokens=item.req.tokens,
+                                max_new=max(item.req.max_new, 1))
             if slot is None:
                 for _, s in claimed:
                     ep.release(s)
                 raise RuntimeError(
                     f"{self.name}/{fn_name}: admission of {len(items)} "
-                    f"exceeds free slots — scheduler admitted past capacity")
+                    f"exceeds free slots/pages — scheduler admitted past "
+                    f"capacity")
             claimed.append((item, slot))
         try:
             firsts = ep.prefill_batch(
@@ -401,13 +435,14 @@ class Tier:
         ep = self.endpoints[fn_name]
         claimed: List[Tuple[Request, float, int]] = []
         for req, t_submit in items:
-            slot = ep.try_claim()
+            slot = ep.try_claim(tokens=req.tokens,
+                                max_new=max(req.max_new, 1))
             if slot is None:
                 for _, _, s in claimed:
                     ep.release(s)
                 raise RuntimeError(
                     f"{self.name}/{fn_name}: wave of {len(items)} exceeds "
-                    f"free slots — scheduler admitted past capacity")
+                    f"free slots/pages — scheduler admitted past capacity")
             claimed.append((req, t_submit, slot))
 
         try:
@@ -478,7 +513,12 @@ class EdgeCloudContinuum:
                  req_bytes: Optional[float] = None,
                  trace: Optional[Trace] = None,
                  faults: Optional[FaultSchedule] = None,
-                 trace_vocab: int = 128):
+                 trace_vocab: int = 128,
+                 trace_prompts: str = "random"):
+        if trace_prompts not in ("random", "per_fn"):
+            raise ValueError(
+                f"trace_prompts must be 'random' or 'per_fn', "
+                f"got {trace_prompts!r}")
         if scheduler not in ("continuous", "wave"):
             raise ValueError(
                 f"scheduler must be 'continuous' or 'wave', got {scheduler!r}")
@@ -582,6 +622,12 @@ class EdgeCloudContinuum:
         # with prompt tokens drawn from a dedicated deterministic RNG.
         self.trace = trace
         self.trace_vocab = trace_vocab
+        # "random": every arrival draws fresh prompt tokens (the
+        # historical behavior).  "per_fn": a function's prompt is a
+        # deterministic function of (fn, prompt_len) — invocations of the
+        # same function share their prompt, modeling the shared
+        # system/function prompt that makes prefix caching pay.
+        self.trace_prompts = trace_prompts
         self.trace_requests: List[Request] = []
         self._trace_pos = 0
         self._trace_rng = np.random.default_rng(seed)
@@ -827,11 +873,18 @@ class EdgeCloudContinuum:
                         "trace ingestion before any function is deployed")
                 name = self.fn_names[int(self.trace.fn[i])
                                      % len(self.fn_names)]
+            L = max(int(self.trace.prompt_len[i]), 1)
+            if self.trace_prompts == "per_fn":
+                fn_rng = np.random.default_rng(
+                    zlib.crc32(f"{name}:{L}".encode()))
+                tokens = fn_rng.integers(0, self.trace_vocab,
+                                         L).astype(np.int32)
+            else:
+                tokens = self._trace_rng.integers(
+                    0, self.trace_vocab, L).astype(np.int32)
             req = Request(
                 rid=len(self.trace_requests),
-                tokens=self._trace_rng.integers(
-                    0, self.trace_vocab,
-                    max(int(self.trace.prompt_len[i]), 1)).astype(np.int32),
+                tokens=tokens,
                 max_new=max(int(self.trace.max_new[i]), 1))
             self.trace_requests.append(req)
             self.submit(name, req)
@@ -967,12 +1020,31 @@ class EdgeCloudContinuum:
         # ages idle functions to zero).
         for ti, tier in enumerate(self.tiers):
             for fn, asc in tier.autoscalers.items():
-                conc = (len(pending.get((ti, fn), []))
-                        + tier.inflight_count(fn)
-                        # migrated state headed here is inbound demand —
-                        # the destination must not scale to zero under it
-                        + sum(1 for tr in self.migrations
-                              if tr.dst == ti and tr.fn == fn))
+                ep = tier.endpoints.get(fn)
+                if ep is not None and ep.paged:
+                    # Paged pools meter demand in pages (memory actually
+                    # reserved), normalized to full-row equivalents so the
+                    # target-concurrency units match the dense scrape: a
+                    # half-row request is half a unit of demand.
+                    ppr = ep.pages_per_row
+                    pages = sum(
+                        ep.page_need(len(it.req.tokens),
+                                     max(it.req.max_new, 1))
+                        for it in pending.get((ti, fn), []))
+                    pages += ep.resident_page_demand()
+                    pages += sum(
+                        ep.pages_for(max(tr.pos + tr.need - len(tr.toks), 1))
+                        for tr in self.migrations
+                        if tr.dst == ti and tr.fn == fn)
+                    conc = pages / ppr
+                else:
+                    conc = (len(pending.get((ti, fn), []))
+                            + tier.inflight_count(fn)
+                            # migrated state headed here is inbound demand
+                            # — the destination must not scale to zero
+                            # under it
+                            + sum(1 for tr in self.migrations
+                                  if tr.dst == ti and tr.fn == fn))
                 asc.observe(self._clock, float(conc))
                 asc.desired(self._clock)
 
@@ -1134,7 +1206,13 @@ class EdgeCloudContinuum:
                 tier.free_slots(tr.fn),
                 tier.capacity(tr.fn) - tier.inflight_count(tr.fn)) <= 0:
             return False
-        slot = ep.try_claim()
+        # the landing row must reserve pages for its remaining decode —
+        # a page-full destination aborts the migration (in pages, like
+        # admission), even under force
+        extent = max(tr.pos + max(tr.need - len(tr.toks), 0), 1)
+        if ep.paged and ep.admissible_pages < ep.pages_for(extent):
+            return False
+        slot = ep.try_claim(reserve_tokens=extent if ep.paged else None)
         if slot is None:
             return False
         ep.insert_rows([tr.rows], [slot], [tr.pos])
@@ -1272,8 +1350,9 @@ class EdgeCloudContinuum:
                     continue
                 lst[:] = [it for it in lst if not self._settle_resolved(it)]
                 tier = self.tiers[ti]
-                budget = min(tier.free_slots(fn),
-                             tier.capacity(fn) - tier.inflight_count(fn))
+                budget = tier.admission_budget(
+                    fn, lst,
+                    cap=tier.capacity(fn) - tier.inflight_count(fn))
                 if budget <= 0 or not lst:
                     continue
                 batch, pending[(ti, fn)] = lst[:budget], lst[budget:]
@@ -1365,8 +1444,10 @@ class EdgeCloudContinuum:
                     if (lst and ti < last
                             and self.link_state[ti].up
                             and self.tier_up[ti + 1]
-                            and min(tier.free_slots(fn), tier.capacity(fn)
-                                    - tier.inflight_count(fn)) <= 0):
+                            and tier.admission_budget(
+                                fn, lst[:1],
+                                cap=tier.capacity(fn)
+                                - tier.inflight_count(fn)) <= 0):
                         for it in lst:
                             self._cross_link(it, ti)
                         pending.setdefault((ti + 1, fn), []).extend(lst)
@@ -1379,7 +1460,7 @@ class EdgeCloudContinuum:
             # replica next scrape; don't deadlock on degenerate autoscaling
             # bounds in the meantime.
             for (ti, fn), lst in pending.items():
-                if lst and self.tiers[ti].free_slots(fn) > 0:
+                if lst and self.tiers[ti].admission_budget(fn, lst[:1]) > 0:
                     admit_batch(ti, fn, [lst.pop(0)])
                     waves += 1
                     progress = True
@@ -1476,7 +1557,8 @@ class EdgeCloudContinuum:
                 if not lst or capped():
                     continue
                 tier = self.tiers[ti]
-                budget = min(tier.free_slots(fn), tier.capacity(fn))
+                budget = tier.admission_budget(fn, lst,
+                                               cap=tier.capacity(fn))
                 if budget <= 0:
                     continue
                 batch, pending[(ti, fn)] = lst[:budget], lst[budget:]
@@ -1491,8 +1573,8 @@ class EdgeCloudContinuum:
                     if (lst and ti < last
                             and self.link_state[ti].up
                             and self.tier_up[ti + 1]
-                            and min(tier.free_slots(fn),
-                                    tier.capacity(fn)) <= 0):
+                            and tier.admission_budget(
+                                fn, lst[:1], cap=tier.capacity(fn)) <= 0):
                         for it in lst:
                             self._cross_link(it, ti)
                         pending.setdefault((ti + 1, fn), []).extend(lst)
@@ -1504,7 +1586,8 @@ class EdgeCloudContinuum:
                 # desired replica next scrape; don't deadlock on degenerate
                 # autoscaling bounds in the meantime.
                 for (ti, fn), lst in pending.items():
-                    if lst and self.tiers[ti].free_slots(fn) > 0:
+                    if lst and self.tiers[ti].admission_budget(
+                            fn, lst[:1]) > 0:
                         dispatch(ti, fn, [lst.pop(0)])
                         progress = True
                         break

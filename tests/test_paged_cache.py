@@ -1,0 +1,362 @@
+"""Paged KV-cache subsystem: allocator + prefix-registry units, the
+paged Pallas decode kernel vs the dense kernel on the gathered view,
+endpoint admission-in-pages, page-granular migration payloads, and the
+simulator's matching page ledger.
+
+The correctness contract under test everywhere: paged mode changes how
+memory is *held*, never what the model computes — token streams, kernel
+outputs, and migration payload contents are bit-identical to dense.
+"""
+
+import functools
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.cache import (PagePool, PrefixRegistry, pages_for_tokens,
+                         pages_needed)
+from repro.core.simulator import ContinuumSimulator, SimConfig
+from repro.core.topology import LinkSpec, TierSpec, Topology
+from repro.kernels import decode_attention as dec_mod
+from repro.models import model_zoo
+from repro.serving.engine import Endpoint
+
+
+@functools.lru_cache(maxsize=1)
+def _model():
+    cfg = configs.get_smoke_config("stablelm-1.6b")
+    params = model_zoo.init(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+# --------------------------------------------------------------------------
+# arithmetic: the one shared sizing formula
+# --------------------------------------------------------------------------
+
+
+def test_pages_needed_formula():
+    # extent = prompt + max_new - 1; last generated token is never written
+    assert pages_needed(1, 1, 16, 64) == 1
+    assert pages_needed(16, 1, 16, 64) == 1          # extent 16 -> 1 page
+    assert pages_needed(16, 2, 16, 64) == 2          # extent 17 -> 2 pages
+    assert pages_needed(0, 1, 16, 64) == 1           # never zero pages
+    assert pages_needed(33, 15, 16, 64) == 3         # extent 47
+    # wrap: extent past max_len touches every page of the rolling row
+    assert pages_needed(60, 8, 16, 64) == 4
+    assert pages_needed(64, 1, 16, 64) == 4
+    # max_new <= 0 is treated as 1 (a claim always decodes at least once)
+    assert pages_needed(5, 0, 16, 64) == 1
+    with pytest.raises(ValueError):
+        pages_needed(5, 1, 0, 64)
+
+
+def test_pages_for_tokens():
+    assert pages_for_tokens(0, 16) == 0
+    assert pages_for_tokens(1, 16) == 1
+    assert pages_for_tokens(16, 16) == 1
+    assert pages_for_tokens(17, 16) == 2
+    assert pages_for_tokens(-3, 16) == 0
+
+
+# --------------------------------------------------------------------------
+# PagePool: refcounted free-list allocator
+# --------------------------------------------------------------------------
+
+
+def test_page_pool_alloc_release_refcounts():
+    pool = PagePool(8, 16)
+    ids = pool.alloc(3)
+    assert sorted(set(ids)) == sorted(ids) and len(ids) == 3
+    assert pool.free_pages == 5 and pool.used_pages == 3
+    assert all(pool.refcount(p) == 1 for p in ids)
+    assert not any(pool.is_shared(p) for p in ids)
+    # all-or-nothing: an oversized request allocates nothing
+    assert pool.alloc(6) is None
+    assert pool.free_pages == 5
+    # sharing: retain bumps, release drops; page frees on last reference
+    pool.retain(ids[:1])
+    assert pool.is_shared(ids[0])
+    pool.release(ids[:1])
+    assert pool.refcount(ids[0]) == 1 and pool.free_pages == 5
+    pool.release(ids)
+    assert pool.free_pages == 8 and pool.check_balanced()
+    # LIFO reuse keeps the working set compact
+    assert pool.alloc(1) == [ids[-1]]
+    pool.release([ids[-1]])
+
+
+def test_page_pool_guards():
+    pool = PagePool(4, 16)
+    with pytest.raises(ValueError):
+        pool.retain([2])                 # never allocated
+    ids = pool.alloc(2)
+    pool.release(ids)
+    with pytest.raises(ValueError):
+        pool.release(ids[:1])            # double free
+    with pytest.raises(ValueError):
+        pool.alloc(-1)
+    with pytest.raises(ValueError):
+        PagePool(0, 16)
+    assert pool.check_balanced()
+
+
+# --------------------------------------------------------------------------
+# PrefixRegistry: LRU-bounded pinned prefixes
+# --------------------------------------------------------------------------
+
+
+def test_prefix_registry_lru_and_refcounts():
+    pool = PagePool(8, 16)
+    reg = PrefixRegistry(pool, capacity=2)
+    pa, pb, pc = pool.alloc(2), pool.alloc(2), pool.alloc(2)
+    ta = np.arange(3, dtype=np.int32)
+    tb = np.arange(4, dtype=np.int32)
+    tc = np.arange(5, dtype=np.int32)
+
+    reg.register(ta, pa, first_token=7)
+    reg.register(tb, pb, first_token=8)
+    assert all(pool.refcount(p) == 2 for p in pa + pb)   # registry pins
+    # the owning rows release; registry alone keeps the pages resident
+    pool.release(pa)
+    pool.release(pb)
+    pool.release(pc)
+    # pc freed + the 2 never-allocated pages; pa/pb stay pinned
+    assert pool.free_pages == 4
+
+    hit = reg.lookup(ta)                                 # refreshes LRU
+    assert hit is not None and hit.first_token == 7 and hit.length == 3
+    assert reg.lookup(np.arange(9, dtype=np.int32)) is None
+    assert reg.hits == 1 and reg.misses == 1
+
+    pd = pool.alloc(2)
+    reg.register(tc, pd, first_token=9)
+    pool.release(pd)
+    # capacity 2: B (now LRU, A was refreshed) evicted, its pages freed
+    assert len(reg) == 2
+    assert reg.lookup(tb) is None
+    assert reg.lookup(ta) is not None and reg.lookup(tc) is not None
+    # re-registering a known prompt is a no-op (no double pin)
+    reg.register(ta, pa, first_token=7)
+    assert all(pool.refcount(p) == 1 for p in pa)
+
+    assert reg.evict_lru() and reg.evict_lru() and not reg.evict_lru()
+    assert pool.free_pages == 8 and pool.check_balanced()
+
+
+def test_prefix_registry_zero_capacity():
+    pool = PagePool(4, 16)
+    reg = PrefixRegistry(pool, capacity=0)
+    ids = pool.alloc(1)
+    assert reg.register(np.arange(2, dtype=np.int32), ids, 1) is None
+    assert len(reg) == 0 and pool.refcount(ids[0]) == 1
+    pool.release(ids)
+    assert pool.check_balanced()
+
+
+# --------------------------------------------------------------------------
+# paged Pallas kernel == dense kernel on the gathered view (bitwise)
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("window,softcap",
+                         [(None, None), (13, None), (None, 20.0), (13, 5.0)])
+def test_paged_decode_kernel_bitwise(window, softcap):
+    rng = np.random.default_rng(0)
+    page, ppr, Hkv, G, D = 16, 4, 2, 2, 64
+    B, P = 3, 9                                  # 9 used pages + 1 null
+    lengths = [5, 64, 37]
+
+    k_pool = rng.standard_normal((P + 1, page, Hkv, D)).astype(np.float32)
+    v_pool = rng.standard_normal((P + 1, page, Hkv, D)).astype(np.float32)
+    kv_pos_pages = np.full((P + 1, page), -1, np.int32)
+    tables = np.full((B, ppr), P, np.int32)      # short rows pad with null
+    nxt = iter(range(P))
+    for b, L in enumerate(lengths):
+        for i in range(pages_for_tokens(L, page)):
+            pid = next(nxt)
+            tables[b, i] = pid
+            lo = i * page
+            n = min(L - lo, page)
+            kv_pos_pages[pid, :n] = np.arange(lo, lo + n)
+
+    q = rng.standard_normal((B, G * Hkv, D)).astype(np.float32)
+    q_pos = np.asarray(lengths, np.int32)
+    out_paged = dec_mod.paged_decode_attention(
+        q, k_pool, v_pool, tables, q_pos, kv_pos_pages,
+        window=window, softcap=softcap, interpret=True)
+    # the contiguous view the page tables describe
+    k_dense = k_pool[tables].reshape(B, ppr * page, Hkv, D)
+    v_dense = v_pool[tables].reshape(B, ppr * page, Hkv, D)
+    kv_pos = kv_pos_pages[tables].reshape(B, ppr * page)
+    out_dense = dec_mod.decode_attention(
+        q, k_dense, v_dense, q_pos, kv_pos,
+        window=window, softcap=softcap, blk_k=page, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out_paged),
+                                  np.asarray(out_dense))
+
+
+# --------------------------------------------------------------------------
+# Endpoint: admission is bounded by pages, not slots alone
+# --------------------------------------------------------------------------
+
+
+def test_endpoint_admission_in_pages():
+    cfg, params = _model()
+    # pool of exactly one row: 4 pages of 8 tokens
+    ep = Endpoint(cfg, params, slots=4, max_len=32, paged=True, page_size=8,
+                  total_pages=4, prefix_cache=False)
+    rng = np.random.default_rng(0)
+    toks = rng.integers(0, 64, 20).astype(np.int32)
+    assert ep.page_need(20, 8) == 4                    # extent 27 -> 4 pages
+    s0 = ep.try_claim(tokens=toks, max_new=8)
+    assert s0 is not None and ep.free_pages == 0
+    # slots remain, pages don't: the claim fails without allocating
+    assert ep.try_claim(tokens=toks, max_new=8) is None
+    assert ep.active == 1 and ep.pool.check_balanced()
+    # a request whose extent fits the free pages... still none free
+    assert ep.try_claim(tokens=toks[:4], max_new=1) is None
+    ep.release(s0)
+    assert ep.free_pages == 4 and ep.admissible_pages == 4
+    s1 = ep.try_claim(tokens=toks[:4], max_new=1)      # 1 page
+    assert s1 is not None and ep.free_pages == 3
+    s2 = ep.try_claim(tokens=toks[:4], max_new=1)
+    assert s2 is not None and ep.free_pages == 2       # packs 2 where dense=1
+    ep.release(s1)
+    ep.release(s2)
+    assert ep.pool.check_balanced() and ep.free_pages == 4
+
+
+def test_endpoint_registry_backpressure():
+    """Pages pinned only by the prefix registry are reclaimable: a claim
+    that needs them evicts LRU entries instead of failing."""
+    cfg, params = _model()
+    ep = Endpoint(cfg, params, slots=2, max_len=32, paged=True, page_size=8,
+                  total_pages=4)
+    rng = np.random.default_rng(1)
+    a = rng.integers(0, 64, 10).astype(np.int32)
+    s = ep.try_claim(tokens=a, max_new=2)
+    ep.prefill_batch({s: a})
+    ep.release(s)
+    assert len(ep.prefix) == 1
+    pinned = ep.used_pages
+    assert pinned > 0 and ep.admissible_pages == ep.total_pages
+    # a different prompt wanting the whole pool evicts the registry
+    b = rng.integers(64, 128, 20).astype(np.int32)
+    s2 = ep.try_claim(tokens=b, max_new=8)             # needs all 4 pages
+    assert s2 is not None and len(ep.prefix) == 0
+    ep.release(s2)
+    assert ep.pool.check_balanced()
+
+
+def test_cache_nbytes_page_granularity():
+    """Satellite: migration payload accounting rounds up to whole pages
+    in paged mode, and a partially-filled paged row ships strictly fewer
+    bytes than a dense full row."""
+    cfg, params = _model()
+    dense = Endpoint(cfg, params, slots=2, max_len=32)
+    paged = Endpoint(cfg, params, slots=2, max_len=32, paged=True,
+                     page_size=8)
+    # page rounding: every length within one page costs the same
+    assert paged.cache_nbytes_per_row(1) == paged.cache_nbytes_per_row(8)
+    assert paged.cache_nbytes_per_row(9) > paged.cache_nbytes_per_row(8)
+    # at page boundaries the two layouts agree (same filled positions)
+    assert paged.cache_nbytes_per_row(16) == dense.cache_nbytes_per_row(16)
+    # rounding only ever adds, never removes
+    for L in (1, 5, 9, 17, 31, 32):
+        assert (paged.cache_nbytes_per_row(L)
+                >= dense.cache_nbytes_per_row(L))
+    assert (paged.cache_nbytes_per_row(40)
+            == paged.cache_nbytes_per_row(32))         # capped at max_len
+
+    # live payloads: extract a 5-token row from each layout
+    rng = np.random.default_rng(2)
+    toks = rng.integers(0, 64, 5).astype(np.int32)
+    sd = dense.try_claim(tokens=toks, max_new=2)
+    sp = paged.try_claim(tokens=toks, max_new=2)
+    dense.prefill_batch({sd: toks})
+    paged.prefill_batch({sp: toks})
+    d_state, = dense.extract_rows([sd])
+    p_state, = paged.extract_rows([sp])
+    d_bytes = float(sum(l.nbytes for l in d_state))
+    assert p_state.n_pages == 1 and p_state.nbytes < d_bytes
+    dense.release(sd)
+    paged.release(sp)
+
+
+def test_reset_slot_from_row_template():
+    """Satellite: reset_slot restores a used row to init values from the
+    single-row template (no full-pool init_cache per call) — the row is
+    bit-identical to a never-used endpoint's."""
+    cfg, params = _model()
+    ep = Endpoint(cfg, params, slots=2, max_len=32)
+    fresh = Endpoint(cfg, params, slots=2, max_len=32)
+    rng = np.random.default_rng(3)
+    toks = rng.integers(0, 64, 6).astype(np.int32)
+    s = ep.try_claim(tokens=toks, max_new=3)
+    cur = {s: ep.prefill_batch({s: toks})[s]}
+    ep.decode_all(cur)
+    ep.reset_slot(s)
+    for got, want, ax in zip(jax.tree_util.tree_leaves(ep.cache),
+                             jax.tree_util.tree_leaves(fresh.cache),
+                             ep._batch_axes):
+        if ax is None:
+            continue
+        np.testing.assert_array_equal(
+            np.take(np.asarray(got), s, axis=ax),
+            np.take(np.asarray(want), s, axis=ax))
+    ep.release(s)
+
+
+# --------------------------------------------------------------------------
+# simulator: the matching page ledger
+# --------------------------------------------------------------------------
+
+def _sim_topo(page_size=None, pool_pages=None):
+    edge = TierSpec("edge", slots=4, max_len=32, queue_depth_per_slot=2,
+                    page_size=page_size, pool_pages=pool_pages)
+    cloud = TierSpec("cloud", slots=16, max_len=32,
+                     queue_depth_per_slot=None)
+    return Topology((edge, cloud), (LinkSpec(rtt_s=0.0),), waterfall=False)
+
+
+def test_sim_default_pool_matches_dense():
+    """With the default pool (slots full rows) and size-less requests the
+    page gate is exactly the slot gate: the paged spec reproduces the
+    dense run event-for-event."""
+    cfg = SimConfig(duration_s=20.0, low_rps=12.0)
+    a = ContinuumSimulator("io", 0.0, cfg, topology=_sim_topo()).run()
+    b = ContinuumSimulator("io", 0.0, cfg,
+                           topology=_sim_topo(page_size=8)).run()
+    assert (a.successes, a.failures, a.spilled) == \
+        (b.successes, b.failures, b.spilled)
+    assert a.tier_counts == b.tier_counts
+    np.testing.assert_array_equal(a.offload_pct, b.offload_pct)
+
+
+def test_sim_tight_pool_gates_admission():
+    """A pool smaller than slots full rows binds before the slot count —
+    edge throughput drops, yet conservation still holds."""
+    # saturating load: edge capacity is 4 slots / 0.4 s = 10 rps
+    cfg = SimConfig(duration_s=20.0, low_rps=12.0)
+    base = ContinuumSimulator("io", 0.0, cfg,
+                              topology=_sim_topo(page_size=8)).run()
+    tight = ContinuumSimulator(
+        "io", 0.0, cfg,
+        topology=_sim_topo(page_size=8, pool_pages=4)).run()
+    assert tight.successes + tight.failures == tight.submitted
+    assert (tight.tier_counts["edge"] < base.tier_counts["edge"])
+    assert tight.failures > base.failures
+
+
+def test_tierspec_page_validation():
+    with pytest.raises(ValueError):
+        TierSpec("t", max_len=32, page_size=5)         # must divide
+    with pytest.raises(ValueError):
+        TierSpec("t", max_len=32, page_size=8, pool_pages=3)   # < one row
+    with pytest.raises(ValueError):
+        TierSpec("t", max_len=32, pool_pages=8)        # needs page_size
+    spec = TierSpec("t", slots=4, max_len=32, page_size=8)
+    assert spec.pages_per_row == 4 and spec.total_pages == 16
+    assert TierSpec("t", max_len=32).total_pages == 0

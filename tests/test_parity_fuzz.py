@@ -310,3 +310,243 @@ def test_step_tiers_parity_with_degraded_link(seed):
         R_live = np.array(cc.control.step_tiers(
             lats, valids, queue_ages=qages, arrivals=arrivals))
         np.testing.assert_array_equal(R_sim, R_live)
+
+
+# --------------------------------------------------------------------------
+# paged KV pool: bit-identity with the dense layout
+# --------------------------------------------------------------------------
+
+
+def _prompt_pool(rng: np.random.Generator, n: int = 3):
+    """A few fixed prompts reused across requests (drives prefix hits)."""
+    return [rng.integers(0, 64, int(L)).astype(np.int32)
+            for L in rng.integers(3, 14, n)]
+
+
+@hypothesis.settings(max_examples=3)
+@hypothesis.given(st.integers(min_value=0, max_value=10_000))
+def test_paged_vs_dense_engine_stream_fuzz(seed):
+    """Token bit-identity under continuous-batching churn: a dense and a
+    paged endpoint driven through the same random admit/decode/retire
+    schedule (random prompt lengths, prompt reuse for prefix hits, slots
+    retiring mid-stream) emit identical token streams at every step."""
+    from repro.serving.engine import Endpoint
+    rng = np.random.default_rng(seed)
+    cfg, params = _model()
+    slots, max_len, page = 3, 32, 8
+    dense = Endpoint(cfg, params, slots=slots, max_len=max_len)
+    paged = Endpoint(cfg, params, slots=slots, max_len=max_len,
+                     paged=True, page_size=page)
+    pool = _prompt_pool(rng)
+    active = {}                       # slot -> [remaining, last_token]
+    for _ in range(24):
+        if len(active) < slots and rng.uniform() < 0.5:
+            toks = (pool[int(rng.integers(0, len(pool)))]
+                    if rng.uniform() < 0.5 else
+                    rng.integers(0, 64,
+                                 int(rng.integers(1, 16))).astype(np.int32))
+            need = int(rng.integers(1, 7))
+            sd = dense.try_claim(tokens=toks, max_new=need)
+            sp = paged.try_claim(tokens=toks, max_new=need)
+            # default pool (slots full rows): page admission never binds
+            # tighter than slots, so the claims march in lockstep
+            assert sd == sp and sd is not None
+            fd = dense.prefill_batch({sd: toks})[sd]
+            fp = paged.prefill_batch({sp: toks})[sp]
+            assert fd == fp
+            active[sd] = [need - 1, fd]
+        retire = [s for s, (rem, _) in active.items() if rem <= 0]
+        for s in retire:
+            dense.release(s)
+            paged.release(s)
+            del active[s]
+        if active and rng.uniform() < 0.9:
+            cur = {s: tok for s, (_, tok) in active.items()}
+            nd = dense.decode_all(dict(cur))
+            np_ = paged.decode_all(dict(cur))
+            assert nd == np_
+            for s in active:
+                active[s] = [active[s][0] - 1, nd[s]]
+    for s in active:
+        dense.release(s)
+        paged.release(s)
+    assert paged.pool.check_balanced()
+    assert paged.prefill_total_tokens > 0
+
+
+def test_paged_cow_keeps_shared_prefix_frozen():
+    """Two requests share a prompt's prefix pages; one decodes past the
+    fork point — the other's view of those pages stays bit-frozen (the
+    write landed in a copy-on-write fork, not the shared page)."""
+    import jax.numpy as jnp
+    from repro.serving.engine import Endpoint
+    cfg, params = _model()
+    ep = Endpoint(cfg, params, slots=2, max_len=32, paged=True, page_size=8)
+    rng = np.random.default_rng(11)
+    toks = rng.integers(0, 64, 12).astype(np.int32)   # 1 full + 1 partial pg
+
+    s0 = ep.try_claim(tokens=toks, max_new=10)
+    f0 = ep.prefill_batch({s0: toks})[s0]
+    s1 = ep.try_claim(tokens=toks, max_new=10)        # registry hit
+    f1 = ep.prefill_batch({s1: toks})[s1]
+    assert f1 == f0
+    t0, t1 = ep._tables[s0], ep._tables[s1]
+    # the full prefix page is physically shared; the partial fork page
+    # was copy-on-write forked at claim, so each row owns its own
+    assert t0[0] == t1[0] and ep.pool.is_shared(t0[0])
+    assert t0[1] != t1[1]
+
+    snap = [np.asarray(l) for l in
+            ep._take_pages(ep.cache, jnp.asarray(t1, jnp.int32))]
+    cur = {s0: f0}
+    for _ in range(8):                 # s0 decodes well past the fork
+        cur = ep.decode_all(cur)
+    after = [np.asarray(l) for l in
+             ep._take_pages(ep.cache, jnp.asarray(t1, jnp.int32))]
+    for a, b in zip(snap, after):
+        np.testing.assert_array_equal(a, b)
+    # ...and s1 decodes on to the same stream a lone request would get
+    cur1 = {s1: f1}
+    for _ in range(3):
+        cur1 = ep.decode_all(cur1)
+    ep.release(s0)
+    ep.release(s1)
+    assert ep.pool.check_balanced()
+
+
+def test_paged_row_migration_midstream():
+    """A paged row extracted mid-stream and inserted into a peer paged
+    endpoint resumes the exact token stream a dense endpoint produces,
+    and the shipped payload is strictly smaller than a dense full row."""
+    from repro.serving.engine import Endpoint
+    cfg, params = _model()
+    rng = np.random.default_rng(23)
+    toks = rng.integers(0, 64, 9).astype(np.int32)
+    total_new = 9
+
+    dense = Endpoint(cfg, params, slots=2, max_len=32)
+    sd = dense.try_claim(tokens=toks, max_new=total_new)
+    want = [dense.prefill_batch({sd: toks})[sd]]
+    for _ in range(total_new - 1):
+        want.append(dense.decode_all({sd: want[-1]})[sd])
+
+    src = Endpoint(cfg, params, slots=2, max_len=32, paged=True, page_size=8)
+    dst = Endpoint(cfg, params, slots=2, max_len=32, paged=True, page_size=8)
+    ss = src.try_claim(tokens=toks, max_new=total_new)
+    got = [src.prefill_batch({ss: toks})[ss]]
+    for _ in range(3):
+        got.append(src.decode_all({ss: got[-1]})[ss])
+    state, = src.extract_rows([ss])
+    pos = int(src.slot_pos[ss])
+    d_state, = dense.extract_rows([sd])
+    assert state.nbytes < float(sum(l.nbytes for l in d_state))
+    remaining = total_new - len(got)
+    sr = dst.try_claim(reserve_tokens=pos + remaining)
+    assert sr is not None
+    dst.insert_rows([state], [sr], [pos])
+    src.release(ss)
+    for _ in range(remaining):
+        got.append(dst.decode_all({sr: got[-1]})[sr])
+    assert got == want
+    dst.release(sr)
+    dense.release(sd)
+    assert src.pool.check_balanced() and dst.pool.check_balanced()
+
+
+@hypothesis.settings(max_examples=3)
+@hypothesis.given(st.integers(min_value=0, max_value=10_000))
+def test_paged_continuum_output_parity_fuzz(seed):
+    """Continuum-level bit-identity: the same request set played through
+    a dense-tier arm and a paged-tier arm (default pool, unbounded
+    gateway so nothing 503s) completes with identical per-request token
+    outputs, including duplicated prompts riding the prefix cache."""
+    rng = np.random.default_rng(seed + 55_000)
+    cfg, params = _model()
+
+    def _arm(page_size):
+        topo = Topology(
+            (TierSpec("t0", slots=2, max_len=32, page_size=page_size,
+                      queue_depth_per_slot=None),), (), waterfall=False)
+        cc = Continuum.from_topology(topo, policy=0.0, seed=seed)
+        cc.deploy(FunctionSpec(name="fn", arch="stablelm-1.6b",
+                               autoscaling=AutoscalingPolicy()), cfg, params)
+        return cc
+
+    prompts = _prompt_pool(rng)
+    sizes = [(int(rng.integers(0, len(prompts))), int(rng.integers(1, 5)))
+             for _ in range(int(rng.integers(4, 9)))]
+    arms = []
+    for page_size in (None, 8):
+        cc = _arm(page_size)
+        reqs = []
+        for rid, (pi, mn) in enumerate(sizes):
+            r = Request(rid=rid, tokens=prompts[pi].copy(), max_new=mn)
+            assert cc.submit("fn", r)
+            reqs.append(r)
+        for _ in range(4):
+            cc.tick()
+        cc.drain()
+        arms.append((cc, reqs))
+    (cc_d, reqs_d), (cc_p, reqs_p) = arms
+    for rd, rp in zip(reqs_d, reqs_p):
+        assert not rd.failed and not rp.failed
+        np.testing.assert_array_equal(rd.output, rp.output)
+    ep = cc_p.tiers[0].endpoints["fn"]
+    assert ep.pool.check_balanced()
+    if len({pi for pi, _ in sizes}) < len(sizes):     # any duplicate prompt
+        assert ep.prefill_hit_rate > 0.0
+
+
+@hypothesis.settings(max_examples=4)
+@hypothesis.given(st.integers(min_value=0, max_value=10_000))
+def test_paged_conservation_under_page_exhaustion_fuzz(seed):
+    """Conservation survives a page-starved tier: with a pool of a few
+    pages behind a bounded gateway, every submitted request still ends
+    served-or-failed exactly once and the pool drains balanced."""
+    rng = np.random.default_rng(seed + 66_000)
+    cfg, params = _model()
+    num_tiers = int(rng.integers(1, 3))
+    tiers = tuple(
+        TierSpec(f"t{i}", slots=int(rng.integers(2, 4)), max_len=32,
+                 page_size=8, pool_pages=int(rng.integers(4, 7)),
+                 queue_depth_per_slot=(None if i == num_tiers - 1
+                                       else int(rng.integers(1, 4))))
+        for i in range(num_tiers))
+    topo = Topology(tiers,
+                    tuple(LinkSpec(rtt_s=0.0)
+                          for _ in range(num_tiers - 1)),
+                    waterfall=bool(rng.uniform() < 0.5))
+    policy = _POLICIES[int(rng.integers(0, len(_POLICIES)))]
+    cc = Continuum.from_topology(
+        topo, policy=policy, seed=seed,
+        max_steps_per_tick=(None if rng.uniform() < 0.5
+                            else int(rng.integers(1, 4))))
+    cc.deploy(FunctionSpec(
+        name="fn", arch="stablelm-1.6b",
+        autoscaling=AutoscalingPolicy()), cfg, params)
+
+    reqs, rid = [], 0
+    for _ in range(int(rng.integers(2, 4))):
+        for _ in range(int(rng.integers(2, 6))):
+            # prompts sized so a few-page pool holds 1-2 rows at once
+            r = Request(rid=rid,
+                        tokens=rng.integers(0, 64, int(
+                            rng.integers(4, 20))).astype(np.int32),
+                        max_new=int(rng.integers(1, 6)))
+            cc.submit("fn", r)
+            reqs.append(r)
+            rid += 1
+        cc.tick()
+    cc.drain()
+
+    assert cc.queued == 0 and cc.in_flight == 0
+    assert cc.migrations_open == 0
+    served = sum(sum(r["tiers"].values()) for r in cc.log)
+    failed = sum(r.failed for r in reqs)
+    for r in reqs:
+        assert (r.output is not None) != r.failed, r.rid
+    assert served + failed == rid
+    for tier in cc.tiers:
+        ep = tier.endpoints["fn"]
+        assert ep.pool.check_balanced()
+        assert ep.active == 0
