@@ -35,6 +35,8 @@ def main(out_dir: str | None = None):
     for F, W in ((1, 64), (16, 256), (256, 256)):
         state = offload.OffloadState.init(F, cfg)
         lat = jnp.abs(jax.random.normal(jax.random.PRNGKey(0), (F, W))) + 0.01
+        # lint: ignore[recompile-hazard] -- one wrapper per benchmarked
+        # (F, W) config; _time warms it before the measured loop
         step = jax.jit(lambda s, l: offload.offload_update(s, l, cfg))
         dt = _time(step, state, lat)
         results[f"update_F{F}_W{W}_us"] = dt * 1e6
@@ -55,9 +57,13 @@ def main(out_dir: str | None = None):
         key = jax.random.PRNGKey(3)
         fn_ids = jax.random.randint(jax.random.PRNGKey(4), (B,), 0, F)
         pct = jnp.linspace(0.0, 100.0, F)
+        # lint: ignore[recompile-hazard] -- one wrapper per benchmarked
+        # batch size; _time warms it before the measured loop
         fast = jax.jit(lambda k, p, f: router.route_batch(k, p, f, F))
         dt_s = _time(fast, key, pct, fn_ids)
         results[f"route_batch_B{B}_us"] = dt_s * 1e6
+        # lint: ignore[recompile-hazard] -- one wrapper per benchmarked
+        # batch size; _time warms it before the measured loop
         dense = jax.jit(
             lambda k, p, f: router.route_batch_dense(k, p, f, F))
         dt_d = _time(dense, key, pct, fn_ids, n=10 if B >= 1024 else 50)

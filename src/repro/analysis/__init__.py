@@ -1,0 +1,27 @@
+"""continuum-lint: AST-based static analysis for the sim<->live parity stack.
+
+The repo's core guarantee is that the simulator and the live runtime
+produce bit-identical R_t and token streams.  That guarantee is enforced
+at runtime by parity fuzzers — but a duplicated formula, an impure jitted
+function, or a recompile hazard is caught late (or never) by fuzzing.
+This package is the lint-time half of the contract:
+
+  * :mod:`repro.analysis.engine`   — file loading, suppressions
+    (``# lint: ignore[rule] -- reason``), the committed JSON baseline,
+    ``--json`` stats, and the rule driver.
+  * :mod:`repro.analysis.rules`    — the rule passes (jit-purity,
+    recompile-hazard, parity-drift, swallowed-exception, library-assert).
+  * :mod:`repro.analysis.registry` — the opt-in list of single-source
+    formulas whose re-implementation parity-drift hunts for.
+
+Run it as ``python -m repro.analysis src tests benchmarks``; it exits
+nonzero on any finding that is neither suppressed nor baselined.
+"""
+
+from repro.analysis.engine import (AnalysisConfig, Finding, Report,
+                                   run_analysis)
+from repro.analysis.registry import FORMULAS, Formula
+from repro.analysis.rules import ALL_RULES
+
+__all__ = ["AnalysisConfig", "Finding", "Report", "run_analysis",
+           "FORMULAS", "Formula", "ALL_RULES"]

@@ -1,0 +1,90 @@
+"""continuum-lint CLI: ``python -m repro.analysis [paths...]``.
+
+Exit status is 0 when no NEW findings exist (suppressed and baselined
+findings don't fail the run), 1 otherwise.  ``--write-baseline``
+grandfathers the current findings into the baseline file and exits 0.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from repro.analysis.engine import (load_baseline, run_analysis,
+                                   write_baseline)
+from repro.analysis.rules import ALL_RULES
+
+DEFAULT_PATHS = ("src", "tests", "benchmarks")
+DEFAULT_BASELINE = ".analysis-baseline.json"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="continuum-lint: jit purity, recompile hazards, "
+                    "sim-live parity drift, swallowed exceptions, "
+                    "library asserts")
+    ap.add_argument("paths", nargs="*", default=list(DEFAULT_PATHS),
+                    help="files or directories to lint "
+                         f"(default: {' '.join(DEFAULT_PATHS)})")
+    ap.add_argument("--root", default=".",
+                    help="repo root paths are relative to (default: cwd)")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help="baseline JSON of grandfathered findings "
+                         f"(default: {DEFAULT_BASELINE})")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="ignore the baseline file entirely")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="grandfather current findings into the "
+                         "baseline and exit 0")
+    ap.add_argument("--json", nargs="?", const="-", metavar="FILE",
+                    help="emit stats JSON to FILE (or stdout with no "
+                         "argument)")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalog and exit")
+    ap.add_argument("-q", "--quiet", action="store_true",
+                    help="suppress per-finding lines (summary only)")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rule in ALL_RULES:
+            print(f"{rule.name}: {rule.synopsis}")
+        return 0
+
+    root = Path(args.root).resolve()
+    baseline_path = root / args.baseline
+    baseline = {} if args.no_baseline else load_baseline(baseline_path)
+
+    report = run_analysis(args.paths, root=root, baseline=baseline)
+
+    if args.write_baseline:
+        write_baseline(baseline_path, report)
+        total = len(report.findings) + len(report.baselined)
+        print(f"baseline written: {baseline_path} "
+              f"({total} grandfathered finding"
+              f"{'s' if total != 1 else ''})")
+        return 0
+
+    if not args.quiet:
+        for f in report.findings:
+            print(f.render())
+
+    stats = report.stats()
+    if args.json:
+        blob = json.dumps(stats, indent=2)
+        if args.json == "-":
+            print(blob)
+        else:
+            Path(args.json).write_text(blob + "\n", encoding="utf-8")
+
+    summary = (f"{report.files} files: {stats['new']} new, "
+               f"{stats['suppressed']} suppressed, "
+               f"{stats['baselined']} baselined")
+    print(summary, file=sys.stderr)
+    return 0 if report.clean else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,331 @@
+"""continuum-lint engine: files, suppressions, baseline, rule driver.
+
+The engine is pure AST analysis — analyzed files are never imported, so
+linting ``src tests benchmarks`` cannot execute repo code or require its
+runtime dependencies.
+
+Suppression syntax (a reason is mandatory — a suppression that does not
+say why is itself a finding):
+
+    x = risky()           # lint: ignore[rule-id] -- why this is fine
+    # lint: ignore[rule-a,rule-b] -- a comment-only directive covers the
+    # first code line after its comment block
+    y = risky()
+
+File-level (first 15 lines of the module):
+
+    # lint: ignore-file[rule-id] -- why the whole file opts out
+
+The baseline is a committed JSON file of grandfathered finding keys: a
+key hashes (rule, path, source line text, occurrence index), so findings
+survive unrelated line-number churn but die when the offending line is
+edited.  ``--write-baseline`` refreshes it; new findings (not suppressed,
+not baselined) are what fail CI.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import hashlib
+import io
+import json
+import re
+import tokenize
+from pathlib import Path
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
+
+from repro.analysis.registry import FORMULAS, Formula
+
+_SUPPRESS_RE = re.compile(
+    r"#\s*lint:\s*(ignore-file|ignore)"
+    r"(?:\[([^\]]*)\])?"
+    r"(?:\s*--\s*(\S.*?))?\s*$")
+
+#: lines from the top of a file within which ``ignore-file`` is honored
+_FILE_SUPPRESS_SPAN = 15
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation at one source location."""
+
+    rule: str
+    path: str            # posix path relative to the analysis root
+    line: int            # 1-based
+    col: int             # 0-based
+    message: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}:{self.col + 1}: " \
+               f"[{self.rule}] {self.message}"
+
+
+@dataclasses.dataclass(frozen=True)
+class AnalysisConfig:
+    """Knobs the rule passes consult (tests override these to point at
+    fixture trees instead of the real repo layout)."""
+
+    formulas: Tuple[Formula, ...] = FORMULAS
+    #: path prefixes where swallowed-exception treats ANY broad catch as
+    #: a finding (the serving/control hot paths)
+    hot_paths: Tuple[str, ...] = ("src/repro/serving", "src/repro/core",
+                                  "src/repro/cache")
+    #: path prefixes that count as shipped library code (library-assert,
+    #: swallowed-exception outside hot paths)
+    library_roots: Tuple[str, ...] = ("src/repro",)
+    #: minimum normalized-AST node count for an expression-level
+    #: parity-drift match (whole-def matches have no floor)
+    min_expr_nodes: int = 8
+
+    def in_hot_path(self, path: str) -> bool:
+        return any(path.startswith(p) for p in self.hot_paths)
+
+    def in_library(self, path: str) -> bool:
+        return any(path.startswith(p) for p in self.library_roots)
+
+
+class Module:
+    """One parsed source file plus its suppression directives."""
+
+    def __init__(self, path: str, source: str):
+        self.path = path
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree: Optional[ast.Module] = None
+        self.syntax_error: Optional[str] = None
+        #: line -> {rule: reason}
+        self.line_suppressions: Dict[int, Dict[str, str]] = {}
+        #: rule -> reason (whole file)
+        self.file_suppressions: Dict[str, str] = {}
+        self.bad_suppressions: List[Finding] = []
+        try:
+            self.tree = ast.parse(source)
+        except SyntaxError as e:
+            self.syntax_error = f"line {e.lineno}: {e.msg}"
+        self._parse_suppressions()
+
+    def _parse_suppressions(self) -> None:
+        # Only genuine COMMENT tokens count — a suppression example quoted
+        # inside a docstring must not suppress (or mis-parse as) anything.
+        for i, text, col in self._comments():
+            m = _SUPPRESS_RE.search(text)
+            if not m:
+                continue
+            kind, rules, reason = m.group(1), m.group(2), m.group(3)
+            if not rules or not rules.strip() or not reason:
+                self.bad_suppressions.append(Finding(
+                    "bad-suppression", self.path, i, col,
+                    "suppression needs an explicit rule list and a "
+                    "reason: `# lint: ignore[rule] -- reason`"))
+                continue
+            names = [r.strip() for r in rules.split(",") if r.strip()]
+            if kind == "ignore-file":
+                if i > _FILE_SUPPRESS_SPAN:
+                    self.bad_suppressions.append(Finding(
+                        "bad-suppression", self.path, i, col,
+                        f"ignore-file must appear in the first "
+                        f"{_FILE_SUPPRESS_SPAN} lines"))
+                    continue
+                for r in names:
+                    self.file_suppressions[r] = reason
+                continue
+            # A directive on a comment-only line covers the first CODE
+            # line after the comment block (the reason may span several
+            # comment lines); the directive's own line is covered too.
+            targets = [i]
+            if self.line_text(i)[:col].strip() == "":
+                j = i + 1
+                while (j <= len(self.lines)
+                       and self.line_text(j).strip().startswith("#")):
+                    j += 1
+                targets.append(j)
+            for t in targets:
+                slot = self.line_suppressions.setdefault(t, {})
+                for r in names:
+                    slot[r] = reason
+
+    def _comments(self):
+        """Yield ``(line, comment_text, col)`` for every real comment
+        token (tolerant of tokenize errors on partial sources)."""
+        try:
+            toks = tokenize.generate_tokens(
+                io.StringIO(self.source).readline)
+            for tok in toks:
+                if tok.type == tokenize.COMMENT:
+                    yield tok.start[0], tok.string, tok.start[1]
+        except (tokenize.TokenError, IndentationError, SyntaxError):
+            return
+
+    def suppression_for(self, finding: Finding) -> Optional[str]:
+        if finding.rule in self.file_suppressions:
+            return self.file_suppressions[finding.rule]
+        per_line = self.line_suppressions.get(finding.line, {})
+        return per_line.get(finding.rule)
+
+    def line_text(self, line: int) -> str:
+        if 1 <= line <= len(self.lines):
+            return self.lines[line - 1]
+        return ""
+
+
+class AnalysisContext:
+    """Shared state handed to every rule pass."""
+
+    def __init__(self, root: Path, config: AnalysisConfig):
+        self.root = root
+        self.config = config
+        self._cache: Dict[str, Optional[Module]] = {}
+
+    def load(self, relpath: str) -> Optional[Module]:
+        """Parse a module by repo-relative path (cached); None when the
+        file does not exist.  Used by parity-drift to read a formula's
+        canonical home even when it is outside the analyzed paths."""
+        if relpath not in self._cache:
+            p = self.root / relpath
+            if not p.is_file():
+                self._cache[relpath] = None
+            else:
+                self._cache[relpath] = Module(
+                    relpath, p.read_text(encoding="utf-8"))
+        return self._cache[relpath]
+
+
+@dataclasses.dataclass
+class Report:
+    """Outcome of one analysis run, split by disposition."""
+
+    findings: List[Finding]                    # new -> nonzero exit
+    suppressed: List[Tuple[Finding, str]]      # (finding, reason)
+    baselined: List[Finding]
+    files: int
+    keys: Dict[int, str] = dataclasses.field(default_factory=dict)
+
+    @property
+    def clean(self) -> bool:
+        return not self.findings
+
+    def stats(self) -> Dict:
+        per_rule: Dict[str, int] = {}
+        for f in self.findings:
+            per_rule[f.rule] = per_rule.get(f.rule, 0) + 1
+        return {
+            "files": self.files,
+            "new": len(self.findings),
+            "suppressed": len(self.suppressed),
+            "baselined": len(self.baselined),
+            "per_rule": dict(sorted(per_rule.items())),
+            "findings": [
+                {"rule": f.rule, "path": f.path, "line": f.line,
+                 "message": f.message, "key": self.keys.get(id(f), "")}
+                for f in self.findings],
+            "suppressions": [
+                {"rule": f.rule, "path": f.path, "line": f.line,
+                 "reason": reason}
+                for f, reason in self.suppressed],
+        }
+
+
+def finding_key(finding: Finding, line_text: str, occurrence: int) -> str:
+    """Stable identity for baselining: survives line-number churn,
+    invalidates when the offending line's text changes."""
+    blob = f"{finding.rule}|{finding.path}|{line_text.strip()}|{occurrence}"
+    return hashlib.sha1(blob.encode("utf-8")).hexdigest()[:16]
+
+
+def load_baseline(path: Path) -> Dict[str, Dict]:
+    """Baseline file -> {key: entry}; a missing file is an empty baseline."""
+    if not path.is_file():
+        return {}
+    data = json.loads(path.read_text(encoding="utf-8"))
+    return {e["key"]: e for e in data.get("findings", [])}
+
+
+def write_baseline(path: Path, report: Report) -> None:
+    """Grandfather every currently-live finding (new + already baselined)."""
+    entries = []
+    for f in report.findings + report.baselined:
+        entries.append({
+            "key": report.keys[id(f)],
+            "rule": f.rule, "path": f.path, "line": f.line,
+            "message": f.message,
+        })
+    entries.sort(key=lambda e: (e["path"], e["rule"], e["line"]))
+    path.write_text(
+        json.dumps({"version": 1, "findings": entries}, indent=2) + "\n",
+        encoding="utf-8")
+
+
+def iter_py_files(paths: Sequence[str], root: Path) -> Iterator[Path]:
+    for raw in paths:
+        p = (root / raw) if not Path(raw).is_absolute() else Path(raw)
+        if p.is_file() and p.suffix == ".py":
+            yield p
+        elif p.is_dir():
+            for f in sorted(p.rglob("*.py")):
+                parts = f.relative_to(p).parts
+                if any(s.startswith(".") or s == "__pycache__"
+                       for s in parts):
+                    continue
+                yield f
+
+
+def run_analysis(paths: Sequence[str], root: Optional[Path] = None,
+                 config: Optional[AnalysisConfig] = None,
+                 baseline: Optional[Dict[str, Dict]] = None,
+                 rules: Optional[Sequence] = None) -> Report:
+    """Lint every ``*.py`` under ``paths`` (relative to ``root``)."""
+    from repro.analysis.rules import ALL_RULES
+    root = (root or Path.cwd()).resolve()
+    config = config or AnalysisConfig()
+    baseline = baseline or {}
+    rules = list(rules) if rules is not None else list(ALL_RULES)
+    ctx = AnalysisContext(root, config)
+
+    modules: List[Module] = []
+    seen = set()
+    for f in iter_py_files(paths, root):
+        f = f.resolve()
+        if f in seen:
+            continue
+        seen.add(f)
+        try:
+            rel = f.relative_to(root).as_posix()
+        except ValueError:
+            rel = f.as_posix()
+        mod = ctx.load(rel)
+        if mod is not None:
+            modules.append(mod)
+
+    raw: List[Tuple[Module, Finding]] = []
+    for mod in modules:
+        if mod.syntax_error is not None:
+            raw.append((mod, Finding("syntax-error", mod.path, 1, 0,
+                                     mod.syntax_error)))
+            continue
+        for bad in mod.bad_suppressions:
+            raw.append((mod, bad))
+        for rule in rules:
+            for finding in rule.check(mod, ctx):
+                raw.append((mod, finding))
+
+    report = Report(findings=[], suppressed=[], baselined=[],
+                    files=len(modules))
+    occ: Dict[Tuple[str, str, str], int] = {}
+    for mod, finding in raw:
+        reason = mod.suppression_for(finding)
+        if reason is not None and finding.rule != "bad-suppression":
+            report.suppressed.append((finding, reason))
+            continue
+        text = mod.line_text(finding.line)
+        slot = (finding.rule, finding.path, text.strip())
+        n = occ.get(slot, 0)
+        occ[slot] = n + 1
+        key = finding_key(finding, text, n)
+        report.keys[id(finding)] = key
+        if key in baseline:
+            report.baselined.append(finding)
+        else:
+            report.findings.append(finding)
+    report.findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return report

@@ -1,0 +1,116 @@
+"""Registered single-source formulas for the parity-drift rule.
+
+The sim<->live bit-identity contract rests on a handful of arithmetic
+formulas having exactly ONE home that both deployments import — the page
+extent, the link-crossing cost, the Eq-(1)/(3) controller maps, the
+queue-age window mixing.  Re-implementing one of them (instead of
+importing it) is how parity drifts: the copies agree today and diverge at
+the next edit.
+
+This module is the one place such formulas opt in.  Adding a new
+single-source formula to the platform means adding ONE :class:`Formula`
+line here; the parity-drift rule then flags any function or expression
+in the analyzed tree whose normalized AST matches the registered home's
+— anywhere except the home itself.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class Formula:
+    """One registered single-source formula.
+
+    ``home`` is the repo-relative path of the defining module; ``qualname``
+    names the def (``fn`` or ``Class.method``) inside it.  ``why`` is the
+    one-line rationale surfaced in findings, so the fix direction
+    ("import it from <home>") is self-explanatory at the flagged line.
+    """
+
+    name: str
+    home: str
+    qualname: str
+    why: str
+    #: also match expression-level cores extracted from the home's body
+    #: (return values / binop assigns).  Disable for formulas whose core
+    #: is a generic idiom (e.g. a bare ceil-div) that would flag every
+    #: unrelated use of the same arithmetic shape.
+    expr_level: bool = True
+
+
+FORMULAS: Tuple[Formula, ...] = (
+    Formula(
+        name="pages-needed",
+        home="src/repro/cache/pages.py",
+        qualname="pages_needed",
+        why="the ONE page-extent formula shared by engine admission, "
+            "tier budgets, and the simulator's page ledger — a clone "
+            "desyncs live vs simulated capacity",
+    ),
+    Formula(
+        name="token-extent",
+        home="src/repro/cache/pages.py",
+        qualname="token_extent",
+        why="the KV write extent underlying both page reservation and "
+            "the rolling-wrap admission test; a re-typed copy lets the "
+            "two disagree about which requests wrap",
+    ),
+    Formula(
+        name="pages-for-tokens",
+        home="src/repro/cache/pages.py",
+        qualname="pages_for_tokens",
+        why="page count covering a token prefix; cloned ceil-div "
+            "variants drift from the pool's accounting",
+        expr_level=False,  # its core is a bare ceil-div — too generic
+    ),
+    Formula(
+        name="link-latency",
+        home="src/repro/core/topology.py",
+        qualname="LinkSpec.latency_s",
+        why="the RTT + serialization cost charged on every link "
+            "crossing; both runtimes must charge the identical float "
+            "expression or latency clocks diverge",
+    ),
+    Formula(
+        name="eq1-tail-ratio",
+        home="src/repro/core/offload.py",
+        qualname="tail_ratio",
+        why="the floored p95/p50 core both Eq-(1) front ends (latency "
+            "window and histogram sketch) must share — the corners "
+            "(p50=0, NaN) are where clones diverge first",
+    ),
+    Formula(
+        name="eq1-latency-ratio",
+        home="src/repro/core/offload.py",
+        qualname="latency_ratio",
+        why="Eq (1): the p95/p50 tail ratio driving R_t — a second "
+            "implementation breaks bit-identical controller "
+            "trajectories",
+    ),
+    Formula(
+        name="eq3-target-percentage",
+        home="src/repro/core/offload.py",
+        qualname="target_percentage",
+        why="Eq (3): the piecewise-linear ratio->percentage map; sim "
+            "and live share it through offload_update",
+    ),
+    Formula(
+        name="queue-age-mixing",
+        home="src/repro/core/policy.py",
+        qualname="ControlLoop.mix_queue_ages",
+        why="the Eq-(1) window mixing of in-flight queue ages — the "
+            "onset signal; PRs 5-7 fought to keep sim and live on this "
+            "one implementation",
+    ),
+    Formula(
+        name="tier-distribution",
+        home="src/repro/core/policy.py",
+        qualname="Policy.tier_distribution",
+        why="per-boundary R_t -> N-tier routing distribution; the "
+            "waterfall composition must be computed once, not per "
+            "deployment",
+    ),
+)

@@ -1,0 +1,32 @@
+"""Rule registry for continuum-lint.
+
+Every rule is an object with ``name``, ``synopsis`` and
+``check(module, ctx) -> Iterator[Finding]``; the engine runs each over
+every analyzed module.  Order here is cosmetic — the engine re-sorts
+findings by location.
+"""
+
+from __future__ import annotations
+
+from repro.analysis.rules.jit_purity import JitPurityRule
+from repro.analysis.rules.library_assert import LibraryAssertRule
+from repro.analysis.rules.parity_drift import ParityDriftRule
+from repro.analysis.rules.recompile import RecompileHazardRule
+from repro.analysis.rules.swallowed_exception import SwallowedExceptionRule
+
+ALL_RULES = (
+    JitPurityRule(),
+    RecompileHazardRule(),
+    ParityDriftRule(),
+    SwallowedExceptionRule(),
+    LibraryAssertRule(),
+)
+
+__all__ = [
+    "ALL_RULES",
+    "JitPurityRule",
+    "RecompileHazardRule",
+    "ParityDriftRule",
+    "SwallowedExceptionRule",
+    "LibraryAssertRule",
+]

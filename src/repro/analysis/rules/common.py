@@ -1,0 +1,93 @@
+"""Shared AST plumbing for the rule passes."""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Tuple
+
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """``jax.jit`` for ``Attribute(Name)`` chains, ``jit`` for a bare
+    Name; None for anything not a plain dotted path."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def walk_with_parents(tree: ast.AST) -> Iterator[Tuple[ast.AST,
+                                                       Tuple[ast.AST, ...]]]:
+    """Yield ``(node, ancestors)`` depth-first; ancestors outermost-first."""
+    stack: List[Tuple[ast.AST, Tuple[ast.AST, ...]]] = [(tree, ())]
+    while stack:
+        node, parents = stack.pop()
+        yield node, parents
+        child_parents = parents + (node,)
+        for child in reversed(list(ast.iter_child_nodes(node))):
+            stack.append((child, child_parents))
+
+
+def enclosing_function(parents: Tuple[ast.AST, ...]
+                       ) -> Optional[ast.AST]:
+    """Innermost FunctionDef/AsyncFunctionDef/Lambda on the ancestor
+    chain (None at module/class scope)."""
+    for p in reversed(parents):
+        if isinstance(p, (ast.FunctionDef, ast.AsyncFunctionDef,
+                          ast.Lambda)):
+            return p
+    return None
+
+
+def collect_defs(tree: ast.Module) -> Dict[str, List[ast.AST]]:
+    """Every function/method def in the module keyed by BARE name
+    (methods and nested defs included — the jit reachability walk is a
+    deliberate over-approximation)."""
+    defs: Dict[str, List[ast.AST]] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            defs.setdefault(node.name, []).append(node)
+    return defs
+
+
+def qualnames(tree: ast.Module) -> Dict[int, str]:
+    """id(def node) -> dotted qualname (``Class.method``, ``fn.inner``)."""
+    out: Dict[int, str] = {}
+
+    def visit(node: ast.AST, prefix: str) -> None:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.ClassDef)):
+                q = f"{prefix}{child.name}"
+                if not isinstance(child, ast.ClassDef):
+                    out[id(child)] = q
+                visit(child, q + ".")
+            else:
+                visit(child, prefix)
+
+    visit(tree, "")
+    return out
+
+
+def arg_names(fn: ast.AST) -> List[str]:
+    """Positional-capable parameter names, in order (posonly + args)."""
+    a = fn.args
+    return [x.arg for x in list(a.posonlyargs) + list(a.args)]
+
+
+def all_arg_names(fn: ast.AST) -> List[str]:
+    a = fn.args
+    names = [x.arg for x in
+             list(a.posonlyargs) + list(a.args) + list(a.kwonlyargs)]
+    if a.vararg:
+        names.append(a.vararg.arg)
+    if a.kwarg:
+        names.append(a.kwarg.arg)
+    return names
+
+
+def node_count(node: ast.AST) -> int:
+    return sum(1 for _ in ast.walk(node))

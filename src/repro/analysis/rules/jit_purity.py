@@ -1,0 +1,241 @@
+"""jit-purity: impure operations inside jit-reachable functions, plus
+unseeded RNG anywhere.
+
+A function traced by ``jax.jit``/``pl.pallas_call`` runs its Python body
+ONCE; host clocks, RNG draws, prints, and global mutation silently
+freeze into the compiled program (or desync it from the simulator).  The
+pass seeds on every def that is jitted — decorated with ``@jax.jit`` /
+``@functools.partial(jax.jit, ...)`` or passed to ``jax.jit(...)`` /
+``pl.pallas_call(...)`` — and propagates reachability through same-module
+calls and function-valued references (``jax.lax.scan(step, ...)``).
+Cross-module reachability is intentionally out of scope: each module's
+jitted surface is checked where it is defined.
+
+The RNG sub-check runs everywhere (not just under jit): the platform's
+determinism contract requires every generator to descend from an
+explicit seed threaded through config, so module-global numpy/stdlib RNG
+state and seedless constructors are findings in host code too.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List, Set
+
+from repro.analysis.engine import AnalysisContext, Finding, Module
+from repro.analysis.rules.common import (collect_defs, dotted_name,
+                                         walk_with_parents)
+
+JIT_WRAPPERS = {
+    "jax.jit", "jit", "jax.pmap", "pmap", "pjit",
+    "pl.pallas_call", "pallas_call",
+}
+PARTIAL = {"functools.partial", "partial"}
+
+_HOST_CLOCKS = {
+    "time.time", "time.perf_counter", "time.monotonic",
+    "time.process_time", "time.time_ns", "time.perf_counter_ns",
+    "time.monotonic_ns", "datetime.datetime.now", "datetime.now",
+}
+_HOST_SYNC_ATTRS = {"item", "tolist", "block_until_ready"}
+_HOST_SYNC_CALLS = {"jax.device_get", "np.asarray", "np.array",
+                    "numpy.asarray", "numpy.array"}
+
+#: module-global numpy RNG functions (shared mutable state, unseedable
+#: per-callsite)
+_NP_GLOBAL_RNG = {
+    "rand", "randn", "randint", "random", "random_sample", "ranf",
+    "sample", "normal", "uniform", "choice", "shuffle", "permutation",
+    "poisson", "exponential", "beta", "gamma", "binomial", "lognormal",
+    "standard_normal", "bytes", "seed", "integers",
+}
+#: stdlib ``random`` module-level functions (same problem)
+_STDLIB_GLOBAL_RNG = {
+    "random", "randint", "uniform", "choice", "choices", "shuffle",
+    "sample", "gauss", "randrange", "betavariate", "expovariate",
+    "normalvariate", "seed", "getrandbits",
+}
+#: constructors that are fine WITH a seed argument, findings without one
+_SEEDABLE_CTORS = {
+    "np.random.default_rng", "numpy.random.default_rng",
+    "np.random.RandomState", "numpy.random.RandomState",
+    "random.Random", "jax.random.PRNGKey", "jax.random.key",
+}
+
+
+def _jit_target_names(call: ast.Call) -> List[str]:
+    """Local def names passed to a jit-wrapper call (``jax.jit(fn)``)."""
+    return [a.id for a in call.args if isinstance(a, ast.Name)]
+
+
+def _is_partial_jit(call: ast.Call) -> bool:
+    if dotted_name(call.func) not in PARTIAL or not call.args:
+        return False
+    return dotted_name(call.args[0]) in JIT_WRAPPERS
+
+
+class JitPurityRule:
+    name = "jit-purity"
+    synopsis = ("host clocks, RNG, print, global/nonlocal mutation, and "
+                "host syncs inside jit-reachable functions; unseeded RNG "
+                "anywhere")
+
+    def check(self, mod: Module, ctx: AnalysisContext
+              ) -> Iterator[Finding]:
+        tree = mod.tree
+        defs = collect_defs(tree)
+
+        # --- seed set: defs that are jitted at their definition or by
+        # --- being passed to a jit wrapper anywhere in the module
+        seeds: Set[str] = set()
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for dec in node.decorator_list:
+                    d = dotted_name(dec)
+                    if d in JIT_WRAPPERS:
+                        seeds.add(node.name)
+                    elif isinstance(dec, ast.Call) and (
+                            dotted_name(dec.func) in JIT_WRAPPERS
+                            or _is_partial_jit(dec)):
+                        seeds.add(node.name)
+            elif isinstance(node, ast.Call):
+                if dotted_name(node.func) in JIT_WRAPPERS:
+                    seeds.update(n for n in _jit_target_names(node)
+                                 if n in defs)
+                elif _is_partial_jit(node):
+                    seeds.update(n for n in _jit_target_names(node)[1:]
+                                 if n in defs)
+
+        # --- propagate reachability through calls, self.method calls,
+        # --- and function-valued references (lax.scan(step, ...))
+        reachable: Set[int] = set()
+        work = [d for n in seeds for d in defs[n]]
+        while work:
+            fn = work.pop()
+            if id(fn) in reachable:
+                continue
+            reachable.add(id(fn))
+            for node in ast.walk(fn):
+                names: List[str] = []
+                if isinstance(node, ast.Name) and node.id in defs:
+                    names.append(node.id)
+                elif (isinstance(node, ast.Attribute)
+                      and isinstance(node.value, ast.Name)
+                      and node.value.id in ("self", "cls")
+                      and node.attr in defs):
+                    names.append(node.attr)
+                for n in names:
+                    for d in defs[n]:
+                        if id(d) not in reachable:
+                            work.append(d)
+
+        # --- findings (deduped: a nested reachable def is walked both
+        # --- on its own and inside its enclosing reachable def) -------
+        in_jit_rng: Set[int] = set()
+        seen: Set[tuple] = set()
+        for fn_node in (n for n in ast.walk(tree)
+                        if id(n) in reachable):
+            for f in self._check_jitted(mod, fn_node, in_jit_rng):
+                slot = (f.line, f.col, f.message)
+                if slot not in seen:
+                    seen.add(slot)
+                    yield f
+        yield from self._check_rng(mod, tree, in_jit_rng)
+
+    # -- impurities inside one jit-reachable def ------------------------
+    # (nested defs are excluded from the walk: a reachable nested def is
+    # checked under its OWN name, an unreachable one is dead code to jit)
+    @staticmethod
+    def _walk_own_body(fn: ast.AST) -> Iterator[ast.AST]:
+        stack = list(fn.body)
+        while stack:
+            node = stack.pop()
+            yield node
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            stack.extend(ast.iter_child_nodes(node))
+
+    def _check_jitted(self, mod: Module, fn: ast.AST,
+                      in_jit_rng: Set[int]) -> Iterator[Finding]:
+        where = f"jit-reachable `{fn.name}`"
+        for node in self._walk_own_body(fn):
+            if isinstance(node, (ast.Global, ast.Nonlocal)):
+                kw = "global" if isinstance(node, ast.Global) else "nonlocal"
+                yield Finding(
+                    self.name, mod.path, node.lineno, node.col_offset,
+                    f"`{kw} {', '.join(node.names)}` in {where}: mutation "
+                    f"under trace runs once at compile time")
+                continue
+            if not isinstance(node, ast.Call):
+                continue
+            d = dotted_name(node.func)
+            if d in _HOST_CLOCKS:
+                yield Finding(
+                    self.name, mod.path, node.lineno, node.col_offset,
+                    f"host clock `{d}()` in {where}: traced once, "
+                    f"constant in the compiled program")
+            elif d and (d.startswith("np.random.")
+                        or d.startswith("numpy.random.")
+                        or d.startswith("random.")):
+                in_jit_rng.add(id(node))
+                yield Finding(
+                    self.name, mod.path, node.lineno, node.col_offset,
+                    f"`{d}()` in {where}: host RNG draws freeze at trace "
+                    f"time — use jax.random with a threaded key")
+            elif d == "print":
+                yield Finding(
+                    self.name, mod.path, node.lineno, node.col_offset,
+                    f"`print` in {where}: runs at trace time only — use "
+                    f"jax.debug.print if intentional")
+            elif d in _HOST_SYNC_CALLS:
+                yield Finding(
+                    self.name, mod.path, node.lineno, node.col_offset,
+                    f"`{d}()` in {where}: host sync/materialization of a "
+                    f"traced value")
+            elif (isinstance(node.func, ast.Attribute)
+                  and node.func.attr in _HOST_SYNC_ATTRS
+                  and not node.args and not node.keywords):
+                yield Finding(
+                    self.name, mod.path, node.lineno, node.col_offset,
+                    f"`.{node.func.attr}()` in {where}: blocking host "
+                    f"sync on a traced value")
+            elif (d in ("float", "int", "bool") and len(node.args) == 1
+                  and not node.keywords
+                  and isinstance(node.args[0], (ast.Name, ast.Attribute))):
+                yield Finding(
+                    self.name, mod.path, node.lineno, node.col_offset,
+                    f"`{d}(...)` on a value in {where}: casting a tracer "
+                    f"to a Python scalar forces a host sync "
+                    f"(ConcretizationError at best)")
+
+    # -- unseeded / module-global RNG anywhere --------------------------
+    def _check_rng(self, mod: Module, tree: ast.Module,
+                   in_jit_rng: Set[int]) -> Iterator[Finding]:
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call) or id(node) in in_jit_rng:
+                continue
+            d = dotted_name(node.func)
+            if d is None:
+                continue
+            if d in _SEEDABLE_CTORS:
+                if not node.args and not node.keywords:
+                    yield Finding(
+                        self.name, mod.path, node.lineno, node.col_offset,
+                        f"`{d}()` without a seed: determinism requires "
+                        f"every generator to derive from an explicit "
+                        f"seed threaded through config")
+                continue
+            parts = d.split(".")
+            if (len(parts) == 3 and parts[0] in ("np", "numpy")
+                    and parts[1] == "random"
+                    and parts[2] in _NP_GLOBAL_RNG):
+                yield Finding(
+                    self.name, mod.path, node.lineno, node.col_offset,
+                    f"module-global `{d}()`: shared mutable RNG state — "
+                    f"derive a Generator from an explicit seed instead")
+            elif (len(parts) == 2 and parts[0] == "random"
+                    and parts[1] in _STDLIB_GLOBAL_RNG):
+                yield Finding(
+                    self.name, mod.path, node.lineno, node.col_offset,
+                    f"module-global `{d}()`: shared mutable RNG state — "
+                    f"use random.Random(seed) or np.random.default_rng")

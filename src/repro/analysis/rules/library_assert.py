@@ -1,0 +1,36 @@
+"""library-assert: ``assert`` used for runtime validation in shipped code.
+
+``python -O`` strips every assert.  In ``src/repro`` an assert guarding
+a capacity invariant or a shape check therefore only protects debug
+runs; production (or any harness run with ``-O``) sails past it and
+fails later, somewhere less diagnosable.  Library code must raise
+explicit exceptions (``ValueError``/``RuntimeError``) instead.
+
+Tests are exempt (pytest rewrites their asserts), as is anything outside
+``config.library_roots``.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis.engine import AnalysisContext, Finding, Module
+
+
+class LibraryAssertRule:
+    name = "library-assert"
+    synopsis = ("`assert` statements in shipped library code that "
+                "`python -O` would strip — use explicit raises")
+
+    def check(self, mod: Module, ctx: AnalysisContext
+              ) -> Iterator[Finding]:
+        if not ctx.config.in_library(mod.path):
+            return
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Assert):
+                yield Finding(
+                    self.name, mod.path, node.lineno, node.col_offset,
+                    "`assert` in library code is stripped by `python "
+                    "-O`: raise ValueError/RuntimeError explicitly so "
+                    "the invariant holds in every run mode")

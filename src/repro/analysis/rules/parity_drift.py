@@ -1,0 +1,233 @@
+"""parity-drift: re-implementations of registered single-source formulas.
+
+The sim<->live contract (ROADMAP north star) holds because a handful of
+arithmetic formulas live in exactly one module that both deployments
+import.  This pass detects the failure mode that broke parity twice
+before PR 5: someone re-types the arithmetic instead of importing it.
+
+Detection is normalized-AST fingerprinting:
+
+  * every registered :class:`~repro.analysis.registry.Formula` home def
+    is parsed and fingerprinted — once whole-def (argument names mapped
+    to positional placeholders in signature order) and once per
+    "expression core" (return values and binop-shaped assignments,
+    fresh placeholder mapping each);
+  * every def and expression core in an analyzed library module is
+    fingerprinted the same way and compared.
+
+Normalization maps variable names to first-occurrence placeholders, so
+``rtt + n / bw`` matches ``self.rtt_s + nbytes / self.bandwidth_Bps``
+structurally, and keeps attribute/call names literal so ``np.maximum``
+still matches ``jnp.maximum`` (sim-vs-live spellings) without matching
+unrelated arithmetic.  Docstrings, annotations, and type comments are
+stripped.  Expression cores below ``min_expr_nodes`` nodes are ignored —
+tiny arithmetic is idiom, not a formula.
+
+Scope: library code only (``config.in_library``).  Tests legitimately
+recompute oracles by hand; re-deriving a formula in a test is the point
+of the test.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis.engine import AnalysisContext, Finding, Module
+from repro.analysis.registry import Formula
+from repro.analysis.rules.common import arg_names, node_count, qualnames
+
+
+class _Normalizer(ast.NodeTransformer):
+    """Rewrite Name ids to stable positional placeholders."""
+
+    def __init__(self, pre: Optional[Dict[str, str]] = None):
+        self.mapping: Dict[str, str] = dict(pre or {})
+
+    def visit_Name(self, node: ast.Name) -> ast.Name:
+        if node.id not in self.mapping:
+            self.mapping[node.id] = f"_v{len(self.mapping)}"
+        return ast.copy_location(
+            ast.Name(id=self.mapping[node.id], ctx=ast.Load()), node)
+
+    def visit_Attribute(self, node: ast.Attribute) -> ast.Attribute:
+        # Keep the attribute NAME literal but normalize the value chain:
+        # ``self.rtt_s`` and ``spec.rtt_s`` both become ``_v0.rtt_s``.
+        return ast.copy_location(
+            ast.Attribute(value=self.visit(node.value), attr=node.attr,
+                          ctx=ast.Load()), node)
+
+    def visit_arg(self, node: ast.arg) -> ast.arg:
+        if node.arg not in self.mapping:
+            self.mapping[node.arg] = f"_a{len(self.mapping)}"
+        return ast.arg(arg=self.mapping[node.arg], annotation=None)
+
+
+def _strip(node: ast.AST) -> ast.AST:
+    """Drop docstrings/annotations so formatting never affects the print."""
+    class Cleaner(ast.NodeTransformer):
+        def visit_FunctionDef(self, n):
+            self.generic_visit(n)
+            n.returns = None
+            n.decorator_list = []
+            if (n.body and isinstance(n.body[0], ast.Expr)
+                    and isinstance(n.body[0].value, ast.Constant)
+                    and isinstance(n.body[0].value.value, str)):
+                n.body = n.body[1:] or [ast.Pass()]
+            return n
+        visit_AsyncFunctionDef = visit_FunctionDef
+
+        def visit_AnnAssign(self, n):
+            self.generic_visit(n)
+            if n.value is None:
+                return None
+            return ast.copy_location(
+                ast.Assign(targets=[n.target], value=n.value), n)
+    return Cleaner().visit(node)
+
+
+def fingerprint_def(fn: ast.AST) -> str:
+    """Whole-def fingerprint; argument names pre-seed the mapping in
+    signature order so renamed-but-same-order clones still match."""
+    import copy
+    fn = _strip(copy.deepcopy(fn))
+    pre = {a: f"_a{i}" for i, a in enumerate(arg_names(fn))}
+    norm = _Normalizer(pre)
+    body = [norm.visit(stmt) for stmt in fn.body]
+    return ";".join(ast.dump(ast.fix_missing_locations(s),
+                             include_attributes=False) for s in body)
+
+
+def fingerprint_expr(expr: ast.AST) -> str:
+    import copy
+    norm = _Normalizer()
+    e = norm.visit(copy.deepcopy(expr))
+    return ast.dump(ast.fix_missing_locations(e),
+                    include_attributes=False)
+
+
+_CORE_TYPES = (ast.BinOp, ast.BoolOp, ast.IfExp, ast.Compare)
+
+
+def expr_cores(fn: ast.AST) -> List[ast.AST]:
+    """Expressions inside a def that look like formula arithmetic:
+    return values, and assignment RHSs with arithmetic shape."""
+    out: List[ast.AST] = []
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Return) and node.value is not None:
+            out.append(node.value)
+        elif isinstance(node, ast.Assign) and isinstance(node.value,
+                                                         _CORE_TYPES):
+            out.append(node.value)
+    return out
+
+
+def _find_def(tree: ast.Module, qualname: str) -> Optional[ast.AST]:
+    for node_id, q in qualnames(tree).items():
+        if q == qualname:
+            for node in ast.walk(tree):
+                if id(node) == node_id:
+                    return node
+    return None
+
+
+class ParityDriftRule:
+    name = "parity-drift"
+    synopsis = ("normalized-AST clones of registered single-source "
+                "formulas (pages_needed, LinkSpec.latency_s, "
+                "Eq-(1)/(3) controller maps, queue-age mixing)")
+
+    def check(self, mod: Module, ctx: AnalysisContext
+              ) -> Iterator[Finding]:
+        if not ctx.config.in_library(mod.path):
+            return
+        index = self._formula_index(ctx)
+        if not index:
+            return
+        def_prints, expr_prints = index
+        quals = qualnames(mod.tree)
+
+        #: defs that ARE a canonical home — skip their whole subtree
+        canonical: Set[int] = set()
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, (ast.FunctionDef,
+                                     ast.AsyncFunctionDef)):
+                continue
+            q = quals.get(id(node), node.name)
+            homes = def_prints.get(fingerprint_def(node))
+            if homes:
+                fm = homes[0]
+                if mod.path == fm.home and q == fm.qualname:
+                    canonical.add(id(node))
+
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, (ast.FunctionDef,
+                                     ast.AsyncFunctionDef)):
+                continue
+            if id(node) in canonical:
+                continue
+            q = quals.get(id(node), node.name)
+            homes = def_prints.get(fingerprint_def(node))
+            if homes:
+                fm = homes[0]
+                yield Finding(
+                    self.name, mod.path, node.lineno, node.col_offset,
+                    f"`{q}` re-implements registered formula "
+                    f"[{fm.name}] {fm.home}::{fm.qualname} — import it "
+                    f"instead ({fm.why})")
+                continue  # don't also flag its interior expressions
+            yield from self._check_exprs(mod, node, q, expr_prints,
+                                         canonical, ctx)
+
+    def _check_exprs(self, mod: Module, fn: ast.AST, q: str,
+                     expr_prints: Dict[str, List[Formula]],
+                     canonical: Set[int], ctx: AnalysisContext
+                     ) -> Iterator[Finding]:
+        if any(id(sub) in canonical for sub in ast.walk(fn)
+               if sub is not fn):
+            # a canonical home nested inside — handled at its own level
+            return
+        matched: Set[int] = set()
+        for core in expr_cores(fn):
+            if node_count(core) < ctx.config.min_expr_nodes:
+                continue
+            if any(id(a) in matched for a in ast.walk(core)):
+                continue  # inside an already-matched expression
+            homes = expr_prints.get(fingerprint_expr(core))
+            if not homes:
+                continue
+            fm = homes[0]
+            matched.update(id(n) for n in ast.walk(core))
+            yield Finding(
+                self.name, mod.path, core.lineno, core.col_offset,
+                f"expression in `{q}` clones registered formula "
+                f"[{fm.name}] {fm.home}::{fm.qualname} — call the "
+                f"canonical implementation instead ({fm.why})")
+
+    # ------------------------------------------------------------------
+    def _formula_index(self, ctx: AnalysisContext
+                       ) -> Optional[Tuple[Dict[str, List[Formula]],
+                                           Dict[str, List[Formula]]]]:
+        cached = getattr(ctx, "_parity_index", None)
+        if cached is not None:
+            return cached
+        def_prints: Dict[str, List[Formula]] = {}
+        expr_prints: Dict[str, List[Formula]] = {}
+        for fm in ctx.config.formulas:
+            home = ctx.load(fm.home)
+            if home is None or home.tree is None:
+                continue
+            fn = _find_def(home.tree, fm.qualname)
+            if fn is None:
+                continue
+            def_prints.setdefault(fingerprint_def(fn), []).append(fm)
+            if not fm.expr_level:
+                continue
+            for core in expr_cores(fn):
+                if node_count(core) < ctx.config.min_expr_nodes:
+                    continue
+                expr_prints.setdefault(fingerprint_expr(core),
+                                       []).append(fm)
+        result = (def_prints, expr_prints)
+        ctx._parity_index = result
+        return result

@@ -1,0 +1,365 @@
+"""recompile-hazard: callsite patterns that defeat the jit compile cache.
+
+``jax.jit`` caches by (function identity, static argument values,
+argument shapes/dtypes).  Four patterns silently turn that cache into a
+recompile-per-call treadmill, which on this serving stack means a decode
+step stalling for seconds mid-tick:
+
+  * constructing a jit wrapper inside a loop (fresh identity each
+    iteration);
+  * jitting a lambda/closure inside a repeatedly-called function
+    (fresh identity each call — hoist to ``__init__``/module scope);
+  * feeding an f-string (or any varying string) to a jitted callable —
+    static args hash by value, so every distinct string recompiles;
+  * feeding a loop-varying Python value at a declared static position.
+
+Plus the plain signature bug: ``static_argnums`` out of range /
+``static_argnames`` naming a parameter the target doesn't have, which
+jax only reports at first call (or mis-binds entirely).
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+from repro.analysis.engine import AnalysisContext, Finding, Module
+from repro.analysis.rules.common import (all_arg_names, arg_names,
+                                         dotted_name, enclosing_function,
+                                         walk_with_parents)
+from repro.analysis.rules.jit_purity import JIT_WRAPPERS, _is_partial_jit
+
+#: methods whose body runs once per object, where building a jit wrapper
+#: is the canonical "one compiled program per instance" pattern
+_INIT_METHODS = {"__init__", "__post_init__", "__new__", "__init_subclass__"}
+
+
+def _static_spec(call: ast.Call) -> Tuple[Optional[List[int]],
+                                          Optional[List[str]]]:
+    """Literal static_argnums/static_argnames from a jit call, when
+    they are statically resolvable (None entries otherwise)."""
+    nums: Optional[List[int]] = None
+    names: Optional[List[str]] = None
+    for kw in call.keywords:
+        if kw.arg == "static_argnums":
+            nums = _int_list(kw.value)
+        elif kw.arg == "static_argnames":
+            names = _str_list(kw.value)
+    return nums, names
+
+
+def _int_list(node: ast.AST) -> Optional[List[int]]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return [node.value]
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out = []
+        for e in node.elts:
+            if not (isinstance(e, ast.Constant)
+                    and isinstance(e.value, int)):
+                return None
+            out.append(e.value)
+        return out
+    return None
+
+
+def _str_list(node: ast.AST) -> Optional[List[str]]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return [node.value]
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out = []
+        for e in node.elts:
+            if not (isinstance(e, ast.Constant)
+                    and isinstance(e.value, str)):
+                return None
+            out.append(e.value)
+        return out
+    return None
+
+
+class RecompileHazardRule:
+    name = "recompile-hazard"
+    synopsis = ("jit wrappers built per loop iteration / per call, "
+                "f-string or loop-varying static args, "
+                "static_argnums/static_argnames signature mismatches")
+
+    def check(self, mod: Module, ctx: AnalysisContext
+              ) -> Iterator[Finding]:
+        tree = mod.tree
+        # local def name -> node (unambiguous names only, for signatures)
+        local_defs: Dict[str, List[ast.AST]] = {}
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                local_defs.setdefault(node.name, []).append(node)
+
+        #: names bound to jitted callables -> (static nums, static names,
+        #: target def or None); keys are bare names and ``self.attr``
+        jitted: Dict[str, Tuple[Optional[List[int]], Optional[List[str]],
+                                Optional[ast.AST]]] = {}
+
+        # --- pass 1: decorated defs + jit-wrapper bindings --------------
+        for node, parents in walk_with_parents(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for dec in node.decorator_list:
+                    spec = self._jit_call_spec(dec)
+                    if spec is None:
+                        continue
+                    nums, names = spec
+                    jitted[node.name] = (nums, names, node)
+                    yield from self._check_signature(
+                        mod, dec, node, nums, names,
+                        skip_first=bool(parents
+                                        and isinstance(parents[-1],
+                                                       ast.ClassDef)))
+            elif isinstance(node, ast.Assign) and isinstance(node.value,
+                                                             ast.Call):
+                spec = self._jit_call_spec(node.value, require_call=True)
+                if spec is None:
+                    continue
+                nums, names = spec
+                target_def = self._resolve_target(node.value, local_defs)
+                for t in node.targets:
+                    key = self._bind_key(t)
+                    if key:
+                        jitted[key] = (nums, names, target_def)
+                if target_def is not None:
+                    yield from self._check_signature(
+                        mod, node.value, target_def, nums, names)
+
+        # --- pass 2: construction-site and callsite hazards -------------
+        init_scope = self._init_only_helpers(tree)
+        for node, parents in walk_with_parents(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            d = dotted_name(node.func)
+            if d in JIT_WRAPPERS or _is_partial_jit(node):
+                yield from self._check_build_site(mod, node, d, parents,
+                                                  local_defs, init_scope,
+                                                  ctx)
+                continue
+            key = self._call_key(node)
+            if key in jitted:
+                yield from self._check_callsite(mod, node, key,
+                                                jitted[key], parents)
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _jit_call_spec(node: ast.AST, require_call: bool = False
+                       ) -> Optional[Tuple[Optional[List[int]],
+                                           Optional[List[str]]]]:
+        """(static_argnums, static_argnames) when ``node`` is a jit
+        wrapper (bare decorator, call, or partial(jax.jit, ...))."""
+        if isinstance(node, ast.Call):
+            if dotted_name(node.func) in JIT_WRAPPERS:
+                return _static_spec(node)
+            if _is_partial_jit(node):
+                return _static_spec(node)
+            return None
+        if not require_call and dotted_name(node) in JIT_WRAPPERS:
+            return None, None
+        return None
+
+    @staticmethod
+    def _resolve_target(call: ast.Call,
+                        local_defs: Dict[str, List[ast.AST]]
+                        ) -> Optional[ast.AST]:
+        args = call.args
+        if _is_partial_jit(call):
+            args = args[1:]
+        if args and isinstance(args[0], ast.Name):
+            cands = local_defs.get(args[0].id, [])
+            if len(cands) == 1:
+                return cands[0]
+        return None
+
+    @staticmethod
+    def _bind_key(target: ast.AST) -> Optional[str]:
+        if isinstance(target, ast.Name):
+            return target.id
+        if (isinstance(target, ast.Attribute)
+                and isinstance(target.value, ast.Name)
+                and target.value.id == "self"):
+            return f"self.{target.attr}"
+        return None
+
+    @staticmethod
+    def _call_key(call: ast.Call) -> Optional[str]:
+        if isinstance(call.func, ast.Name):
+            return call.func.id
+        if (isinstance(call.func, ast.Attribute)
+                and isinstance(call.func.value, ast.Name)
+                and call.func.value.id == "self"):
+            return f"self.{call.func.attr}"
+        return None
+
+    # ------------------------------------------------------------------
+    def _check_signature(self, mod: Module, site: ast.AST, fn: ast.AST,
+                         nums: Optional[List[int]],
+                         names: Optional[List[str]],
+                         skip_first: bool = False) -> Iterator[Finding]:
+        """Validate literal static specs against the target def."""
+        pos = arg_names(fn)
+        if skip_first and pos and pos[0] in ("self", "cls"):
+            pos = pos[1:]
+        has_varargs = fn.args.vararg is not None
+        if nums is not None and not has_varargs:
+            n = len(pos)
+            for i in nums:
+                if i >= n or i < -n:
+                    yield Finding(
+                        self.name, mod.path, site.lineno, site.col_offset,
+                        f"static_argnums={i} out of range for "
+                        f"`{fn.name}` ({n} positional parameter"
+                        f"{'s' if n != 1 else ''})")
+        if names is not None and fn.args.kwarg is None:
+            known = set(all_arg_names(fn))
+            for s in names:
+                if s not in known:
+                    yield Finding(
+                        self.name, mod.path, site.lineno, site.col_offset,
+                        f"static_argnames={s!r} is not a parameter of "
+                        f"`{fn.name}`")
+
+    def _check_build_site(self, mod: Module, call: ast.Call,
+                          wrapper: Optional[str],
+                          parents: Tuple[ast.AST, ...],
+                          local_defs: Dict[str, List[ast.AST]],
+                          init_scope: Set[str],
+                          ctx: AnalysisContext) -> Iterator[Finding]:
+        label = wrapper or "partial(jax.jit, ...)"
+        in_loop = any(isinstance(p, (ast.For, ast.While, ast.AsyncFor))
+                      for p in parents)
+        if in_loop:
+            yield Finding(
+                self.name, mod.path, call.lineno, call.col_offset,
+                f"`{label}(...)` constructed inside a loop: a fresh "
+                f"wrapper per iteration recompiles every time — hoist "
+                f"the wrapper out of the loop")
+            return
+        if not ctx.config.in_library(mod.path):
+            # a per-call wrapper in a test/benchmark body compiles once
+            # per run — only the loop case above matters there
+            return
+        fn = enclosing_function(parents)
+        if fn is None or (isinstance(fn, (ast.FunctionDef,
+                                          ast.AsyncFunctionDef))
+                          and (fn.name in _INIT_METHODS
+                               or fn.name in init_scope)):
+            return
+        args = call.args[1:] if _is_partial_jit(call) else call.args
+        if not args:
+            return
+        target = args[0]
+        closure = isinstance(target, ast.Lambda)
+        if isinstance(target, ast.Name):
+            closure = any(
+                any(p is fn for p in ps)
+                for d in local_defs.get(target.id, [])
+                for _, ps in [(d, self._ancestors_of(mod.tree, d))])
+        if closure:
+            yield Finding(
+                self.name, mod.path, call.lineno, call.col_offset,
+                f"`{label}` of a lambda/closure inside "
+                f"`{getattr(fn, 'name', '<lambda>')}`: the wrapper gets "
+                f"a fresh identity on every call, so nothing is ever "
+                f"cache-hit — build it once in __init__/module scope")
+
+    @staticmethod
+    def _init_only_helpers(tree: ast.Module) -> Set[str]:
+        """Method names whose only same-module call sites sit inside init
+        methods (or other init-only helpers): building a jit wrapper in
+        ``_build_paged_ops`` called once from ``__init__`` is the same
+        one-compile-per-instance pattern as building it in ``__init__``.
+        Fixpoint over call edges; a name also called from non-init code
+        (or referenced without a call) never qualifies."""
+        callers: Dict[str, Set[str]] = {}
+        disqualified: Set[str] = set()
+        for node, parents in walk_with_parents(tree):
+            name: Optional[str] = None
+            is_call = False
+            if (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and isinstance(node.func.value, ast.Name)
+                    and node.func.value.id in ("self", "cls")):
+                name = node.func.attr
+                is_call = True
+            elif (isinstance(node, ast.Attribute)
+                  and isinstance(node.value, ast.Name)
+                  and node.value.id in ("self", "cls")
+                  and not (parents and isinstance(parents[-1], ast.Call)
+                           and parents[-1].func is node)):
+                name = node.attr  # bare reference: could be called anywhere
+            if name is None:
+                continue
+            fn = enclosing_function(parents)
+            caller = getattr(fn, "name", None)
+            if not is_call or caller is None:
+                disqualified.add(name)
+            else:
+                callers.setdefault(name, set()).add(caller)
+        result: Set[str] = set()
+        changed = True
+        while changed:
+            changed = False
+            for name, froms in callers.items():
+                if name in result or name in disqualified:
+                    continue
+                if all(c in _INIT_METHODS or c in result for c in froms):
+                    result.add(name)
+                    changed = True
+        return result
+
+    @staticmethod
+    def _ancestors_of(tree: ast.Module, target: ast.AST
+                      ) -> Tuple[ast.AST, ...]:
+        for node, parents in walk_with_parents(tree):
+            if node is target:
+                return parents
+        return ()
+
+    def _check_callsite(self, mod: Module, call: ast.Call, key: str,
+                        spec: Tuple[Optional[List[int]],
+                                    Optional[List[str]],
+                                    Optional[ast.AST]],
+                        parents: Tuple[ast.AST, ...]) -> Iterator[Finding]:
+        nums, names, target_def = spec
+        for arg in list(call.args) + [kw.value for kw in call.keywords]:
+            if isinstance(arg, ast.JoinedStr):
+                yield Finding(
+                    self.name, mod.path, arg.lineno, arg.col_offset,
+                    f"f-string argument to jitted `{key}`: static args "
+                    f"hash by value, so every distinct string compiles "
+                    f"a fresh program")
+        if not nums and not names:
+            return
+        loop_vars = self._loop_targets(parents)
+        if not loop_vars:
+            return
+        pos_args = call.args
+        static_pos: Set[int] = set(nums or [])
+        for i, arg in enumerate(pos_args):
+            if (i in static_pos and isinstance(arg, ast.Name)
+                    and arg.id in loop_vars):
+                yield Finding(
+                    self.name, mod.path, arg.lineno, arg.col_offset,
+                    f"loop variable `{arg.id}` fed to jitted `{key}` at "
+                    f"static position {i}: recompiles every iteration")
+        static_names = set(names or [])
+        for kw in call.keywords:
+            if (kw.arg in static_names and isinstance(kw.value, ast.Name)
+                    and kw.value.id in loop_vars):
+                yield Finding(
+                    self.name, mod.path, kw.value.lineno,
+                    kw.value.col_offset,
+                    f"loop variable `{kw.value.id}` fed to jitted "
+                    f"`{key}` at static argument {kw.arg!r}: recompiles "
+                    f"every iteration")
+
+    @staticmethod
+    def _loop_targets(parents: Tuple[ast.AST, ...]) -> Set[str]:
+        out: Set[str] = set()
+        for p in parents:
+            if isinstance(p, (ast.For, ast.AsyncFor)):
+                for n in ast.walk(p.target):
+                    if isinstance(n, ast.Name):
+                        out.add(n.id)
+        return out

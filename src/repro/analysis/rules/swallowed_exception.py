@@ -1,0 +1,96 @@
+"""swallowed-exception: broad except handlers that can hide real faults.
+
+Two tiers, keyed by path:
+
+  * hot paths (``config.hot_paths`` — the serving/control-plane modules
+    where a swallowed error means a silently wedged request or a
+    desynced controller): EVERY broad catch (bare ``except:``,
+    ``except Exception``, ``except BaseException``, or a tuple
+    containing one) is a finding, even when it re-raises.  A
+    cleanup-and-reraise handler is legitimate — suppress it with the
+    reason stating what the cleanup protects.
+  * other library code: a broad catch is a finding only when the
+    handler neither re-raises nor records the error (logging/warnings/
+    binding the exception for use) — the classic ``except Exception:
+    pass`` black hole.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis.engine import AnalysisContext, Finding, Module
+from repro.analysis.rules.common import dotted_name
+
+_BROAD = {"Exception", "BaseException"}
+_RECORD_CALLS = ("warnings.warn", "logging", "log", "warn", "print")
+
+
+def _is_broad(handler: ast.ExceptHandler) -> bool:
+    t = handler.type
+    if t is None:
+        return True  # bare except:
+    if isinstance(t, ast.Tuple):
+        return any(_name_is_broad(e) for e in t.elts)
+    return _name_is_broad(t)
+
+
+def _name_is_broad(node: ast.AST) -> bool:
+    d = dotted_name(node)
+    return d is not None and d.split(".")[-1] in _BROAD
+
+
+def _reraises(handler: ast.ExceptHandler) -> bool:
+    for node in ast.walk(handler):
+        if isinstance(node, ast.Raise):
+            return True
+    return False
+
+
+def _records(handler: ast.ExceptHandler) -> bool:
+    """Handler logs/warns, or actually USES the bound exception."""
+    for node in ast.walk(handler):
+        if isinstance(node, ast.Call):
+            d = dotted_name(node.func) or ""
+            if any(d == c or d.startswith(c + ".")
+                   or d.split(".")[0] == c for c in _RECORD_CALLS):
+                return True
+        if (handler.name and isinstance(node, ast.Name)
+                and node.id == handler.name
+                and isinstance(node.ctx, ast.Load)):
+            return True
+    return False
+
+
+class SwallowedExceptionRule:
+    name = "swallowed-exception"
+    synopsis = ("broad except handlers: any broad catch in serving/core "
+                "hot paths; silent (no re-raise, no logging) broad "
+                "catches elsewhere in the library")
+
+    def check(self, mod: Module, ctx: AnalysisContext
+              ) -> Iterator[Finding]:
+        if not ctx.config.in_library(mod.path):
+            return
+        hot = ctx.config.in_hot_path(mod.path)
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.ExceptHandler):
+                continue
+            if not _is_broad(node):
+                continue
+            what = ("bare `except:`" if node.type is None else
+                    f"`except {ast.unparse(node.type)}`")
+            if hot:
+                yield Finding(
+                    self.name, mod.path, node.lineno, node.col_offset,
+                    f"{what} in a serving/control hot path: broad "
+                    f"catches here can wedge requests or desync the "
+                    f"controller — narrow the exception types, or "
+                    f"suppress with the reason the breadth is required")
+            elif not _reraises(node) and not _records(node):
+                yield Finding(
+                    self.name, mod.path, node.lineno, node.col_offset,
+                    f"{what} neither re-raises nor records the error: "
+                    f"faults vanish here — narrow it, log it, or "
+                    f"re-raise")

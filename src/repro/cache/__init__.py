@@ -16,8 +16,9 @@ sharing a system/function prompt reference the same resident pages.
     resident prefix pages (+ the cached first token), LRU-bounded.
 """
 
-from repro.cache.pages import PagePool, pages_needed, pages_for_tokens
+from repro.cache.pages import (PagePool, pages_needed, pages_for_tokens,
+                               token_extent)
 from repro.cache.prefix import PrefixEntry, PrefixRegistry
 
-__all__ = ["PagePool", "pages_needed", "pages_for_tokens",
+__all__ = ["PagePool", "pages_needed", "pages_for_tokens", "token_extent",
            "PrefixEntry", "PrefixRegistry"]

@@ -26,6 +26,17 @@ from __future__ import annotations
 from typing import Iterable, List, Optional
 
 
+def token_extent(prompt_len: int, max_new: int) -> int:
+    """KV positions ``[0, extent)`` a request writes over its lifetime.
+
+    Prefill writes ``[0, prompt_len)``; decode writes
+    ``prompt_len .. prompt_len + max_new - 2`` (the last generated token
+    is never written back).  Both the page-extent formula below and the
+    engine's rolling-wrap admission test derive from this one number.
+    """
+    return prompt_len + max(max_new, 1) - 1
+
+
 def pages_needed(prompt_len: int, max_new: int, page_size: int,
                  max_len: int) -> int:
     """Pages a request must reserve to decode without mid-stream allocation.
@@ -40,7 +51,7 @@ def pages_needed(prompt_len: int, max_new: int, page_size: int,
     if page_size <= 0:
         raise ValueError(f"page_size must be > 0, got {page_size}")
     ppr = -(-max_len // page_size)              # pages per full row
-    extent = prompt_len + max(max_new, 1) - 1
+    extent = token_extent(prompt_len, max_new)
     if extent > max_len:
         return ppr
     return min(ppr, max(1, -(-extent // page_size)))

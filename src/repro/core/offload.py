@@ -96,6 +96,19 @@ class OffloadState:
         return cls(*children)
 
 
+def tail_ratio(p95: jnp.ndarray, p50: jnp.ndarray) -> jnp.ndarray:
+    """Eq (1) core: ``p95/p50`` floored at 1.0.
+
+    A tail cannot be faster than the median; the floor also guards the
+    ``p50 == 0`` and all-NaN corners.  Both Eq-(1) front ends — the raw
+    latency window and the histogram sketch — MUST share this expression
+    or their controller trajectories diverge at the corners.
+    """
+    ratio = p95 / jnp.maximum(p50, 1e-9)
+    ratio = jnp.where(jnp.isfinite(ratio), ratio, 1.0)
+    return jnp.maximum(ratio, 1.0)
+
+
 def latency_ratio(latencies: jnp.ndarray, valid: jnp.ndarray | None = None) -> jnp.ndarray:
     """Eq (1): tail-to-median ratio per function.
 
@@ -116,18 +129,14 @@ def latency_ratio(latencies: jnp.ndarray, valid: jnp.ndarray | None = None) -> j
     else:
         p95 = jnp.percentile(lat, 95.0, axis=-1)
         p50 = jnp.percentile(lat, 50.0, axis=-1)
-    ratio = p95 / jnp.maximum(p50, 1e-9)
-    ratio = jnp.where(jnp.isfinite(ratio), ratio, 1.0)
-    return jnp.maximum(ratio, 1.0)
+    return tail_ratio(p95, p50)
 
 
 def latency_ratio_from_sketch(hist: quantile.Histogram) -> jnp.ndarray:
     """Eq (1) from the on-device histogram sketch (production path)."""
     p95 = quantile.quantile(hist, 0.95)
     p50 = quantile.quantile(hist, 0.50)
-    ratio = p95 / jnp.maximum(p50, 1e-9)
-    ratio = jnp.where(jnp.isfinite(ratio), ratio, 1.0)
-    return jnp.maximum(ratio, 1.0)
+    return tail_ratio(p95, p50)
 
 
 def _decayed_ratio(state: OffloadState, cfg: OffloadConfig) -> jnp.ndarray:

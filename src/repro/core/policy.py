@@ -267,6 +267,9 @@ class AutoOffload(Policy):
             return False
         self.cfg = dataclasses.replace(
             self.cfg, link_bytes_per_s=float(link_bytes_per_s))
+        # lint: ignore[recompile-hazard] -- deliberate: a capacity change
+        # MUST rebuild the wrapper (cfg is closure-captured); fault events
+        # are rare, so one recompile per event is the intended cost
         self._update = jax.jit(
             lambda s, lat, v, rps: offload.offload_update(
                 s, lat, self.cfg, valid=v, demand_rps=rps))

@@ -92,7 +92,8 @@ def rwkv6_scan(r, k, v, lw, u, s0, *, chunk: int = 128,
     """
     B, S, H, D = r.shape
     chunk = min(chunk, S)
-    assert S % chunk == 0, (S, chunk)
+    if S % chunk != 0:
+        raise ValueError(f"seq len {S} is not divisible by chunk {chunk}")
     nc = S // chunk
 
     kernel = functools.partial(_kernel, nc=nc)

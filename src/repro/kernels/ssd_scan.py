@@ -63,7 +63,8 @@ def ssd_scan(a, b, h0, *, chunk: int = 128, blk_i: int = 256,
     """
     B, S, I, N = a.shape
     chunk = min(chunk, S)
-    assert S % chunk == 0, (S, chunk)
+    if S % chunk != 0:
+        raise ValueError(f"seq len {S} is not divisible by chunk {chunk}")
     blk_i = min(blk_i, I)
     pad_i = (-I) % blk_i
     if pad_i:

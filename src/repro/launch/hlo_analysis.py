@@ -19,6 +19,7 @@ from __future__ import annotations
 
 import dataclasses
 import re
+import warnings
 from typing import Dict, Iterable, Optional, Tuple
 
 PEAK_FLOPS = 197e12          # bf16 MXU / chip
@@ -221,7 +222,11 @@ def roofline_from_compiled(compiled, chips: int,
             ca = ca[0]
         xla_ca = {k: float(v) for k, v in ca.items()
                   if isinstance(v, (int, float))}
-    except Exception:
+    except Exception as e:
+        # cost_analysis() is advisory (recorded for reference only) and
+        # its API/availability varies across jax versions and backends —
+        # degrade to empty, but say so rather than vanish the error.
+        warnings.warn(f"xla cost_analysis unavailable: {e!r}")
         xla_ca = {}
     return (Roofline(hc["flops"], hc["bytes"], coll["wire"], chips,
                      mxu_flops_per_device=hc["mxu_flops"]),

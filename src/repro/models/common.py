@@ -165,7 +165,9 @@ class ParamSpec:
     scale: float = 1.0               # stddev multiplier on top of fan-in rule
 
     def __post_init__(self):
-        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"shape {self.shape} and axes {self.axes} "
+                             f"must have the same rank")
 
 
 def stack_layers(table: Mapping[str, ParamSpec], num_layers: int,
@@ -255,7 +257,9 @@ def norm_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
 def activate(cfg: ModelConfig, gate: jax.Array, up: Optional[jax.Array]) -> jax.Array:
     """MLP nonlinearity. swiglu: silu(gate)*up; relu2: relu(gate)^2 (nemotron)."""
     if cfg.activation == "swiglu":
-        assert up is not None
+        if up is None:
+            raise ValueError("swiglu activation requires the `up` "
+                             "projection")
         return jax.nn.silu(gate) * up
     if cfg.activation == "relu2":
         r = jax.nn.relu(gate)

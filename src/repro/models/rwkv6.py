@@ -96,7 +96,8 @@ def wkv_chunked(r, k, v, lw, u, s0, chunk: int):
     u: (H,D); s0: (B,H,D,D). Returns (y (B,S,H,D), s_final)."""
     B, S, H, D = r.shape
     chunk = min(chunk, S)
-    assert S % chunk == 0, (S, chunk)
+    if S % chunk != 0:
+        raise ValueError(f"seq len {S} is not divisible by chunk {chunk}")
     n = S // chunk
     rc = r.reshape(B, n, chunk, H, D).transpose(1, 0, 3, 2, 4)  # (n,B,H,c,D)
     kc = k.reshape(B, n, chunk, H, D).transpose(1, 0, 3, 2, 4)

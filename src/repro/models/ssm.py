@@ -56,7 +56,8 @@ def _scan_chunked_fused(a: jax.Array, b: jax.Array, C: jax.Array,
     """
     B, S, I, N = a.shape
     chunk = min(chunk, S)
-    assert S % chunk == 0
+    if S % chunk != 0:
+        raise ValueError(f"seq len {S} is not divisible by chunk {chunk}")
     n = S // chunk
     ac = a.reshape(B, n, chunk, I, N).transpose(1, 0, 2, 3, 4)
     bc = b.reshape(B, n, chunk, I, N).transpose(1, 0, 2, 3, 4)
@@ -81,7 +82,8 @@ def _scan_chunked(a: jax.Array, b: jax.Array, h0: jax.Array, chunk: int):
     """h_t = a_t * h_{t-1} + b_t over axis 1. a,b: (B,S,I,N); h0: (B,I,N)."""
     B, S, I, N = a.shape
     chunk = min(chunk, S)
-    assert S % chunk == 0
+    if S % chunk != 0:
+        raise ValueError(f"seq len {S} is not divisible by chunk {chunk}")
     n = S // chunk
     ac = a.reshape(B, n, chunk, I, N).transpose(1, 0, 2, 3, 4)
     bc = b.reshape(B, n, chunk, I, N).transpose(1, 0, 2, 3, 4)

@@ -37,7 +37,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.cache import PagePool, PrefixRegistry, pages_for_tokens, \
-    pages_needed
+    pages_needed, token_extent
 from repro.models import model_zoo
 from repro.models.common import ModelConfig
 
@@ -708,7 +708,7 @@ class Endpoint:
             self._set_table(slot, ids)
             return True
         L = len(tokens)
-        extent = L + max(max_new, 1) - 1
+        extent = token_extent(L, max_new)
         wrap = extent > self.max_len
         n_total = pages_needed(L, max_new, page, self.max_len)
         hit = (None if (wrap or self.prefix is None)

@@ -357,6 +357,8 @@ class Tier:
         try:
             firsts = ep.prefill_batch(
                 {slot: item.req.tokens for item, slot in claimed})
+        # lint: ignore[swallowed-exception] -- cleanup-and-reraise: slots
+        # must be released on ANY prefill failure or they leak forever
         except Exception:
             for _, s in claimed:
                 ep.release(s)
@@ -470,6 +472,8 @@ class Tier:
                         done_at[s] = now
                     else:
                         active[s] = tok
+        # lint: ignore[swallowed-exception] -- cleanup-and-reraise: decode
+        # slots must be released on ANY mid-stream failure or they leak
         except Exception:
             for _, _, s in claimed:
                 ep.release(s)

@@ -132,5 +132,7 @@ def shd(x: jax.Array, *axes: Optional[str]) -> jax.Array:
     rules = get_rules()
     if rules is None:
         return x
-    assert len(axes) == x.ndim, (axes, x.shape)
+    if len(axes) != x.ndim:
+        raise ValueError(f"axes {axes} do not match array rank "
+                         f"{x.ndim} (shape {x.shape})")
     return jax.lax.with_sharding_constraint(x, rules.sharding(axes, x.shape))

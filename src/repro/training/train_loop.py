@@ -65,7 +65,9 @@ def abstract_state(cfg: ModelConfig, tcfg: TrainConfig) -> TrainState:
 def _split_microbatches(batch: Dict[str, jax.Array], accum: int):
     def r(x):
         B = x.shape[0]
-        assert B % accum == 0, (B, accum)
+        if B % accum != 0:
+            raise ValueError(f"batch size {B} is not divisible by "
+                             f"grad-accum factor {accum}")
         return x.reshape(accum, B // accum, *x.shape[1:])
     return {k: r(v) for k, v in batch.items()}
 

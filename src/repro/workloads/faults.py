@@ -120,16 +120,27 @@ class LinkState:
         self.rtt_mult = 1.0
         self.up = True
 
+    def _effective(self) -> LinkSpec:
+        """The degraded link as a real :class:`LinkSpec`, so every cost
+        query goes through the ONE canonical latency formula instead of
+        a re-typed copy that could drift from it."""
+        if self.bw_mult == 1.0 and self.rtt_mult == 1.0:
+            return self.spec
+        return dataclasses.replace(
+            self.spec,
+            rtt_s=self.spec.rtt_s * self.rtt_mult,
+            bandwidth_Bps=self.spec.bandwidth_Bps * self.bw_mult)
+
     @property
     def bandwidth_Bps(self) -> float:
-        return self.spec.bandwidth_Bps * self.bw_mult
+        return self._effective().bandwidth_Bps
 
     @property
     def rtt_s(self) -> float:
-        return self.spec.rtt_s * self.rtt_mult
+        return self._effective().rtt_s
 
     def latency_s(self, nbytes: float = 0.0) -> float:
-        return self.rtt_s + nbytes / self.bandwidth_Bps
+        return self._effective().latency_s(nbytes)
 
     def effective_capacity(self) -> float:
         """Bytes/s a net-aware controller should cap against: the
