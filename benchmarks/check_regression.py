@@ -53,6 +53,14 @@ STABLE_METRICS: List[Tuple[str, str, str]] = [
     ("serving_bench", "migration.migrate.served", "count"),
     ("serving_bench", "migration.migrate.migrations_completed", "count"),
     ("controller_micro", "route_speedup_B4096", "ratio"),
+    # vectorized control plane: the batched rows kernel must stay
+    # bit-identical to the per-boundary loop, the F=4096 streaming tick
+    # must stay inside its 1 ms budget, and the sketch tick must keep
+    # beating the exact sort-bound tick by a wide margin (a timing
+    # *ratio*, so machine speed cancels out)
+    ("controller_micro", "vector_bit_identical", "flag"),
+    ("controller_micro", "vector_tick_under_1ms", "flag"),
+    ("controller_micro", "vector_tick_speedup_F4096", "ratio"),
     # chaos scenarios: conservation + migration identities must hold in
     # every arm, the adaptive controller must serve strictly more than
     # the static split at the same offered trace, and — where the win is
@@ -102,10 +110,15 @@ def derive(results: Dict) -> Dict:
     """Add metrics computed from raw bench output (ratios of timings are
     machine-stable even when the timings are not)."""
     cm = results.get("controller_micro")
-    if cm and "route_batch_B4096_us" in cm:
+    if cm:
         cm = dict(cm)
-        cm["route_speedup_B4096"] = (cm["route_batch_dense_B4096_us"]
-                                     / cm["route_batch_B4096_us"])
+        if "route_batch_B4096_us" in cm:
+            cm["route_speedup_B4096"] = (cm["route_batch_dense_B4096_us"]
+                                         / cm["route_batch_B4096_us"])
+        if "vector_controller_F4096_us" in cm:
+            cm["vector_tick_speedup_F4096"] = (
+                cm["exact_controller_F4096_us"]
+                / cm["vector_controller_F4096_us"])
         results = dict(results)
         results["controller_micro"] = cm
     return results

@@ -20,12 +20,31 @@ leading ``F`` (num_functions) axis.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import quantile
+
+
+def padded_rows(n: int) -> int:
+    """Rows every batched controller call pads to: the next power of two.
+
+    Power-of-two padding bounds jit recompiles to O(log F) as fleets grow
+    (each live ``deploy`` adds a function).  A numerics caveat rides on
+    the compiled shape: XLA:CPU scalarizes the single-row (1, W)
+    compilation and contracts Eq (4)'s multiply-add into an FMA there,
+    which multi-row compilations don't do — so an F=1 fleet's trajectory
+    (pinned by the seed goldens) can differ by 1 ulp from the same
+    function as row 0 of a stacked batch.  All multi-row shapes are
+    mutually bit-identical, and F=1 single-boundary loops compile at
+    (1, W) on both the per-boundary and the batched path, so
+    vectorized-vs-legacy bit-identity holds at every F (the
+    F in {1, 3, 257} golden test).
+    """
+    return 1 << (max(int(n), 1) - 1).bit_length()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -67,7 +86,10 @@ class OffloadState:
     Attributes:
       ratios:  (F, c_t+1) ring buffer of past r_l values, element ``head``
                is the most recent.
-      head:    () int32 ring-buffer write position.
+      head:    () int32 ring-buffer write position — or (F,) int32 when the
+               state was built with :meth:`init_rows` (batched controllers
+               carry one head per row so boundaries that skip an interval
+               stay frozen independently).
       filled:  (F,) int32 number of valid entries (for warm-up masking).
       R:       (F,) float32 smoothed traffic percentage, Eq (4).
     """
@@ -85,6 +107,16 @@ class OffloadState:
             head=jnp.zeros((), jnp.int32),
             filled=jnp.zeros((num_functions,), jnp.int32),
             R=jnp.zeros((num_functions,), jnp.float32),  # R_t(0) = 0
+        )
+
+    @staticmethod
+    def init_rows(num_rows: int, cfg: OffloadConfig) -> "OffloadState":
+        """Per-row-head variant for the batched rows kernels."""
+        return OffloadState(
+            ratios=jnp.ones((num_rows, cfg.c_t + 1), jnp.float32),
+            head=jnp.zeros((num_rows,), jnp.int32),
+            filled=jnp.zeros((num_rows,), jnp.int32),
+            R=jnp.zeros((num_rows,), jnp.float32),
         )
 
     # --- pytree protocol -------------------------------------------------
@@ -134,18 +166,25 @@ def latency_ratio(latencies: jnp.ndarray, valid: jnp.ndarray | None = None) -> j
 
 def latency_ratio_from_sketch(hist: quantile.Histogram) -> jnp.ndarray:
     """Eq (1) from the on-device histogram sketch (production path)."""
-    p95 = quantile.quantile(hist, 0.95)
-    p50 = quantile.quantile(hist, 0.50)
+    p95, p50 = quantile.quantile_fast(hist, (0.95, 0.50))
     return tail_ratio(p95, p50)
 
 
 def _decayed_ratio(state: OffloadState, cfg: OffloadConfig) -> jnp.ndarray:
-    """Eq (2): exponentially decayed weighted sum over the ring buffer."""
+    """Eq (2): exponentially decayed weighted sum over the ring buffer.
+
+    Handles both state layouts: the classic shared scalar ``head`` and the
+    per-row ``head`` of batched states (:meth:`OffloadState.init_rows`).
+    """
     n = cfg.c_t + 1
     # Order the ring newest-first: index (head - k) mod n.
     k = jnp.arange(n, dtype=jnp.int32)
-    idx = jnp.mod(state.head - k, n)
-    ordered = state.ratios[:, idx]                      # (F, c_t+1) newest first
+    if jnp.ndim(state.head):
+        idx = jnp.mod(state.head[:, None] - k[None, :], n)
+        ordered = jnp.take_along_axis(state.ratios, idx, axis=1)
+    else:
+        idx = jnp.mod(state.head - k, n)
+        ordered = state.ratios[:, idx]                  # (F, c_t+1) newest first
     w = cfg.decay_weights()                             # (c_t+1,)
     # Warm-up: only the first ``filled`` entries are real; renormalize.
     mask = (k[None, :] < jnp.maximum(state.filled[:, None], 1)).astype(jnp.float32)
@@ -198,10 +237,17 @@ def offload_update_from_sketch(
 
 
 def push_ratio(state: OffloadState, r_l: jnp.ndarray) -> OffloadState:
-    """Advance the ring buffer with a fresh Eq-(1) observation."""
+    """Advance the ring buffer with a fresh Eq-(1) observation (both the
+    scalar-head and the per-row-head state layouts)."""
     n = state.ratios.shape[-1]
     head = jnp.mod(state.head + 1, n)
-    ratios = state.ratios.at[:, head].set(r_l)
+    if jnp.ndim(head):
+        # One write per row at column head[r]: a where-mask, not a
+        # scatter — XLA:CPU serializes scatters (~10x slower at F=4096).
+        col = jnp.arange(n, dtype=head.dtype)[None, :]
+        ratios = jnp.where(col == head[:, None], r_l[:, None], state.ratios)
+    else:
+        ratios = state.ratios.at[:, head].set(r_l)
     filled = jnp.minimum(state.filled + 1, n)
     return OffloadState(ratios, head, filled, state.R)
 
@@ -217,6 +263,113 @@ def _finish_update(state, cfg, demand_rps):
         R = jnp.minimum(R, jnp.clip(cap, 0.0, 100.0))
     new_state = OffloadState(state.ratios, state.head, state.filled, R)
     return new_state, R
+
+
+def _finish_rows(
+    state: OffloadState,
+    r_l: jnp.ndarray,
+    active: jnp.ndarray,
+    link_x100: jnp.ndarray,
+    req_bytes: jnp.ndarray,
+    net_mask: jnp.ndarray,
+    demand_rps: jnp.ndarray,
+    cfg: OffloadConfig,
+) -> Tuple[OffloadState, jnp.ndarray]:
+    """Eqs (2)-(4) over a stack of boundary rows with per-row net caps.
+
+    ``active`` freezes rows whose boundary scraped no observations this
+    interval (the batched analogue of the per-boundary ``val.any()`` skip);
+    frozen rows keep their ring buffer, head, and R_t untouched.  The
+    net-aware cap is per-row data (``link_x100 = 100 * link_bytes_per_s``
+    pre-rounded to float32 on the host, ``net_mask`` selecting the rows
+    whose policy is net-aware), so boundaries with different links batch
+    into one compilation.
+    """
+    new = push_ratio(state, r_l)
+    r_prime = _decayed_ratio(new, cfg)                  # Eq (2)
+    r_t = target_percentage(r_prime, cfg)               # Eq (3)
+    R = state.R * cfg.c_in + r_t * (1.0 - cfg.c_in)     # Eq (4)
+    cap = link_x100 / jnp.maximum(demand_rps * req_bytes, 1e-9)
+    R = jnp.where(net_mask, jnp.minimum(R, jnp.clip(cap, 0.0, 100.0)), R)
+    ratios = jnp.where(active[:, None], new.ratios, state.ratios)
+    head = jnp.where(active, new.head, state.head)
+    filled = jnp.where(active, new.filled, state.filled)
+    R = jnp.where(active, R, state.R)
+    return OffloadState(ratios, head, filled, R), R
+
+
+def offload_update_rows(
+    state: OffloadState,
+    latencies: jnp.ndarray,
+    valid: jnp.ndarray,
+    active: jnp.ndarray,
+    link_x100: jnp.ndarray,
+    req_bytes: jnp.ndarray,
+    net_mask: jnp.ndarray,
+    demand_rps: jnp.ndarray,
+    cfg: OffloadConfig,
+) -> Tuple[OffloadState, jnp.ndarray]:
+    """One controller step over stacked boundary rows (exact Eq-(1) path).
+
+    The fleet-scale form of :func:`offload_update`: every (boundary,
+    function) pair is one row of a single (P, W) tensor — P padded to
+    :func:`padded_rows` — and the whole control plane advances in one
+    jitted call.  Row-local math makes this bit-identical to running each
+    boundary separately.
+
+    Args:
+      state: per-row-head state (:meth:`OffloadState.init_rows`, P rows).
+      latencies, valid: (P, W) stacked windows (padding rows all-invalid).
+      active: (P,) bool — rows allowed to advance this interval.
+      link_x100, req_bytes, net_mask, demand_rps: (P,) per-row net-cap
+        inputs (see :func:`_finish_rows`).
+      cfg: structural controller constants (static under jit).
+    """
+    r_l = latency_ratio(latencies, valid)               # Eq (1)
+    return _finish_rows(state, r_l, active, link_x100, req_bytes,
+                        net_mask, demand_rps, cfg)
+
+
+def offload_update_rows_stream(
+    state: OffloadState,
+    hist: quantile.Histogram,
+    sample_rows: jnp.ndarray,
+    sample_vals: jnp.ndarray,
+    sample_valid: jnp.ndarray,
+    sketch_decay: jnp.ndarray,
+    active: jnp.ndarray,
+    link_x100: jnp.ndarray,
+    req_bytes: jnp.ndarray,
+    net_mask: jnp.ndarray,
+    demand_rps: jnp.ndarray,
+    cfg: OffloadConfig,
+) -> Tuple[OffloadState, quantile.Histogram, jnp.ndarray]:
+    """Streaming controller step: sketch ingest + Eqs (1)-(4), one call.
+
+    The O(F log W) sort inside the exact Eq-(1) percentile is the scaling
+    wall at 10k functions; this path never builds or sorts a window.
+    Fresh latency observations are scattered into the per-row decayed
+    log-bucket histogram (:func:`repro.core.quantile.ingest`, O(S + P*B))
+    and Eq (1) reads p95/p50 from the sketch with the documented
+    one-bucket error bound.  R_t is therefore *approximate* relative to
+    the exact path — opt in via ``ControlLoop(eq1="sketch")``.
+    """
+    hist = quantile.ingest(hist, sample_rows, sample_vals,
+                           valid=sample_valid, decay=sketch_decay)
+    r_l = latency_ratio_from_sketch(hist)               # Eq (1), sketched
+    state, R = _finish_rows(state, r_l, active, link_x100, req_bytes,
+                            net_mask, demand_rps, cfg)
+    return state, hist, R
+
+
+# Module-level jitted entry points: one compilation per (row-count, window,
+# cfg) triple — callers pad rows with ``padded_rows`` so fleet growth costs
+# O(log F) compiles, and per-link capacities arrive as data (no closure to
+# rebuild when a fault resizes a link).
+offload_update_rows_jit = functools.partial(
+    jax.jit, static_argnames=("cfg",))(offload_update_rows)
+offload_update_rows_stream_jit = functools.partial(
+    jax.jit, static_argnames=("cfg",))(offload_update_rows_stream)
 
 
 def scan_controller(

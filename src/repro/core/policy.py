@@ -28,6 +28,18 @@ single control plane both now consume:
 
 Policies are control-plane objects (host-side numpy in/out); the heavy
 math inside ``AutoOffload.update`` stays jitted.
+
+Fleet scale: when every boundary runs an ``auto``-family policy the loop
+*vectorizes* — all boundaries of all functions become rows of one stacked
+(P, W) tensor and each control interval is a single jitted
+:func:`repro.core.offload.offload_update_rows` call (P padded to a power
+of two, so growth costs O(log F) compiles).  This is bit-identical to
+stepping the boundaries one by one (pinned by the F in {1, 3, 257} golden
+test).  For 10k-function fleets, ``eq1="sketch"`` additionally replaces
+the exact sorted-window percentile with the decayed histogram sketch of
+:mod:`repro.core.quantile`, fed by *fresh samples only*
+(:meth:`ControlLoop.step_stream`) — sub-millisecond ticks at F=4096, at
+the cost of the sketch's documented quantile error.
 """
 
 from __future__ import annotations
@@ -40,7 +52,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import offload, router
+from repro.core import offload, quantile, router
 
 PolicySpec = Union[float, int, str, "Policy"]
 
@@ -75,6 +87,9 @@ class Policy:
 
     # -- state ------------------------------------------------------------
     def init_state(self, num_functions: int) -> Any:
+        """Build this policy's opaque state pytree for an F-function
+        deployment.  The harness threads it through ``observe``/``update``
+        without knowing its shape; stateless policies return None."""
         return None
 
     def initial_R(self, num_functions: int) -> np.ndarray:
@@ -83,13 +98,28 @@ class Policy:
 
     def observe(self, state: Any, latencies: np.ndarray,
                 valid: np.ndarray) -> Any:
-        """Optional scrape-time hook (e.g. feed a quantile sketch)."""
+        """Optional scrape-time hook, called every control interval with
+        the mixed (F, W) window *before* ``update`` — even on intervals
+        where ``update`` is skipped because nothing was observed.  The
+        default is a no-op; a policy that feeds its own sketch or log
+        overrides it and returns the evolved state."""
         return state
 
     # -- control ----------------------------------------------------------
     def update(self, state: Any, latencies: np.ndarray, valid: np.ndarray,
                demand_rps: np.ndarray) -> Tuple[Any, np.ndarray]:
-        """One controller step -> (new_state, (F,) percentages)."""
+        """One controller step -> (new_state, (F,) percentages).
+
+        Args:
+          state: whatever ``init_state`` returned (threaded, opaque).
+          latencies, valid: (F, W) scraped latency window and its
+            observation mask, queue ages already mixed in.
+          demand_rps: (F,) request rate seen this interval (net-aware
+            policies cap R_t by what the link absorbs at this demand).
+
+        Returns ``(new_state, R)`` with R in percent of traffic to send
+        down-chain (0 = keep everything local, 100 = offload all).
+        """
         raise NotImplementedError
 
     def route(self, key: jax.Array, R: np.ndarray, fn_ids: np.ndarray,
@@ -175,10 +205,23 @@ class Policy:
               req_bytes: Optional[float] = None) -> "Policy":
         """Turn the established shorthands into Policy objects.
 
-        ``0.0``..``100.0`` (number or numeric string) -> StaticSplit;
-        ``"auto"`` -> AutoOffload; ``"auto+net"`` -> NetAwareOffload;
-        ``"auto+hedge"`` -> HedgedOffload.  Policy instances pass through
-        untouched, so callers can accept "policy-or-shorthand" uniformly.
+        Grammar (see docs/policies.md for the full catalog):
+
+        * ``0.0``..``100.0`` (number or numeric string) -> StaticSplit.
+        * ``"auto"`` -> AutoOffload, optionally followed by any
+          combination of the three modifiers, in any order:
+          ``+net`` (link-capacity cap -> NetAwareOffload),
+          ``+hedge`` (p99 straggler backups -> HedgedOffload),
+          ``+migrate`` (mid-stream migration -> MigratingOffload).
+          Modifiers compose — ``"auto+net+hedge+migrate"`` is one policy
+          with all three behaviours; when several classes could host the
+          combination the net/hedge class wins and ``migrate`` attaches
+          as its threshold attribute.  The canonical ``spec`` string is
+          re-normalized to net, hedge, migrate order.
+        * Policy instances pass through untouched, so callers can accept
+          "policy-or-shorthand" uniformly.
+
+        Anything else raises ``ValueError``.
         """
         if isinstance(spec, Policy):
             return spec
@@ -233,32 +276,77 @@ class StaticSplit(Policy):
 
 
 class AutoOffload(Policy):
-    """The paper's adaptive controller: Eqs (1)-(4) on edge latency windows."""
+    """The paper's adaptive controller: Eqs (1)-(4) on edge latency windows.
+
+    The update runs through the module-level batched rows kernel
+    (:func:`repro.core.offload.offload_update_rows`): rows are padded to
+    :func:`repro.core.offload.padded_rows` and the per-link net-cap
+    arrives as data, so every boundary of every deployment shares one
+    compilation per (P, W) shape and a capacity change never recompiles.
+    """
 
     spec = "auto"
 
     def __init__(self, cfg: Optional[offload.OffloadConfig] = None):
         self.cfg = cfg or offload.OffloadConfig()
-        self._update = jax.jit(
-            lambda s, lat, v, rps: offload.offload_update(
-                s, lat, self.cfg, valid=v, demand_rps=rps))
+
+    def _structural_cfg(self) -> offload.OffloadConfig:
+        """The jit-static residue of ``cfg``: only the Eq-(2)/(3)/(4)
+        constants.  Net-aware fields are data in the rows kernel, so
+        policies differing only in link capacity share a compilation."""
+        return offload.OffloadConfig(
+            c_decay=self.cfg.c_decay, c_t=self.cfg.c_t,
+            c_soft=self.cfg.c_soft, c_hard=self.cfg.c_hard,
+            c_in=self.cfg.c_in)
+
+    def net_rows(self, num_rows: int) -> Tuple[np.ndarray, np.ndarray,
+                                               np.ndarray]:
+        """(link_x100, req_bytes, net_mask) rows for the batched kernel.
+
+        ``link_x100`` is ``100 * link_bytes_per_s`` pre-rounded to float32
+        on the host — the same value the scalar path constant-folds — so
+        the batched cap is bit-identical to the legacy one.
+        """
+        if self.cfg.net_aware:
+            return (np.full(num_rows, np.float32(
+                        100.0 * self.cfg.link_bytes_per_s), np.float32),
+                    np.full(num_rows, np.float32(self.cfg.req_bytes),
+                            np.float32),
+                    np.ones(num_rows, bool))
+        return (np.zeros(num_rows, np.float32),
+                np.ones(num_rows, np.float32),
+                np.zeros(num_rows, bool))
 
     def init_state(self, num_functions: int) -> offload.OffloadState:
-        return offload.OffloadState.init(num_functions, self.cfg)
+        return offload.OffloadState.init_rows(
+            offload.padded_rows(num_functions), self.cfg)
 
     def update(self, state, latencies, valid, demand_rps):
-        state, R = self._update(state, latencies, valid,
-                                np.asarray(demand_rps, np.float32))
-        return state, np.asarray(R, np.float32)
+        lat = np.asarray(latencies, np.float32)
+        F, W = lat.shape
+        P = state.ratios.shape[0]
+        lat_p = np.zeros((P, W), np.float32)
+        val_p = np.zeros((P, W), bool)
+        lat_p[:F] = lat
+        val_p[:F] = valid
+        active = np.zeros(P, bool)
+        active[:F] = True
+        rps = np.full(P, 1e-3, np.float32)
+        rps[:F] = np.asarray(demand_rps, np.float32)
+        link_x100, req_b, net_mask = self.net_rows(P)
+        state, R = offload.offload_update_rows_jit(
+            state, lat_p, val_p, active, link_x100, req_b, net_mask, rps,
+            cfg=self._structural_cfg())
+        return state, np.asarray(R, np.float32)[:F]
 
     def set_link_capacity(self, link_bytes_per_s: float) -> bool:
         """Re-cap a net-aware controller against a changed link (fault
         injection: brownout/partition shrinks the capacity, recovery
         restores it).
 
-        The jitted update closes over ``self.cfg`` at trace time, so
-        mutating the dataclass alone would be silently ignored — the
-        closure must be rebuilt.  Controller *state* (the boundary's
+        The capacity is a *data* input of the batched rows kernel (read
+        back from ``self.cfg`` on every update), so replacing the config
+        is sufficient — no recompile.  Controller state (the boundary's
         OffloadState, held by the ControlLoop) is untouched: only the
         capacity the next Eq-(4) cap divides by changes.  No-op (False)
         for non-net-aware configs, whose updates never read the link.
@@ -267,12 +355,6 @@ class AutoOffload(Policy):
             return False
         self.cfg = dataclasses.replace(
             self.cfg, link_bytes_per_s=float(link_bytes_per_s))
-        # lint: ignore[recompile-hazard] -- deliberate: a capacity change
-        # MUST rebuild the wrapper (cfg is closure-captured); fault events
-        # are rare, so one recompile per event is the intended cost
-        self._update = jax.jit(
-            lambda s, lat, v, rps: offload.offload_update(
-                s, lat, self.cfg, valid=v, demand_rps=rps))
         return True
 
 
@@ -372,14 +454,31 @@ class ControlLoop:
     Both :class:`~repro.core.simulator.ContinuumSimulator` and the live
     :class:`~repro.serving.tiers.EdgeCloudContinuum` drive this object, so
     a shared latency trace yields bit-identical R_t trajectories.
+
+    Vectorization: with ``vectorized="auto"`` (default) the loop detects
+    fleets where every boundary runs an unmodified ``auto``-family policy
+    with shared Eq-(2)/(3)/(4) constants and, instead of a per-boundary
+    Python loop, advances ALL boundaries of ALL functions as rows of one
+    stacked state in a single jitted call per tick — bit-identical to the
+    per-boundary path (the parity oracle, still selectable with
+    ``vectorized=False``).  ``eq1`` picks the Eq-(1) front end:
+    ``"window"`` (exact sorted-window percentiles, the default and the
+    golden-pinned path) or ``"sketch"`` (streaming histogram quantiles fed
+    by :meth:`step_stream` — approximate, but O(F) sort-free ticks that
+    stay sub-millisecond at F=4096).
     """
 
     def __init__(self, policy: PolicySpec, num_functions: int,
                  window: int = 64, control_interval_s: float = 1.0,
                  num_tiers: int = 2,
-                 boundary_policies: Optional[Sequence[PolicySpec]] = None):
+                 boundary_policies: Optional[Sequence[PolicySpec]] = None,
+                 vectorized: Union[bool, str] = "auto",
+                 eq1: str = "window",
+                 sketch: Optional[quantile.SketchSpec] = None):
         if num_tiers < 1:
             raise ValueError(f"num_tiers must be >= 1, got {num_tiers}")
+        if eq1 not in ("window", "sketch"):
+            raise ValueError(f'eq1 must be "window" or "sketch", got {eq1!r}')
         self.num_functions = num_functions
         self.window = window
         self.control_interval_s = control_interval_s
@@ -399,11 +498,88 @@ class ControlLoop:
                     f"got {len(boundary_policies)}")
             self.policies = [Policy.parse(p) for p in boundary_policies]
             self.policy = self.policies[0]
-        self.states = [self.policies[b].init_state(num_functions)
-                       for b in range(self.num_boundaries)]
+        self.eq1 = eq1
+        vec_ok = self._vectorizable()
+        if vectorized == "auto":
+            # On the exact path, F=1 multi-boundary stays on the
+            # per-boundary loop: each boundary's seed-pinned trajectory
+            # comes from a (1, W) compilation whose Eq-(4) FMA
+            # contraction a (B, W) stack doesn't reproduce (see
+            # offload.padded_rows), and there is nothing to vectorize
+            # over at one function.  The sketch path has no bit contract,
+            # so it always batches.
+            self.vectorized = vec_ok and (
+                eq1 == "sketch" or not (
+                    num_functions == 1 and self.num_boundaries > 1))
+        else:
+            self.vectorized = bool(vectorized)
+            if self.vectorized and not vec_ok:
+                raise ValueError(
+                    "vectorized=True needs every boundary on an unmodified "
+                    "auto-family policy with shared controller constants")
+        if eq1 == "sketch" and not self.vectorized:
+            raise ValueError('eq1="sketch" requires the vectorized loop '
+                             "(auto-family policies on every boundary)")
+        if self.vectorized:
+            # One stacked per-row-head state: row b*F+f is (boundary b,
+            # function f); padded to a power of two so fleet growth costs
+            # O(log F) compilations.
+            self._rows = self.num_boundaries * num_functions
+            self._P = offload.padded_rows(self._rows)
+            self._structural = self.policies[0]._structural_cfg()
+            self._vstate = offload.OffloadState.init_rows(
+                self._P, self._structural)
+            self._states = None
+            self._net_cache = None
+            if eq1 == "sketch":
+                self.sketch_spec = sketch or quantile.SketchSpec()
+                self._hist = quantile.Histogram.init(
+                    self._P, self.sketch_spec.num_buckets,
+                    self.sketch_spec.lo, self.sketch_spec.hi)
+                self._decay_j = jnp.float32(self.sketch_spec.decay)
+                # A boundary becomes (and stays) active once it has ever
+                # produced a sample — the sketch analogue of "the window
+                # retains observations", which is what gates updates on
+                # the exact path.
+                self._seen = np.zeros(self.num_boundaries, bool)
+                self._active_j = None       # device mirror of _seen rows
+                self._seen_snap = None
+        else:
+            self._states = [self.policies[b].init_state(num_functions)
+                            for b in range(self.num_boundaries)]
         self.R_all = np.stack([self.policies[b].initial_R(num_functions)
                                for b in range(self.num_boundaries)])
         self.steps = 0
+
+    def _vectorizable(self) -> bool:
+        """True when every boundary can batch into one rows-kernel call:
+        unmodified auto-family policies (no custom update/observe/state
+        hooks) sharing the structural Eq-(2)/(3)/(4) constants.  Net-aware
+        fields may differ per boundary — they are data, not structure."""
+        pols = self.policies
+        if not all(isinstance(p, AutoOffload) for p in pols):
+            return False
+        if not all(type(p).update is AutoOffload.update
+                   and type(p).observe is Policy.observe
+                   and type(p).init_state is AutoOffload.init_state
+                   for p in pols):
+            return False
+        return len({(p.cfg.c_decay, p.cfg.c_t, p.cfg.c_soft,
+                     p.cfg.c_hard, p.cfg.c_in) for p in pols}) == 1
+
+    # Per-boundary state views.  In vectorized mode these are slices of
+    # the stacked state (read-only snapshots); the legacy loop owns a real
+    # per-boundary list.
+    @property
+    def states(self):
+        if not self.vectorized:
+            return self._states
+        F = self.num_functions
+        s = self._vstate
+        return [offload.OffloadState(
+                    s.ratios[b * F:(b + 1) * F], s.head[b * F:(b + 1) * F],
+                    s.filled[b * F:(b + 1) * F], s.R[b * F:(b + 1) * F])
+                for b in range(self.num_boundaries)]
 
     # 2-tier compatibility views: the ingress boundary's state and R_t.
     @property
@@ -412,7 +588,16 @@ class ControlLoop:
 
     @state.setter
     def state(self, v):
-        self.states[0] = v
+        if self.vectorized:
+            F = self.num_functions
+            s = self._vstate
+            self._vstate = offload.OffloadState(
+                s.ratios.at[:F].set(v.ratios),
+                s.head.at[:F].set(jnp.broadcast_to(v.head, (F,))),
+                s.filled.at[:F].set(v.filled),
+                s.R.at[:F].set(v.R))
+        else:
+            self._states[0] = v
 
     @property
     def R(self) -> np.ndarray:
@@ -423,27 +608,43 @@ class ControlLoop:
         self.R_all[0] = np.asarray(v, np.float32)
 
     @staticmethod
+    def _sample_ages(ages: Sequence[float], window: int) -> List[float]:
+        """Evenly subsample up to ``window // 2`` in-flight ages.
+
+        The even spread across the queue (new arrivals vs head-of-line)
+        is the bimodality Eq (1) keys on; both Eq-(1) front ends — the
+        window mixing below and the streaming sketch ingest — must select
+        the identical subset.
+        """
+        k = min(len(ages), window // 2)
+        return [ages[int(i * len(ages) / k)] for i in range(k)] if k else []
+
+    @staticmethod
     def mix_queue_ages(lat: np.ndarray, valid: np.ndarray, fn: int,
                        ages: Sequence[float], window: int) -> None:
         """Displace the oldest completions of function ``fn`` with a spread
         of in-flight queue ages (in place).
 
-        Sampling is even across the queue: the age spread (new arrivals vs
-        head-of-line) is the bimodality Eq (1) keys on.  Ages overwrite the
-        *oldest* window entries so fresh queue state dominates stale (often
-        timeout-censored) history.
+        Sampling is even across the queue (see :meth:`_sample_ages`); the
+        ages overwrite the *oldest* window entries so fresh queue state
+        dominates stale (often timeout-censored) history.
         """
-        k = min(len(ages), window // 2)
-        sel = [ages[int(i * len(ages) / k)] for i in range(k)] if k else []
+        sel = ControlLoop._sample_ages(ages, window)
         if sel:
             lat[fn, :len(sel)] = sel
             valid[fn, :len(sel)] = True
 
     def _rps(self, arrivals: Optional[Sequence[float]]) -> np.ndarray:
+        """Arrival counts -> (F,) demand RPS, floored at 1e-3.
+
+        Vectorized but bit-identical to the historical per-element Python
+        ``max(a / interval, 1e-3)``: the division happens in float64 and
+        only the result is rounded to float32.
+        """
         if arrivals is None:
-            arrivals = [0.0] * self.num_functions
-        return np.asarray(
-            [max(a / self.control_interval_s, 1e-3) for a in arrivals],
+            return np.full(self.num_functions, np.float32(1e-3), np.float32)
+        a = np.asarray(arrivals, np.float64)
+        return np.maximum(a / self.control_interval_s, 1e-3).astype(
             np.float32)
 
     def _step_boundary(self, b: int, latencies: np.ndarray,
@@ -457,33 +658,128 @@ class ControlLoop:
             for fn, ages in enumerate(queue_ages):
                 if ages:
                     self.mix_queue_ages(lat, val, fn, ages, self.window)
-        self.states[b] = pol.observe(self.states[b], lat, val)
+        self._states[b] = pol.observe(self._states[b], lat, val)
         if val.any():
-            self.states[b], R = pol.update(self.states[b], lat, val, rps)
+            self._states[b], R = pol.update(self._states[b], lat, val, rps)
             self.R_all[b] = np.asarray(R, np.float32)
         return self.R_all[b]
+
+    def _net_row_arrays(self) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+        """Stacked per-row net-cap inputs, re-read from each boundary's
+        ``pol.cfg`` every tick so a mid-run ``set_link_capacity`` (fault
+        injection) re-caps without recompiling anything.  Cached as
+        device-resident arrays keyed on the cfg values — unchanged ticks
+        skip both the rebuild and the host->device copies (which would
+        otherwise eat a measurable slice of the sub-ms tick budget)."""
+        key = tuple(pol.cfg for pol in self.policies)
+        if self._net_cache is not None and key == self._net_cache[0]:
+            return self._net_cache[1]
+        F, P = self.num_functions, self._P
+        link_x100 = np.zeros(P, np.float32)
+        req_b = np.ones(P, np.float32)
+        net_mask = np.zeros(P, bool)
+        for b, pol in enumerate(self.policies):
+            lo = b * F
+            link_x100[lo:lo + F], req_b[lo:lo + F], net_mask[lo:lo + F] = \
+                pol.net_rows(F)
+        arrays = (jnp.asarray(link_x100), jnp.asarray(req_b),
+                  jnp.asarray(net_mask))
+        self._net_cache = (key, arrays)
+        return arrays
+
+    def _step_vectorized(self, latencies: Sequence[Optional[np.ndarray]],
+                         valid: Sequence[Optional[np.ndarray]],
+                         queue_ages: Optional[Sequence],
+                         per_b_rps: Sequence[np.ndarray]) -> None:
+        """Advance every boundary in ONE jitted rows-kernel call.
+
+        ``latencies[b] is None`` marks a boundary that is not stepped this
+        interval (``step`` only drives boundary 0); a stepped boundary
+        with no valid observation after age mixing is frozen exactly like
+        the legacy per-boundary ``val.any()`` skip.
+        """
+        F, B, P = self.num_functions, self.num_boundaries, self._P
+        W = next(np.shape(l)[1] for l in latencies if l is not None)
+        lat = np.zeros((P, W), np.float32)
+        val = np.zeros((P, W), bool)
+        active = np.zeros(P, bool)
+        rps = np.full(P, 1e-3, np.float32)
+        for b in range(B):
+            if latencies[b] is None:
+                continue
+            lo = b * F
+            lat[lo:lo + F] = latencies[b]
+            val[lo:lo + F] = valid[b]
+            qa = queue_ages[b] if queue_ages is not None else None
+            if qa is not None:
+                sub_lat, sub_val = lat[lo:lo + F], val[lo:lo + F]
+                for fn, ages in enumerate(qa):
+                    if ages:
+                        self.mix_queue_ages(sub_lat, sub_val, fn, ages,
+                                            self.window)
+            active[lo:lo + F] = val[lo:lo + F].any()
+            rps[lo:lo + F] = per_b_rps[b]
+        link_x100, req_b, net_mask = self._net_row_arrays()
+        self._vstate, R = offload.offload_update_rows_jit(
+            self._vstate, lat, val, active, link_x100, req_b, net_mask,
+            rps, cfg=self._structural)
+        self.R_all = np.array(R, np.float32)[:B * F].reshape(B, F)
 
     def step(self, latencies: np.ndarray, valid: np.ndarray,
              queue_ages: Optional[Sequence[Sequence[float]]] = None,
              arrivals: Optional[Sequence[float]] = None) -> np.ndarray:
         """One control interval on the ingress boundary -> (F,) R_t.
 
+        Deeper boundaries (if any) are left untouched; use
+        :meth:`step_tiers` to advance the whole chain.
+
         Args:
           latencies, valid: (F, W) scraped windows (oldest entry first).
           queue_ages: per-function ages (seconds) of requests still
             waiting at the gateway, head-of-line first.
           arrivals: per-function request count seen this interval.
+
+        Returns the ingress boundary's (F,) R_t percentages.
         """
+        if self.eq1 == "sketch":
+            raise ValueError('eq1="sketch" loops are driven by '
+                             "step_stream(), not step()")
         rps = self._rps(arrivals)
-        out = self._step_boundary(0, latencies, valid, queue_ages, rps)
+        if self.vectorized:
+            none = [None] * (self.num_boundaries - 1)
+            self._step_vectorized([latencies] + none, [valid] + none,
+                                  [queue_ages] + none if queue_ages
+                                  is not None else None,
+                                  [rps] * self.num_boundaries)
+            out = self.R_all[0]
+        else:
+            out = self._step_boundary(0, latencies, valid, queue_ages, rps)
         self.steps += 1
         return out
+
+    def _per_boundary_rps(self, arrivals: Optional[Sequence]
+                          ) -> List[np.ndarray]:
+        """Resolve the ``arrivals`` argument of :meth:`step_tiers` /
+        :meth:`step_stream` into per-boundary (F,) RPS arrays."""
+        if (arrivals is not None and len(arrivals)
+                and isinstance(arrivals[0], (list, tuple, np.ndarray))):
+            if len(arrivals) != self.num_boundaries:
+                raise ValueError(
+                    f"{self.num_boundaries} boundaries need "
+                    f"{self.num_boundaries} arrival counts, "
+                    f"got {len(arrivals)}")
+            return [self._rps(a) for a in arrivals]
+        return [self._rps(arrivals)] * self.num_boundaries
 
     def step_tiers(self, latencies: Sequence[np.ndarray],
                    valid: Sequence[np.ndarray],
                    queue_ages: Optional[Sequence] = None,
                    arrivals: Optional[Sequence[float]] = None) -> np.ndarray:
         """One control interval over every boundary of the chain.
+
+        On a vectorized loop this is ONE batched kernel call for all
+        boundaries of all functions; otherwise a per-boundary Python loop.
+        Both orders are bit-identical (golden-pinned).
 
         Args:
           latencies, valid: per-boundary (F, W) windows, one entry per
@@ -500,6 +796,9 @@ class ControlLoop:
 
         Returns the (num_tiers-1, F) stack of R_t percentages.
         """
+        if self.eq1 == "sketch":
+            raise ValueError('eq1="sketch" loops are driven by '
+                             "step_stream(), not step_tiers()")
         if len(latencies) != self.num_boundaries:
             raise ValueError(
                 f"{self.num_boundaries} boundaries need {self.num_boundaries}"
@@ -508,19 +807,98 @@ class ControlLoop:
             raise ValueError(
                 f"{self.num_boundaries} boundaries need {self.num_boundaries}"
                 f" queue-age entries, got {len(queue_ages)}")
-        if (arrivals is not None and len(arrivals)
-                and isinstance(arrivals[0], (list, tuple, np.ndarray))):
-            if len(arrivals) != self.num_boundaries:
-                raise ValueError(
-                    f"{self.num_boundaries} boundaries need "
-                    f"{self.num_boundaries} arrival counts, "
-                    f"got {len(arrivals)}")
-            per_b = [self._rps(a) for a in arrivals]
+        per_b = self._per_boundary_rps(arrivals)
+        if self.vectorized:
+            self._step_vectorized(latencies, valid, queue_ages, per_b)
         else:
-            per_b = [self._rps(arrivals)] * self.num_boundaries
-        for b in range(self.num_boundaries):
+            for b in range(self.num_boundaries):
+                qa = queue_ages[b] if queue_ages is not None else None
+                self._step_boundary(b, latencies[b], valid[b], qa, per_b[b])
+        self.steps += 1
+        return self.R_all
+
+    def step_stream(self, samples: Sequence, queue_ages: Optional[Sequence]
+                    = None, arrivals: Optional[Sequence] = None
+                    ) -> np.ndarray:
+        """One *streaming* control interval (``eq1="sketch"`` loops only).
+
+        Instead of (F, W) windows, each boundary contributes just the
+        latency observations recorded since the last tick — e.g. from
+        :meth:`repro.core.metrics.MetricsRegistry.drain_fresh` — and the
+        whole fleet advances in one jitted sketch-ingest + Eqs (1)-(4)
+        call (:func:`repro.core.offload.offload_update_rows_stream`).
+        No window is built and nothing is sorted, so a tick is O(samples
+        + F * buckets): sub-millisecond at F=4096 where the exact path's
+        percentile sort alone costs tens of milliseconds.
+
+        Args:
+          samples: per-boundary ``(fn_ids, values)`` array pairs (or None
+            for an idle boundary) of fresh latency observations.
+          queue_ages: as in :meth:`step_tiers`; in-flight ages are
+            subsampled by the shared :meth:`_sample_ages` rule and
+            ingested as additional observations.
+          arrivals: as in :meth:`step_tiers`.
+
+        Returns the (num_tiers-1, F) stack of R_t percentages.
+        """
+        if self.eq1 != "sketch":
+            raise ValueError('step_stream() requires eq1="sketch"')
+        if len(samples) != self.num_boundaries:
+            raise ValueError(
+                f"{self.num_boundaries} boundaries need {self.num_boundaries}"
+                f" sample sets, got {len(samples)}")
+        F, B, P = self.num_functions, self.num_boundaries, self._P
+        per_b = self._per_boundary_rps(arrivals)
+        rows_parts: List[np.ndarray] = []
+        vals_parts: List[np.ndarray] = []
+        for b in range(B):
+            if samples[b] is not None:
+                ids, vals = samples[b]
+                if len(ids):
+                    rows_parts.append(
+                        np.asarray(ids, np.int64) + b * F)
+                    vals_parts.append(np.asarray(vals, np.float32))
             qa = queue_ages[b] if queue_ages is not None else None
-            self._step_boundary(b, latencies[b], valid[b], qa, per_b[b])
+            if qa is not None:
+                for fn, ages in enumerate(qa):
+                    sel = self._sample_ages(ages, self.window)
+                    if sel:
+                        rows_parts.append(
+                            np.full(len(sel), b * F + fn, np.int64))
+                        vals_parts.append(np.asarray(sel, np.float32))
+        rows = (np.concatenate(rows_parts) if rows_parts
+                else np.zeros(0, np.int64))
+        vals = (np.concatenate(vals_parts) if vals_parts
+                else np.zeros(0, np.float32))
+        for b in range(B):
+            if not self._seen[b] and rows.size:
+                lo = b * F
+                if np.any((rows >= lo) & (rows < lo + F)):
+                    self._seen[b] = True
+        # Pad the sample batch to a power-of-two bucket (shape-stable
+        # compilations across ticks with varying sample counts).
+        S = max(8, 1 << (max(int(rows.size), 1) - 1).bit_length())
+        rows_p = np.zeros(S, np.int32)
+        vals_p = np.zeros(S, np.float32)
+        svalid = np.zeros(S, bool)
+        rows_p[:rows.size] = rows
+        vals_p[:vals.size] = vals
+        svalid[:rows.size] = True
+        if self._active_j is None or not np.array_equal(
+                self._seen, self._seen_snap):
+            active = np.zeros(P, bool)
+            active[:B * F] = np.repeat(self._seen, F)
+            self._active_j = jnp.asarray(active)
+            self._seen_snap = self._seen.copy()
+        rps = np.full(P, 1e-3, np.float32)
+        for b in range(B):
+            rps[b * F:(b + 1) * F] = per_b[b]
+        link_x100, req_b, net_mask = self._net_row_arrays()
+        self._vstate, self._hist, R = offload.offload_update_rows_stream_jit(
+            self._vstate, self._hist, rows_p, vals_p, svalid,
+            self._decay_j, self._active_j, link_x100, req_b,
+            net_mask, rps, cfg=self._structural)
+        self.R_all = np.array(R, np.float32)[:B * F].reshape(B, F)
         self.steps += 1
         return self.R_all
 

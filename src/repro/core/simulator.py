@@ -229,7 +229,8 @@ class ContinuumSimulator:
                  offload_cfg: Optional[offload.OffloadConfig] = None,
                  topology: Optional[Topology] = None,
                  trace: Optional[Union[ArrivalProcess, Trace]] = None,
-                 faults: Optional[FaultSchedule] = None):
+                 faults: Optional[FaultSchedule] = None,
+                 eq1: str = "window", sketch=None):
         if workload not in PROFILES:
             raise ValueError(f"unknown workload {workload!r}")
         self.profile: WorkloadProfile = PROFILES[workload]
@@ -288,7 +289,8 @@ class ContinuumSimulator:
         self.control = ControlLoop(self.policy_obj, 1, window=cfg.window,
                                    control_interval_s=cfg.control_interval_s,
                                    num_tiers=self.topology.num_tiers,
-                                   boundary_policies=boundary_policies)
+                                   boundary_policies=boundary_policies,
+                                   eq1=eq1, sketch=sketch)
 
     # ------------------------------------------------------------------
     def _rate(self, t: float) -> float:
@@ -601,17 +603,26 @@ class ContinuumSimulator:
                 # boundary: tier b's latency windows + its in-flight
                 # queue-age mixing + demand RPS — the same code path the
                 # live continuum ticks.
-                lats, valids, qages = [], [], []
+                qages = []
                 for b in range(self.control.num_boundaries):
-                    lat, valid = self.tier_metrics[b].latency_windows(
-                        cfg.window)
-                    lats.append(lat)
-                    valids.append(valid)
                     bq = tiers[b].queue if b < len(tiers) else ()
                     qages.append([[t - qarr for qarr, _qsize in bq]])
-                R_all = self.control.step_tiers(
-                    lats, valids, queue_ages=qages,
-                    arrivals=[[c] for c in arrivals_in_interval])
+                if self.control.eq1 == "sketch":
+                    samples = [self.tier_metrics[b].drain_fresh()
+                               for b in range(self.control.num_boundaries)]
+                    R_all = self.control.step_stream(
+                        samples, queue_ages=qages,
+                        arrivals=[[c] for c in arrivals_in_interval])
+                else:
+                    lats, valids = [], []
+                    for b in range(self.control.num_boundaries):
+                        lat, valid = self.tier_metrics[b].latency_windows(
+                            cfg.window)
+                        lats.append(lat)
+                        valids.append(valid)
+                    R_all = self.control.step_tiers(
+                        lats, valids, queue_ages=qages,
+                        arrivals=[[c] for c in arrivals_in_interval])
                 R_cur = np.array(R_all[:N - 1, 0], np.float64)
                 push(t + cfg.control_interval_s, _CONTROL)
                 arrivals_in_interval = [0] * n_bounds

@@ -122,7 +122,20 @@ class LinkSpec:
 
 
 class Topology:
-    """An ordered chain of N tiers joined by N-1 links, ingress at tier 0."""
+    """An ordered chain of N tiers joined by N-1 links, ingress at tier 0.
+
+    The one declarative shape both deployments consume: the simulator
+    builds its event loop from it and the live runtime builds real
+    endpoint pools per tier.  The controller runs one boundary per
+    adjacent tier pair — boundary ``b`` is driven by tier ``b``'s
+    signals and yields ``R_t[b]``, the percentage of tier ``b``'s load
+    pushed down the chain (see docs/architecture.md).
+
+    ``waterfall=True`` spills a stalled tier's overflow to the next
+    tier instead of rejecting; construction validates the chain
+    (non-empty, unique tier names, ``len(links) == len(tiers) - 1``,
+    non-negative RTTs/queues/slots).
+    """
 
     def __init__(self, tiers: Sequence[TierSpec],
                  links: Optional[Sequence[LinkSpec]] = None,

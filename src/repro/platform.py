@@ -109,18 +109,21 @@ class Continuum(EdgeCloudContinuum):
                  cfg: Optional[SimConfig] = None,
                  offload_cfg: Optional[offload.OffloadConfig] = None,
                  topology: Optional[Topology] = None,
-                 trace=None, faults: Optional[FaultSchedule] = None
-                 ) -> SimResult:
+                 trace=None, faults: Optional[FaultSchedule] = None,
+                 eq1: str = "window", sketch=None) -> SimResult:
         """One simulator run of ``workload`` under ``policy`` (over the
         paper's 2-tier apparatus, or any explicit ``topology``); an
         optional :class:`~repro.workloads.trace.Trace` replaces the
         built-in ramped-Poisson arrivals and an optional
         :class:`~repro.workloads.faults.FaultSchedule` injects link/tier
-        faults mid-run."""
+        faults mid-run.  ``eq1="sketch"`` switches the control loop to
+        the streaming-sketch Eq-(1) front end (see docs/architecture.md),
+        with an optional :class:`~repro.core.quantile.SketchSpec`."""
         return ContinuumSimulator(workload, policy, cfg or SimConfig(),
                                   offload_cfg=offload_cfg,
                                   topology=topology,
-                                  trace=trace, faults=faults).run()
+                                  trace=trace, faults=faults,
+                                  eq1=eq1, sketch=sketch).run()
 
     @classmethod
     def sweep(cls, workload: str,

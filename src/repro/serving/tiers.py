@@ -518,7 +518,9 @@ class EdgeCloudContinuum:
                  trace: Optional[Trace] = None,
                  faults: Optional[FaultSchedule] = None,
                  trace_vocab: int = 128,
-                 trace_prompts: str = "random"):
+                 trace_prompts: str = "random",
+                 eq1: str = "window",
+                 sketch=None):
         if trace_prompts not in ("random", "per_fn"):
             raise ValueError(
                 f"trace_prompts must be 'random' or 'per_fn', "
@@ -557,6 +559,12 @@ class EdgeCloudContinuum:
                 "migrate", stacklevel=2)
         self.window = window
         self.control_interval_s = control_interval_s
+        # Eq-(1) front end for the control loop: "window" (exact sorted
+        # percentiles, the golden-pinned default) or "sketch" (streaming
+        # histogram quantiles drained from the tier registries each
+        # scrape — the sub-millisecond 10k-function path).
+        self.eq1 = eq1
+        self.sketch = sketch
         # Fast rejections are part of the latency distribution Eq (1)
         # scrapes (queue-proxy 503 semantics, same as the simulator).
         self.reject_latency_s = reject_latency_s
@@ -578,8 +586,11 @@ class EdgeCloudContinuum:
         # requests that *reached* tier b (submit, routing, or spill) —
         # what its net-aware cap divides the link capacity by.
         self._num_boundaries = max(len(self.tiers) - 1, 1)
-        self._crossings: List[Dict[str, int]] = [
-            {} for _ in range(self._num_boundaries)]
+        # One (F,) count vector per boundary, indexed by function id —
+        # the controller scrape hands these straight to the batched
+        # ControlLoop without any per-function Python.
+        self._crossings: List[np.ndarray] = [
+            np.zeros(0, np.int64) for _ in range(self._num_boundaries)]
         # Platform-level counters (hedging outcomes etc.).
         self.metrics = MetricsRegistry([])
         # Mid-stream migrations currently in flight over a link, and the
@@ -696,6 +707,8 @@ class EdgeCloudContinuum:
         if spec.name not in self.fn_names:
             self._fn_ids[spec.name] = len(self.fn_names)
             self.fn_names.append(spec.name)
+            self._crossings = [np.concatenate([c, np.zeros(1, np.int64)])
+                               for c in self._crossings]
             # Each boundary parses the policy against ITS link's capacity,
             # so auto+net caps offload by the link actually being crossed
             # (mirrors the simulator's per-boundary policies).
@@ -711,7 +724,8 @@ class EdgeCloudContinuum:
                 self.policy, len(self.fn_names), window=self.window,
                 control_interval_s=self.control_interval_s,
                 num_tiers=len(self.tiers),
-                boundary_policies=boundary_policies)
+                boundary_policies=boundary_policies,
+                eq1=self.eq1, sketch=self.sketch)
 
     # -- request path (paper §3.3.2) ------------------------------------------
     def submit(self, fn_name: str, req: Request) -> bool:
@@ -731,7 +745,9 @@ class EdgeCloudContinuum:
 
     def _count_crossing(self, b: int, fn: str) -> None:
         if b < self._num_boundaries:
-            self._crossings[b][fn] = self._crossings[b].get(fn, 0) + 1
+            i = self._fn_ids.get(fn)
+            if i is not None:
+                self._crossings[b][i] += 1
 
     def _reject(self, ti: int, fn: str) -> None:
         self.metrics.inc("rejected")
@@ -902,21 +918,31 @@ class EdgeCloudContinuum:
         since the last scrape; returns the ingress boundary's R_t
         percentages."""
         now = time.perf_counter()
-        lats, valids, qages = [], [], []
+        qages = []
         for b in range(self.control.num_boundaries):
             tier_i = min(b, len(self.tiers) - 1)   # 1-tier chain: b=0
-            lat, valid = self.tiers[tier_i].metrics.latency_windows(
-                self.window)
-            lats.append(lat)
-            valids.append(valid)
             qages.append(self.gateways[tier_i].backlog_ages(
                 now, self._tick_no, self._fn_ids, len(self.fn_names)))
-        arrivals = [[c.get(fn, 0) for fn in self.fn_names]
-                    for c in self._crossings]
-        R_all = self.control.step_tiers(lats, valids, queue_ages=qages,
-                                        arrivals=arrivals)
-        for c in self._crossings:
-            c.clear()
+        arrivals = list(self._crossings)
+        if self.control.eq1 == "sketch":
+            # Streaming scrape: only the samples recorded since the last
+            # tick leave each tier's registry (no windows, no sort).
+            samples = [
+                self.tiers[min(b, len(self.tiers) - 1)].metrics.drain_fresh()
+                for b in range(self.control.num_boundaries)]
+            R_all = self.control.step_stream(samples, queue_ages=qages,
+                                             arrivals=arrivals)
+        else:
+            lats, valids = [], []
+            for b in range(self.control.num_boundaries):
+                tier_i = min(b, len(self.tiers) - 1)
+                lat, valid = self.tiers[tier_i].metrics.latency_windows(
+                    self.window)
+                lats.append(lat)
+                valids.append(valid)
+            R_all = self.control.step_tiers(lats, valids, queue_ages=qages,
+                                            arrivals=arrivals)
+        self._crossings = [np.zeros_like(c) for c in self._crossings]
         return R_all[0]
 
     def _latency_windows(self):

@@ -78,7 +78,7 @@ def test_submit_rejects_when_ingress_gateway_full(model):
     assert cc.metrics.counters["rejected"] == 2
     # every arrival counts as ingress demand, admitted or not (the
     # simulator counts 503'd arrivals the same way)
-    assert cc._crossings[0]["fn"] == 3
+    assert cc._crossings[0][cc._fn_ids["fn"]] == 3
     # fast rejections are part of the ingress Eq (1) distribution
     lat, valid = cc.tiers[0].metrics.latency_windows(8)
     assert int(valid.sum()) == 2
@@ -313,7 +313,7 @@ def test_gateway_spill_leaves_backlog_at_the_spilled_tier(model):
     assert len(cc.gateways[1]) == 3
     assert all(it.tick_no < cc._tick_no for it in cc.gateways[1].items)
     # spill counted as demand that crossed boundary 1 (for the next scrape)
-    assert cc._crossings[1]["fn"] == 4
+    assert cc._crossings[1][cc._fn_ids["fn"]] == 4
     # the backlog drains from the edge gateway on later ticks, nothing lost
     for _ in range(6):
         if cc.queued == 0:

@@ -1,0 +1,327 @@
+"""Vectorized control plane: bit-identity goldens, sketch-path property
+tests, and the stacked metrics store.
+
+The contract under test (docs/architecture.md "Vectorized control
+plane"): with ``vectorized="auto"`` the batched all-boundaries kernel is
+bit-identical to the legacy per-boundary loop (the parity oracle,
+``vectorized=False``) for every auto-family policy shorthand, at any
+fleet size — including F=1 (whose trajectory the seed goldens pin) and
+non-power-of-two F (padding edge).
+"""
+
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+except ImportError:      # not installable here; deterministic shim
+    from _hypothesis_fallback import hypothesis, st
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core import offload, quantile
+from repro.core.metrics import LatencyWindow, MetricsRegistry, VectorWindows
+from repro.core.policy import ControlLoop, Policy
+from repro.core.replication import FunctionSpec
+from repro.core.simulator import ContinuumSimulator, SimConfig
+from repro.core.topology import LinkSpec, TierSpec, Topology
+from repro.models import model_zoo
+from repro.platform import Continuum
+
+
+# ---- golden: vectorized vs legacy R_t bit-identity --------------------------
+
+SHORTHANDS = ["auto", "auto+net", "auto+hedge", "auto+migrate",
+              "auto+net+hedge+migrate"]
+
+
+def _parse(spec):
+    """Each policy object is single-use (it owns jit/controller state)."""
+    return Policy.parse(spec, link_bytes_per_s=2e6, req_bytes=1500.0)
+
+
+def _drive(loop, F, B, W, steps=6, seed=0):
+    """Deterministic multi-step drive with regime shifts, queue ages,
+    per-boundary arrivals, and one all-invalid (frozen) interval."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for step in range(steps):
+        scale = 30.0 if step % 5 == 0 else 1.0
+        lats = [(rng.gamma(2.0, 0.05, (F, W)) * scale).astype(np.float32)
+                for _ in range(B)]
+        valid = [rng.random((F, W)) < 0.9 for _ in range(B)]
+        if step == 3:
+            valid[0][:] = False          # boundary skip must freeze state
+        qa = [[list(rng.random(rng.integers(0, 5))) for _ in range(F)]
+              for _ in range(B)]
+        arr = [rng.integers(0, 50, F).tolist() for _ in range(B)]
+        out.append(np.array(loop.step_tiers(lats, valid, queue_ages=qa,
+                                            arrivals=arr)))
+    return np.stack(out)
+
+
+@pytest.mark.parametrize("spec", SHORTHANDS)
+@pytest.mark.parametrize("F", [1, 3, 257])
+def test_vectorized_bit_identical_to_legacy(spec, F):
+    """The acceptance golden: batched R_t == per-boundary R_t, bitwise."""
+    for B in ([1] if F == 1 else [1, 2]):
+        vec = ControlLoop(_parse(spec), F, window=8, num_tiers=B + 1)
+        leg = ControlLoop(_parse(spec), F, window=8, num_tiers=B + 1,
+                          vectorized=False)
+        assert vec.vectorized and not leg.vectorized
+        Rv = _drive(vec, F, B, W=8)
+        Rl = _drive(leg, F, B, W=8)
+        np.testing.assert_array_equal(Rv, Rl)
+
+
+def test_step_matches_legacy_and_leaves_deep_boundaries():
+    """step() (ingress only) on a 3-tier vectorized loop: boundary 0
+    bit-matches the legacy loop, boundaries 1+ stay frozen."""
+    rng = np.random.default_rng(3)
+    vec = ControlLoop("auto", 5, window=8, num_tiers=3)
+    leg = ControlLoop("auto", 5, window=8, num_tiers=3, vectorized=False)
+    for _ in range(5):
+        lat = rng.gamma(2.0, 0.05, (5, 8)).astype(np.float32)
+        valid = rng.random((5, 8)) < 0.9
+        arr = rng.integers(0, 20, 5).tolist()
+        Rv = vec.step(lat, valid, arrivals=arr)
+        Rl = leg.step(lat, valid, arrivals=arr)
+        np.testing.assert_array_equal(np.asarray(Rv), np.asarray(Rl))
+        np.testing.assert_array_equal(vec.R_all, leg.R_all)
+    assert not vec.R_all[1].any()        # never stepped
+
+
+def test_f1_multiboundary_falls_back_to_legacy():
+    """F=1 multi-tier seed trajectories come from (1, W) compilations the
+    batched stack can't bit-reproduce (Eq-(4) FMA contraction), so auto
+    mode keeps the per-boundary loop there."""
+    assert not ControlLoop("auto", 1, window=8, num_tiers=3).vectorized
+    assert ControlLoop("auto", 1, window=8, num_tiers=2).vectorized
+    assert ControlLoop("auto", 2, window=8, num_tiers=3).vectorized
+
+
+def test_static_split_uses_legacy_loop():
+    loop = ControlLoop(25.0, 4, window=8)
+    assert not loop.vectorized
+    R = loop.step(np.ones((4, 8), np.float32), np.ones((4, 8), bool))
+    np.testing.assert_array_equal(R, np.full(4, 25.0, np.float32))
+
+
+def test_vectorized_true_rejects_mixed_policies():
+    with pytest.raises(ValueError, match="auto-family"):
+        ControlLoop("auto", 2, window=8, num_tiers=3,
+                    boundary_policies=["auto", 25.0], vectorized=True)
+
+
+def test_set_link_capacity_recaps_vectorized_loop():
+    """Mid-run link faults re-cap the batched path without a rebuild
+    (net params are per-row data, not compiled constants)."""
+    pol_v, pol_l = _parse("auto+net"), _parse("auto+net")
+    vec = ControlLoop(pol_v, 3, window=8)
+    leg = ControlLoop(pol_l, 3, window=8, vectorized=False)
+    _drive(vec, 3, 1, W=8, steps=2)
+    _drive(leg, 3, 1, W=8, steps=2)
+    pol_v.set_link_capacity(1e4)
+    pol_l.set_link_capacity(1e4)
+    Rv = _drive(vec, 3, 1, W=8, steps=3, seed=9)
+    Rl = _drive(leg, 3, 1, W=8, steps=3, seed=9)
+    np.testing.assert_array_equal(Rv, Rl)
+    assert (Rv[-1] <= 100.0).all()
+
+
+# ---- streaming sketch path --------------------------------------------------
+
+def test_step_stream_reacts_to_regime_shift():
+    rng = np.random.default_rng(0)
+    loop = ControlLoop("auto", 4, window=64, eq1="sketch")
+    for step in range(30):
+        scale = 0.02 if step < 15 else 2.0    # calm -> heavy tail
+        ids = rng.integers(0, 4, 64)
+        vals = rng.gamma(2.0, scale, 64).astype(np.float32)
+        if step >= 15:                        # bimodal: slow stragglers
+            vals[::4] *= 50.0
+        R = loop.step_stream([(ids, vals)],
+                             arrivals=[rng.integers(1, 30, 4).tolist()])
+    assert R.shape == (1, 4)
+    assert (R > 0).all()                      # tail ratio fired everywhere
+
+
+def test_step_stream_idle_boundary_stays_frozen():
+    loop = ControlLoop("auto", 2, window=16, num_tiers=3, eq1="sketch")
+    R = loop.step_stream([None, None])
+    np.testing.assert_array_equal(R, np.zeros((2, 2), np.float32))
+    ids = np.zeros(8, np.int64)
+    vals = np.full(8, 0.05, np.float32)
+    R = loop.step_stream([(ids, vals), None])
+    assert not R[1].any()                     # boundary 1 never saw data
+
+
+def test_eq1_dispatch_is_enforced():
+    win = ControlLoop("auto", 2, window=8)
+    sk = ControlLoop("auto", 2, window=8, eq1="sketch")
+    with pytest.raises(ValueError, match="step_stream"):
+        win.step_stream([None])
+    with pytest.raises(ValueError, match="sketch"):
+        sk.step(np.ones((2, 8), np.float32), np.ones((2, 8), bool))
+    with pytest.raises(ValueError, match="sketch"):
+        sk.step_tiers([np.ones((2, 8), np.float32)], [np.ones((2, 8), bool)])
+    with pytest.raises(ValueError, match="eq1"):
+        ControlLoop("auto", 2, window=8, eq1="exact")
+
+
+def test_sim_sketch_loop_runs_and_offloads():
+    """eq1="sketch" end-to-end through the simulator driver: same
+    submitted totals as the exact loop, and offload engages under ramp."""
+    cfg = SimConfig(duration_s=40.0, low_rps=2.0, high_rps=14.0)
+    exact = ContinuumSimulator("matmult", "auto", cfg).run()
+    sketch = ContinuumSimulator("matmult", "auto", cfg, eq1="sketch").run()
+    assert (sketch.successes + sketch.failures
+            == exact.successes + exact.failures)
+    assert max(sketch.offload_pct) > 0.0
+
+
+# ---- quantile sketch vs sorted buffer (property) ----------------------------
+
+def _sketch_vs_sorted(data, num_buckets=64, lo=1e-4, hi=1e3):
+    """Ingest ``data`` (flat, one function) and compare sketch quantiles
+    against exact sorted-sample quantiles within the documented bound:
+    one geometric bucket of log-space error (see quantile.quantile).
+    The reference is the inverted empirical CDF — the sketch inverts a
+    (bucketed) CDF, so interpolating between order statistics (numpy's
+    default) is not the comparable estimator at discontinuities."""
+    data = np.asarray(data, np.float32)
+    hist = quantile.Histogram.init(1, num_buckets=num_buckets, lo=lo, hi=hi)
+    rows = np.zeros(len(data), np.int32)
+    hist = quantile.ingest(hist, rows, data, decay=1.0)
+    width = (np.log(hi) - np.log(lo)) / num_buckets
+    for q in (0.5, 0.95):
+        got = float(quantile.quantile(hist, q)[0])
+        want = float(np.quantile(data, q, method="inverted_cdf"))
+        if lo <= want <= hi:                 # bound only holds in range
+            assert abs(np.log(got) - np.log(max(want, 1e-30))) \
+                <= width + 1e-6, (q, got, want)
+
+
+@hypothesis.given(st.lists(st.floats(min_value=1e-3, max_value=500.0),
+                           min_size=8, max_size=256))
+@hypothesis.settings(max_examples=30, deadline=None)
+def test_sketch_tracks_sorted_quantiles(xs):
+    _sketch_vs_sorted(xs)
+
+
+def test_sketch_tracks_sorted_quantiles_adversarial():
+    """Distributions chosen to stress the log-bucket sketch: bimodal
+    straggler mixes (Eq (1)'s regime), constants on bucket edges,
+    heavy-tailed, and range-clamped outliers."""
+    rng = np.random.default_rng(0)
+    bim = np.concatenate([np.full(95, 0.01), np.full(5, 9.0)])
+    _sketch_vs_sorted(bim)
+    _sketch_vs_sorted(np.full(64, float(np.exp(-4 * 0.25 * 7))))  # on-edge
+    _sketch_vs_sorted(rng.pareto(1.5, 512) + 1e-3)
+    _sketch_vs_sorted(rng.lognormal(-2.0, 2.0, 1024))
+    # out-of-range values clamp into the edge buckets, never crash
+    hist = quantile.Histogram.init(1)
+    hist = quantile.ingest(hist, np.zeros(4, np.int32),
+                           np.asarray([1e-9, 0.0, 1e9, 5.0], np.float32))
+    assert np.isfinite(float(quantile.quantile(hist, 0.95)[0]))
+
+
+def test_quantile_fast_matches_reference():
+    """The tick-path quantile (shared blocked-scan prefix sums) tracks
+    the reference implementation to float tolerance on random and
+    adversarial histograms."""
+    rng = np.random.default_rng(1)
+    for counts in [rng.random((7, 64)).astype(np.float32) * 10,
+                   np.zeros((3, 64), np.float32),              # empty
+                   np.eye(64, dtype=np.float32)[:5] * 100.0]:  # single spike
+        hist = quantile.Histogram(counts, np.float32(np.log(1e-4)),
+                                  np.float32(np.log(1e3)))
+        fast = np.asarray(quantile.quantile_fast(hist, (0.95, 0.5)))
+        ref = np.stack([np.asarray(quantile.quantile(hist, 0.95)),
+                        np.asarray(quantile.quantile(hist, 0.5))])
+        np.testing.assert_allclose(fast, ref, rtol=2e-4, atol=1e-7)
+
+
+def test_ingest_matches_update_fold():
+    """Scatter-add ingest == one-hot-einsum update on the same samples
+    (same decay, same buckets), to float tolerance."""
+    rng = np.random.default_rng(2)
+    data = rng.lognormal(-2.0, 1.0, (3, 32)).astype(np.float32)
+    a = quantile.update(quantile.Histogram.init(3), data, decay=0.7)
+    rows = np.repeat(np.arange(3, dtype=np.int32), 32)
+    b = quantile.ingest(quantile.Histogram.init(3), rows, data.reshape(-1),
+                        decay=0.7)
+    np.testing.assert_allclose(np.asarray(a.counts), np.asarray(b.counts),
+                               rtol=1e-6, atol=1e-6)
+
+
+# ---- stacked metrics store --------------------------------------------------
+
+@hypothesis.given(st.lists(st.floats(min_value=1e-4, max_value=100.0),
+                           min_size=0, max_size=40))
+@hypothesis.settings(max_examples=25, deadline=None)
+def test_vector_windows_row_matches_deque(xs):
+    """A VectorWindows row is bit-identical to the deque-backed
+    LatencyWindow at every size, including ring wraparound."""
+    ref = LatencyWindow(capacity=8)
+    vw = VectorWindows(capacity=8)
+    row = vw.add_row()
+    for x in xs:
+        ref.record(x)
+        vw.record(row, x)
+    assert len(ref) == vw.count(row)
+    np.testing.assert_array_equal(ref.values(), vw.values(row))
+    for size in (1, 4, 8, 16):
+        lat_r, val_r = ref.window(size)
+        lat_v, val_v = vw.window(row, size)
+        np.testing.assert_array_equal(lat_r, lat_v)
+        np.testing.assert_array_equal(val_r, val_v)
+
+
+def test_registry_windows_stacked_gather():
+    reg = MetricsRegistry(["a", "b", "c"], capacity=4)
+    for i in range(6):
+        reg.record_latency("a", 0.1 * (i + 1))
+    reg.record_latency("c", 9.0)
+    lat, valid = reg.latency_windows(4)
+    assert lat.shape == (3, 4)
+    np.testing.assert_array_equal(valid.sum(axis=1), [4, 0, 1])
+    np.testing.assert_allclose(lat[0], [0.3, 0.4, 0.5, 0.6], rtol=1e-6)
+    # per-function view over the shared store keeps the historical API
+    assert len(reg.latency["a"]) == 4
+    reg.latency["a"].clear()
+    assert len(reg.latency["a"]) == 0
+    assert len(reg.latency["c"]) == 1
+
+
+def test_registry_drain_fresh():
+    reg = MetricsRegistry(["a", "b"], capacity=4)
+    reg.record_latency("b", 0.5)
+    reg.record_latency("a", 0.25)
+    rows, vals = reg.drain_fresh()
+    np.testing.assert_array_equal(rows, [1, 0])
+    np.testing.assert_allclose(vals, [0.5, 0.25])
+    rows, vals = reg.drain_fresh()            # drained: empty until new data
+    assert rows.size == 0 and vals.size == 0
+
+
+# ---- live driver ------------------------------------------------------------
+
+@pytest.mark.slow
+def test_live_sketch_controller_update():
+    """eq1="sketch" through the live runtime's scrape: drain_fresh feeds
+    step_stream and R_t responds to recorded latencies."""
+    cfg = configs.get_smoke_config("stablelm-1.6b")
+    params = model_zoo.init(jax.random.PRNGKey(0), cfg)
+    topo = Topology(
+        tiers=(TierSpec("edge", slots=2, max_len=64),
+               TierSpec("cloud", slots=4, max_len=64)),
+        links=(LinkSpec(rtt_s=0.0),))
+    cc = Continuum.from_topology(topo, policy="auto", seed=0, eq1="sketch")
+    cc.deploy(FunctionSpec(name="fn", arch="stablelm-1.6b"), cfg, params)
+    assert cc.control.eq1 == "sketch"
+    for lat in (0.01, 0.012, 0.011, 0.9, 1.1):   # bimodal burst
+        cc.tiers[0].metrics.record_latency("fn", lat)
+    R = cc.controller_update()
+    assert R.shape == (1,)
+    assert np.isfinite(R).all()
