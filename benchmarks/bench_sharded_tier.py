@@ -1,0 +1,110 @@
+"""Sharded-tier cost-model bench: the derived continuum, gated.
+
+Prices the canonical cost-modeled chain —
+``Topology.device_edge_cloud(cost_model=True)``: stablelm-1.6b on the
+device, qwen2.5-14b on a 2-chip edge site, llama3-405b shard_map-sharded
+over a (16, 16) cloud pod — and records the numbers the cost model
+derives for both deployments.  Everything here is machine-independent:
+the tier pricing is pure arithmetic over a synthetic HLO walk (no
+wall-clock), and the simulator run is seeded.
+
+Gated facts (see ``check_regression.py``):
+
+  * the ingress tier's ``service_rate_mult`` is exactly 1.0 (the
+    simulator's ``edge_service_s`` calibration point);
+  * the honest speed inversion holds — each hop down the chain serves a
+    far bigger model, so ``decode_step_ms`` strictly increases
+    device -> edge -> cloud;
+  * the sharded cloud step is interconnect-bound (its roofline's
+    dominant term is the collective wire time) while the small
+    unsharded device model is weight-streaming (memory) bound;
+  * slot counts are the requested ceilings clamped to the per-device
+    HBM KV fit — exact, deterministic integers — and an over-requested
+    tier really clamps;
+  * the resolved chain simulates with deterministic request accounting.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from repro.launch import tier_cost
+from repro.platform import Continuum, Topology
+
+SEED_ARCH_ORDER = ("device", "edge", "cloud")
+
+
+def _tier_row(spec) -> dict:
+    return {
+        "model": spec.model,
+        "mesh_shape": list(spec.mesh_shape),
+        "devices": spec.devices,
+        "slots": spec.slots,
+        "decode_step_ms": spec.decode_step_ms,
+        "service_rate_mult": spec.service_rate_mult,
+    }
+
+
+def main(out_dir: str | None = None) -> dict:
+    topo = Topology.device_edge_cloud(cost_model=True)
+    tiers = {s.name: _tier_row(s) for s in topo.tiers}
+    costs = {s.name: tier_cost.tier_cost(s.model, mesh_shape=s.mesh_shape,
+                                         requested_slots=s.slots,
+                                         max_len=s.max_len)
+             for s in topo.tiers}
+    for name, c in costs.items():
+        tiers[name]["kv_fit_slots"] = c.kv_fit_slots
+        tiers[name]["dominant"] = c.roofline["dominant"]
+        tiers[name]["params_gb_per_device"] = (
+            c.params_bytes_per_device / 1e9)
+
+    steps = [tiers[n]["decode_step_ms"] for n in SEED_ARCH_ORDER]
+    # an over-requested small model clamps to its HBM KV fit
+    clamp = tier_cost.tier_cost("stablelm-1.6b", requested_slots=10_000)
+
+    res = Continuum.simulate("matmult", "auto", topology=topo)
+    sim = {
+        "failures": int(res.failures),
+        "latency_avg": float(np.nanmean(res.latency_avg)),
+        "offload_onset": bool(np.any(np.asarray(res.offload_pct) > 0)),
+    }
+
+    out = {
+        "tiers": tiers,
+        "ingress_mult_is_one":
+            tiers["device"]["service_rate_mult"] == 1.0,
+        "speed_inversion": bool(steps[0] < steps[1] < steps[2]),
+        "device_memory_bound": tiers["device"]["dominant"] == "memory",
+        "cloud_collective_bound": tiers["cloud"]["dominant"] == "collective",
+        "requested_slots_preserved": bool(
+            tiers["device"]["slots"] == 2 and tiers["edge"]["slots"] == 4
+            and tiers["cloud"]["slots"] == 64),
+        "overrequest_clamps": {
+            "requested": clamp.requested_slots,
+            "slots": clamp.slots,
+            "clamped": bool(clamp.slots == clamp.kv_fit_slots < 10_000),
+        },
+        "sim": sim,
+    }
+    for name in SEED_ARCH_ORDER:
+        t = tiers[name]
+        print(f"   {name:6s} {t['model']:14s} mesh {tuple(t['mesh_shape'])} "
+              f"slots {t['slots']:3d} (fit {t['kv_fit_slots']})  "
+              f"step {t['decode_step_ms']:7.3f} ms  "
+              f"mult {t['service_rate_mult']:.4f}  {t['dominant']}")
+    print(f"   sim: failures {sim['failures']}  "
+          f"latency_avg {sim['latency_avg']:.3f}s  "
+          f"onset {sim['offload_onset']}")
+    if out_dir:
+        path = os.path.join(out_dir, "bench_sharded_tier.json")
+        with open(path, "w") as f:
+            json.dump(out, f, indent=1)
+        print(f"sharded-tier results -> {path}")
+    return out
+
+
+if __name__ == "__main__":
+    main(os.path.join(os.path.dirname(__file__), "results"))

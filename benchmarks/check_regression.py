@@ -1,8 +1,8 @@
 """Benchmark regression gate for CI.
 
 Runs a fresh ``serving_bench`` + ``controller_micro`` + ``bench_chaos``
-+ ``bench_paged`` pass, then compares the CPU-stable metrics against the
-committed goldens in
++ ``bench_paged`` + ``bench_sharded_tier`` pass, then compares the
+CPU-stable metrics against the committed goldens in
 ``benchmarks/results/*.json``.  Absolute wall-clock numbers vary wildly
 across machines, so the gate checks *relative* metrics (speedup ratios:
 throughput-shaped, machine-independent) and structural invariants
@@ -93,6 +93,25 @@ STABLE_METRICS: List[Tuple[str, str, str]] = [
     ("bench_paged", "hit_rate_over_half", "flag"),
     ("bench_paged", "resident_per_gb_ratio", "ratio"),
     ("bench_paged", "migration_payload.paged_smaller", "flag"),
+    # sharded-tier cost model: pure arithmetic over the synthetic-HLO
+    # walk plus one seeded sim run — every gated value is exact.  Slot
+    # counts are the HBM-derived integers both deployments share; the
+    # structural flags pin the calibration point (ingress mult == 1),
+    # the honest speed inversion, and the roofline regimes (device
+    # weight-streaming-bound, 256-way cloud interconnect-bound).
+    ("bench_sharded_tier", "ingress_mult_is_one", "flag"),
+    ("bench_sharded_tier", "speed_inversion", "flag"),
+    ("bench_sharded_tier", "device_memory_bound", "flag"),
+    ("bench_sharded_tier", "cloud_collective_bound", "flag"),
+    ("bench_sharded_tier", "requested_slots_preserved", "flag"),
+    ("bench_sharded_tier", "overrequest_clamps.clamped", "flag"),
+    ("bench_sharded_tier", "overrequest_clamps.slots", "count"),
+    ("bench_sharded_tier", "tiers.device.slots", "count"),
+    ("bench_sharded_tier", "tiers.edge.slots", "count"),
+    ("bench_sharded_tier", "tiers.cloud.slots", "count"),
+    ("bench_sharded_tier", "tiers.edge.kv_fit_slots", "count"),
+    ("bench_sharded_tier", "sim.failures", "count"),
+    ("bench_sharded_tier", "sim.offload_onset", "flag"),
 ]
 
 
@@ -181,6 +200,9 @@ def run_benches(out_dir: str, benches: List[str]) -> None:
     if "paged" in benches:
         from benchmarks import bench_paged
         bench_paged.main(out_dir)
+    if "sharded" in benches:
+        from benchmarks import bench_sharded_tier
+        bench_sharded_tier.main(out_dir)
 
 
 def main(argv: Optional[List[str]] = None) -> int:
@@ -193,8 +215,10 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument("--fresh", default=None,
                     help="compare these results instead of --out")
     ap.add_argument("--benches", nargs="*",
-                    default=["serving", "controller", "chaos", "paged"],
-                    choices=["serving", "controller", "chaos", "paged"])
+                    default=["serving", "controller", "chaos", "paged",
+                             "sharded"],
+                    choices=["serving", "controller", "chaos", "paged",
+                             "sharded"])
     ap.add_argument("--threshold", type=float, default=0.25,
                     help="max fractional drop allowed on ratio metrics")
     ap.add_argument("--skip-run", action="store_true",

@@ -10,6 +10,9 @@ One bench per paper artifact + the roofline report:
                  brownout, cloud partition) on the live continuum
   paged        — paged KV-cache packing + prefix reuse on a Zipf trace
                  (dense vs paged pools at equal bytes)
+  sharded      — cost-model-derived tier capacity for the sharded
+                 device/edge/cloud continuum (slots, decode steps,
+                 service-rate multipliers)
   roofline     — §Roofline table from the dry-run artifacts
 
 Pass bench names to run a subset: ``python -m benchmarks.run table2 roofline``.
@@ -32,11 +35,11 @@ import time
 
 RESULTS = os.path.join(os.path.dirname(__file__), "results")
 BENCHES = ("table2", "fig2", "controller", "serving", "chaos", "paged",
-           "roofline")
+           "sharded", "roofline")
 #: benches that write a results/<name>.json artifact (the gate's inputs)
 JSON_ARTIFACTS = {"table2": "table2", "controller": "controller_micro",
                   "serving": "serving_bench", "chaos": "bench_chaos",
-                  "paged": "bench_paged"}
+                  "paged": "bench_paged", "sharded": "bench_sharded_tier"}
 
 
 def main(argv=None):
@@ -91,6 +94,12 @@ def main(argv=None):
               "reuse)\n" + "=" * 72)
         from benchmarks import bench_paged
         bench_paged.main(results_dir)
+
+    if "sharded" in wanted:
+        print("\n" + "=" * 72 + "\nSharded-tier cost model (derived "
+              "capacity + service rates)\n" + "=" * 72)
+        from benchmarks import bench_sharded_tier
+        bench_sharded_tier.main(results_dir)
 
     if "roofline" in wanted:
         print("\n" + "=" * 72 + "\n§Roofline — dry-run derived terms\n" + "=" * 72)

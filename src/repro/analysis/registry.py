@@ -113,4 +113,22 @@ FORMULAS: Tuple[Formula, ...] = (
             "waterfall composition must be computed once, not per "
             "deployment",
     ),
+    Formula(
+        name="derived-slot-capacity",
+        home="src/repro/launch/tier_cost.py",
+        qualname="derived_slot_capacity",
+        why="the HBM-derived slot count of a cost-modeled tier — the "
+            "simulator's _SimTier pools and the live Endpoint both get "
+            "it from the resolved TierSpec; a cloned clamp desyncs "
+            "simulated capacity from live KPA admission",
+    ),
+    Formula(
+        name="derived-service-rate",
+        home="src/repro/launch/tier_cost.py",
+        qualname="derived_service_rate_mult",
+        why="the decode-step ratio turning hlo_cost rooflines into the "
+            "simulator's service_rate_mult; a re-derived ratio breaks "
+            "the shared-cost-model contract between sim and live",
+        expr_level=False,  # its core is a bare division — too generic
+    ),
 )

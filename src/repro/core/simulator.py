@@ -159,9 +159,18 @@ def _tier_service_mean(prof: WorkloadProfile, topo: Topology, i: int) -> float:
     An explicit ``service_rate_mult`` scales relative to the profile's
     edge speed; ``None`` means positional defaults — ingress runs at edge
     speed, the deepest tier at cloud speed, intermediates interpolate
-    geometrically.
+    geometrically.  A cost-modeled spec (``model`` set) must arrive
+    *resolved*: its derived multiplier replaces the sentinel, so the
+    positional-default branch below stays reserved for hand-set chains
+    (``Topology.pair``'s elastic cloud keeps its seed meaning) and can
+    never silently mask a missing cost resolution.
     """
     spec = topo.tiers[i]
+    if spec.model is not None and spec.service_rate_mult is None:
+        raise ValueError(
+            f"tier {spec.name!r} declares a cost model ({spec.model}) but "
+            f"is unresolved; build the chain via Topology.costed(...) or "
+            f"call .resolve_costs() before simulating")
     if spec.service_rate_mult is not None:
         return prof.edge_service_s / spec.service_rate_mult
     if i == 0:

@@ -59,6 +59,21 @@ class TierSpec:
     bytes a dense pool of ``slots`` rows holds).  Both deployments honor
     it: the live tier's endpoints reserve page tables, the simulator's
     per-tier capacity model tracks the same page ledger.
+
+    ``model`` opts the tier into the **cost model**
+    (:mod:`repro.launch.tier_cost`): name a zoo architecture (e.g.
+    ``"llama3-405b"``) and, optionally, a ``mesh_shape`` — the
+    ``(data, model)`` device mesh a sharded endpoint decodes over.
+    A cost-modeled spec must NOT hand-set ``service_rate_mult``; instead
+    :meth:`Topology.resolve_costs` derives ``slots`` (KV rows that fit
+    next to the sharded weights in HBM), ``decode_step_ms`` (roofline
+    of a tensor-parallel decode step) and ``service_rate_mult``
+    (relative to the chain's first cost-modeled tier) from one
+    ``hlo_cost`` pricing shared by the simulator and the live runtime.
+    ``decode_step_ms`` is an output of that resolution, never an input:
+    a spec with ``model`` set is *unresolved* until both
+    ``decode_step_ms`` and ``service_rate_mult`` are populated, and
+    both deployments refuse to run an unresolved spec.
     """
 
     name: str
@@ -77,8 +92,38 @@ class TierSpec:
     # --- simulator-only knobs -------------------------------------------
     service_rate_mult: Optional[float] = None
     queue_depth_per_slot: Optional[int] = 8
+    # --- cost model (None = hand-set capacity/rates) --------------------
+    model: Optional[str] = None
+    mesh_shape: Optional[Tuple[int, int]] = None
+    decode_step_ms: Optional[float] = None
 
     def __post_init__(self):
+        if self.mesh_shape is not None:
+            if self.model is None:
+                raise ValueError("mesh_shape requires model")
+            if (len(self.mesh_shape) != 2
+                    or any(int(a) <= 0 for a in self.mesh_shape)):
+                raise ValueError(
+                    f"mesh_shape must be two positive (data, model) dims, "
+                    f"got {self.mesh_shape}")
+        if self.decode_step_ms is not None:
+            if self.model is None:
+                raise ValueError("decode_step_ms requires model (it is an "
+                                 "output of cost resolution, not an input)")
+            if self.decode_step_ms <= 0:
+                raise ValueError(
+                    f"tier {self.name!r}: decode_step_ms must be > 0")
+        if self.model is not None:
+            # Resolution is atomic: a cost-modeled spec either has both
+            # derived fields (resolved) or neither (unresolved).  A
+            # hand-set service_rate_mult on a cost-modeled tier is the
+            # drift this PR removes — reject it outright.
+            if (self.service_rate_mult is None) != (self.decode_step_ms
+                                                    is None):
+                raise ValueError(
+                    f"tier {self.name!r}: cost-modeled specs derive "
+                    f"service_rate_mult and decode_step_ms together via "
+                    f"Topology.resolve_costs(); set neither by hand")
         if self.page_size is not None:
             if self.page_size <= 0 or self.max_len % self.page_size:
                 raise ValueError(
@@ -104,6 +149,23 @@ class TierSpec:
         if self.pool_pages is not None:
             return self.pool_pages
         return self.slots * self.pages_per_row
+
+    @property
+    def cost_modeled(self) -> bool:
+        """True when capacity/rates come from the cost model."""
+        return self.model is not None
+
+    @property
+    def resolved(self) -> bool:
+        """True when this spec is runnable: hand-set, or cost-derived."""
+        return self.model is None or self.decode_step_ms is not None
+
+    @property
+    def devices(self) -> int:
+        """Devices this tier's endpoint spans (mesh product; 1 dense)."""
+        if self.mesh_shape is None:
+            return 1
+        return int(self.mesh_shape[0]) * int(self.mesh_shape[1])
 
 
 @dataclasses.dataclass(frozen=True)
@@ -196,6 +258,32 @@ class Topology:
         chain = " -> ".join(self.names)
         return (f"Topology({chain}, waterfall={self.waterfall})")
 
+    # -- cost resolution ---------------------------------------------------
+    def resolve_costs(self) -> "Topology":
+        """Resolve every cost-modeled tier against the hardware cost model.
+
+        Specs that name a ``model`` get derived ``slots`` /
+        ``decode_step_ms`` / ``service_rate_mult`` from
+        :func:`repro.launch.tier_cost.resolve_specs` (one ``hlo_cost``
+        roofline pricing shared with the live engine); hand-set specs —
+        including :meth:`pair`'s elastic cloud with its
+        ``service_rate_mult=None`` profile-default sentinel — pass
+        through bit-identically.  Returns ``self`` when nothing needs
+        resolving, else a new resolved :class:`Topology`.
+        """
+        if all(t.resolved for t in self.tiers):
+            return self
+        from repro.launch import tier_cost  # deferred: jax-heavy import
+        return type(self)(tier_cost.resolve_specs(self.tiers),
+                          links=self.links, waterfall=self.waterfall)
+
+    @classmethod
+    def costed(cls, tiers: Sequence[TierSpec],
+               links: Optional[Sequence[LinkSpec]] = None,
+               waterfall: bool = True) -> "Topology":
+        """Build a chain and resolve its cost-modeled tiers in one step."""
+        return cls(tiers, links=links, waterfall=waterfall).resolve_costs()
+
     # -- constructors ------------------------------------------------------
     @classmethod
     def pair(cls, edge, cloud, link: Optional[LinkSpec] = None) -> "Topology":
@@ -218,13 +306,41 @@ class Topology:
     @classmethod
     def device_edge_cloud(cls, device_slots: int = 2, edge_slots: int = 4,
                           cloud_slots: int = 64, max_len: int = 256,
-                          autoscaling: Optional[AutoscalingPolicy] = None
-                          ) -> "Topology":
+                          autoscaling: Optional[AutoscalingPolicy] = None,
+                          cost_model: bool = False) -> "Topology":
         """The canonical 3-tier example: on-device -> edge site -> cloud.
 
-        The device tier is half the edge's speed behind a short LAN hop;
-        the cloud sits behind the paper's 100 MB/s WAN link.
+        With ``cost_model=False`` (the historical default) the device
+        tier is hand-set to half the edge's speed behind a short LAN
+        hop, and the elastic cloud runs at the profile default.
+
+        With ``cost_model=True`` the chain is the honestly-sized
+        continuum: stablelm-1.6b on the device, qwen2.5-14b on the edge
+        site, llama3-405b shard_map-sharded over a (16, 16) cloud pod —
+        and every ``slots`` / ``decode_step_ms`` / ``service_rate_mult``
+        is derived from ``hlo_cost`` rooflines (requested slot counts
+        become *ceilings*, clamped to what fits in HBM).  Note the
+        honest speed inversion: each hop down the chain serves a far
+        bigger model, so per-token service gets *slower* cloud-ward
+        while quality and aggregate capacity rise.
         """
+        if cost_model:
+            return cls(
+                tiers=(TierSpec("device", slots=device_slots,
+                                max_len=max_len, autoscaling=autoscaling,
+                                model="stablelm-1.6b", mesh_shape=(1, 1),
+                                queue_depth_per_slot=4),
+                       TierSpec("edge", slots=edge_slots, max_len=max_len,
+                                autoscaling=autoscaling,
+                                model="qwen2.5-14b", mesh_shape=(1, 2),
+                                queue_depth_per_slot=8),
+                       TierSpec("cloud", slots=cloud_slots, max_len=max_len,
+                                autoscaling=autoscaling,
+                                model="llama3-405b", mesh_shape=(16, 16),
+                                queue_depth_per_slot=None)),
+                links=(LinkSpec(rtt_s=0.005, bandwidth_Bps=50e6),
+                       LinkSpec(rtt_s=0.04, bandwidth_Bps=100e6)),
+                waterfall=True).resolve_costs()
         return cls(
             tiers=(TierSpec("device", slots=device_slots, max_len=max_len,
                             autoscaling=autoscaling,

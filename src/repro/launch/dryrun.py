@@ -226,6 +226,11 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
         "collective_counts": detail["counts"],
         "meta": meta,
     }
+    if shape.kind == "decode":
+        # The handoff number to the serving layer: a cost-modeled
+        # TierSpec serving this arch adopts exactly this step time
+        # (repro.launch.tier_cost derives it from the same Roofline).
+        result["decode_step_ms"] = roof.step_s * 1e3
     if out_dir is None:
         out_dir = os.path.join(RESULTS_DIR, mesh_kind)
     os.makedirs(out_dir, exist_ok=True)

@@ -210,9 +210,26 @@ def roofline_from_compiled(compiled, chips: int,
     loop bodies once — useless for scanned layer stacks; it is recorded in
     the detail dict for reference).
     """
-    text = hlo_text if hlo_text is not None else compiled.as_text()
     from repro.launch import hlo_cost
-    hc = hlo_cost.analyze_hlo(text)
+    fallback = None
+    try:
+        text = hlo_text if hlo_text is not None else compiled.as_text()
+        hc = hlo_cost.analyze_hlo(text)
+    except Exception as e:
+        # A backend that cannot render HLO text (or renders a dialect the
+        # walk cannot parse) must still hand callers a *usable* result:
+        # a well-formed zero-cost Roofline plus an explicit fallback
+        # marker, never a partial dict they have to defensively probe.
+        warnings.warn(
+            f"hlo cost walk unavailable, returning zero-cost fallback "
+            f"roofline: {e!r}")
+        fallback = repr(e)
+        text = ""
+        hc = {"flops": 0.0, "mxu_flops": 0.0, "vpu_flops": 0.0,
+              "bytes": 0.0, "transcendentals": 0.0,
+              "collective_operand_bytes": {},
+              "collective_operand_total": 0.0,
+              "collective_wire_bytes": 0.0, "num_collectives": 0}
     coll = dict(hc["collective_operand_bytes"])
     coll["total"] = hc["collective_operand_total"]
     coll["wire"] = hc["collective_wire_bytes"]
@@ -222,18 +239,22 @@ def roofline_from_compiled(compiled, chips: int,
             ca = ca[0]
         xla_ca = {k: float(v) for k, v in ca.items()
                   if isinstance(v, (int, float))}
+        xla_ok = True
     except Exception as e:
         # cost_analysis() is advisory (recorded for reference only) and
         # its API/availability varies across jax versions and backends —
         # degrade to empty, but say so rather than vanish the error.
         warnings.warn(f"xla cost_analysis unavailable: {e!r}")
         xla_ca = {}
+        xla_ok = False
     return (Roofline(hc["flops"], hc["bytes"], coll["wire"], chips,
                      mxu_flops_per_device=hc["mxu_flops"]),
             {"collectives": coll, "counts": collective_ops_count(text),
              "num_collectives": hc["num_collectives"],
              "transcendentals": hc["transcendentals"],
-             "xla_cost_analysis_unscaled": xla_ca})
+             "xla_cost_analysis_unscaled": xla_ca,
+             "xla_cost_analysis_ok": xla_ok,
+             "fallback": fallback})
 
 
 def model_flops(cfg, shape_kind: str, tokens: int, *, seq_len: int = 0,

@@ -1,0 +1,405 @@
+"""Cost-model-derived tier capacity: one roofline for sim AND live.
+
+A :class:`~repro.core.topology.TierSpec` that names a ``model`` (and
+optionally a ``mesh_shape``) no longer hand-sets its simulator speed or
+its slot count.  Both are derived here, from the same
+:mod:`repro.launch.hlo_cost` trip-count-aware walk that prices the
+dry-run's compiled HLO:
+
+* **decode_step_ms** — a synthetic tensor-parallel decode-step HLO for
+  the tier's architecture (weight-streaming dots per layer, KV-cache
+  read traffic, the production psum collectives: two ``all-reduce``
+  per layer plus the embed/logits ``all-gather``) is priced by
+  :func:`repro.launch.hlo_cost.analyze_hlo` and turned into a
+  :class:`~repro.launch.hlo_analysis.Roofline`; the step time is the
+  max of the compute / HBM / interconnect terms.
+* **slots** — the requested concurrency clamped to how many KV rows
+  actually fit next to the (sharded) parameters in per-device HBM.
+* **service_rate_mult** — the simulator's relative speed, defined as
+  ``ref_step / step`` against the chain's first cost-modeled tier, so
+  the ingress tier's multiplier is exactly 1.0 and the simulator's
+  ``edge_service_s / mult`` scaling preserves its calibration point.
+
+Two tensor-parallel schemes coexist deliberately (see
+docs/architecture.md "Sharded tiers & the cost model"): this *pricing*
+scheme is the production psum layout (row-parallel projections,
+all-reduce per layer, everything divided by ``tp`` with head counts
+ceil'd), while the *live* sharded endpoint
+(:mod:`repro.serving.sharded`) uses an exact weight-gather layout whose
+token stream is bit-identical to the unsharded engine.  The psum
+scheme is what a deployment at mesh scale would run; the exact scheme
+is what lets CPU tests pin parity.
+
+Hardware constants are the TPU-v5e numbers from
+:mod:`repro.launch.hlo_analysis` plus the 16 GB HBM budget below.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.launch import hlo_cost
+from repro.launch.hlo_analysis import Roofline
+
+HBM_BYTES = 16e9          # TPU v5e: 16 GB HBM per chip
+HBM_RESERVE_BYTES = 1e9   # runtime/program/workspace reserve per chip
+
+
+def _itemsize(dtype) -> int:
+    return int(np.dtype(dtype).itemsize)
+
+
+def _dtype_token(dtype) -> str:
+    """HLO dtype token for a numpy/jax dtype (bf16 for 2-byte floats)."""
+    size = _itemsize(dtype)
+    kind = np.dtype(dtype).kind
+    if kind == "i":
+        return {1: "s8", 2: "s16", 4: "s32", 8: "s64"}[size]
+    return {2: "bf16", 4: "f32", 8: "f64"}[size]
+
+
+# --------------------------------------------------------------------------
+# Per-device dimensions of the psum tensor-parallel decode step
+# --------------------------------------------------------------------------
+
+
+def _tp_dims(cfg, tp: int) -> Dict[str, int]:
+    """Local (per-device) dimensions under ``tp``-way tensor parallelism.
+
+    Head counts ceil: with more devices than KV heads the heads are
+    replicated across subgroups (each device still holds >= 1), which is
+    what a real deployment does — the cost model charges that honestly
+    instead of pretending fractional heads.
+    """
+    lq = -(-cfg.num_heads // tp)              # local query heads
+    lkv = -(-cfg.num_kv_heads // tp)          # local kv heads
+    return {
+        "d": cfg.d_model,                     # activations stay full
+        "dl": -(-cfg.d_model // tp),          # embed table slice
+        "Qd": lq * cfg.head_dim,
+        "KVd": lkv * cfg.head_dim,
+        "Fl": -(-cfg.d_ff // tp),
+        "Vl": -(-cfg.vocab_size // tp),
+        "lq": lq,
+        "lkv": lkv,
+    }
+
+
+def params_bytes_per_device(cfg, tp: int) -> float:
+    """Weight bytes resident per device under the psum TP layout.
+
+    Matches the synthetic HLO's weight set: per layer q/k/v/o + the
+    (swiglu) MLP mats, all column/row-sharded over ``tp`` with head
+    counts ceil'd; embed and lm_head sharded; norms replicated.
+    """
+    t = _tp_dims(cfg, tp)
+    d, Qd, KVd, Fl, dl = t["d"], t["Qd"], t["KVd"], t["Fl"], t["dl"]
+    per_layer = (d * Qd + 2 * d * KVd + Qd * d     # wq, wk, wv, wo
+                 + 2 * d * Fl + Fl * d             # wi, wg, wo(mlp)
+                 + 4 * d)                          # norms (replicated)
+    head = cfg.vocab_size * dl * (1 if cfg.tie_embeddings else 2) + 2 * d
+    return float(cfg.num_layers * per_layer + head) * _itemsize(cfg.param_dtype)
+
+
+def kv_row_bytes_per_device(cfg, tp: int, max_len: int) -> float:
+    """KV-cache bytes one resident request costs per device.
+
+    The cache shards its kv-head axis over the model axis (ceil'd), the
+    rolling-window width caps the sequence extent, and the per-position
+    ``pos`` ledger is replicated (it is int32 and tiny).
+    """
+    t = _tp_dims(cfg, tp)
+    width = max_len
+    if cfg.sliding_window is not None:
+        width = min(width, cfg.sliding_window)
+    kv = 2 * width * t["lkv"] * cfg.head_dim * _itemsize(cfg.compute_dtype)
+    pos = width * 4
+    return float(cfg.num_layers * (kv + pos))
+
+
+# --------------------------------------------------------------------------
+# Synthetic decode-step HLO (priced by hlo_cost.analyze_hlo)
+# --------------------------------------------------------------------------
+
+
+def decode_step_hlo(cfg, *, tp: int, batch: int, max_len: int) -> str:
+    """One tensor-parallel decode step as HLO text.
+
+    The layer body sits in a ``while`` with ``known_trip_count =
+    num_layers`` (exactly what jax's scan-over-layers compiles to), so
+    the trip-count-aware walk charges weights and cache reads once per
+    layer per step.  Weights are typed constants: free to "compute" but
+    charged as operand reads by the consuming dots — the weight-
+    streaming traffic that makes small-batch decode memory-bound.
+    Collectives carry ``replica_groups=[1,tp]`` so the analyzer prices
+    the psum scheme's two per-layer all-reduces and the embed/logits
+    all-gathers at the right group size.
+    """
+    t = _tp_dims(cfg, tp)
+    B = int(batch)
+    d, dl, Qd, KVd, Fl, Vl = (t["d"], t["dl"], t["Qd"], t["KVd"],
+                              t["Fl"], t["Vl"])
+    W = max_len if cfg.sliding_window is None else min(max_len,
+                                                       cfg.sliding_window)
+    A = B * t["lq"]                           # attention rows, all local heads
+    V = cfg.vocab_size
+    L = cfg.num_layers
+    adt = _dtype_token(cfg.compute_dtype)
+    wdt = _dtype_token(cfg.param_dtype)
+
+    def ar(name: str, src: str) -> str:
+        return (f"  %{name} = {adt}[{B},{d}] all-reduce(%{src}), "
+                f"replica_groups=[1,{tp}], to_apply=%red_add")
+
+    body = [
+        f"%body (p: (s32[], {adt}[{B},{d}])) -> (s32[], {adt}[{B},{d}]) {{",
+        f"  %p = (s32[], {adt}[{B},{d}]) parameter(0)",
+        "  %i = s32[] get-tuple-element(%p), index=0",
+        f"  %x = {adt}[{B},{d}] get-tuple-element(%p), index=1",
+        # attention norm (elementwise, replicated)
+        f"  %xn = {adt}[{B},{d}] multiply(%x, %x)",
+        # qkv projections against column-sharded weights
+        f"  %wq = {wdt}[{d},{Qd}] constant(0)",
+        f"  %q = {adt}[{B},{Qd}] dot(%xn, %wq), lhs_contracting_dims={{1}}, "
+        "rhs_contracting_dims={0}",
+        f"  %wk = {wdt}[{d},{KVd}] constant(0)",
+        f"  %k = {adt}[{B},{KVd}] dot(%xn, %wk), lhs_contracting_dims={{1}}, "
+        "rhs_contracting_dims={0}",
+        f"  %wv = {wdt}[{d},{KVd}] constant(0)",
+        f"  %v = {adt}[{B},{KVd}] dot(%xn, %wv), lhs_contracting_dims={{1}}, "
+        "rhs_contracting_dims={0}",
+        # KV cache: the full local window is streamed from HBM each step
+        f"  %kc = {adt}[{B},{W},{KVd}] constant(0)",
+        f"  %vc = {adt}[{B},{W},{KVd}] constant(0)",
+        "  %z0 = f32[] constant(0)",
+        "  %kr = f32[] reduce(%kc, %z0), dimensions={0,1,2}, "
+        "to_apply=%red_add",
+        "  %vr = f32[] reduce(%vc, %z0), dimensions={0,1,2}, "
+        "to_apply=%red_add",
+        # scores + values over the cached window (per local head)
+        f"  %qh = {adt}[{A},{cfg.head_dim}] reshape(%q)",
+        f"  %kt = {adt}[{cfg.head_dim},{W}] reshape(%kc)",
+        f"  %sc = f32[{A},{W}] dot(%qh, %kt), lhs_contracting_dims={{1}}, "
+        "rhs_contracting_dims={0}",
+        f"  %pr = {adt}[{A},{W}] convert(%sc)",
+        f"  %vt = {adt}[{W},{cfg.head_dim}] reshape(%vc)",
+        f"  %av = {adt}[{A},{cfg.head_dim}] dot(%pr, %vt), "
+        "lhs_contracting_dims={1}, rhs_contracting_dims={0}",
+        f"  %oi = {adt}[{B},{Qd}] reshape(%av)",
+        # o-projection (row-parallel) + psum
+        f"  %wo = {wdt}[{Qd},{d}] constant(0)",
+        f"  %o = {adt}[{B},{d}] dot(%oi, %wo), lhs_contracting_dims={{1}}, "
+        "rhs_contracting_dims={0}",
+    ]
+    o_out = "o"
+    if tp > 1:
+        body.append(ar("oar", "o"))
+        o_out = "oar"
+    body += [
+        f"  %r1 = {adt}[{B},{d}] add(%x, %{o_out})",
+        f"  %rn = {adt}[{B},{d}] multiply(%r1, %r1)",    # mlp norm
+        f"  %wi = {wdt}[{d},{Fl}] constant(0)",
+        f"  %gi = {adt}[{B},{Fl}] dot(%rn, %wi), lhs_contracting_dims={{1}}, "
+        "rhs_contracting_dims={0}",
+        f"  %wg = {wdt}[{d},{Fl}] constant(0)",
+        f"  %gg = {adt}[{B},{Fl}] dot(%rn, %wg), lhs_contracting_dims={{1}}, "
+        "rhs_contracting_dims={0}",
+        f"  %ga = {adt}[{B},{Fl}] multiply(%gi, %gg)",
+        f"  %wd = {wdt}[{Fl},{d}] constant(0)",
+        f"  %md = {adt}[{B},{d}] dot(%ga, %wd), lhs_contracting_dims={{1}}, "
+        "rhs_contracting_dims={0}",
+    ]
+    m_out = "md"
+    if tp > 1:
+        body.append(ar("mar", "md"))
+        m_out = "mar"
+    body += [
+        f"  %r2 = {adt}[{B},{d}] add(%r1, %{m_out})",
+        "  %one = s32[] constant(1)",
+        "  %i2 = s32[] add(%i, %one)",
+        f"  ROOT %t = (s32[], {adt}[{B},{d}]) tuple(%i2, %r2)",
+        "}",
+    ]
+
+    cond = [
+        f"%cond (p: (s32[], {adt}[{B},{d}])) -> pred[] {{",
+        f"  %p = (s32[], {adt}[{B},{d}]) parameter(0)",
+        "  %i = s32[] get-tuple-element(%p), index=0",
+        f"  %n = s32[] constant({L})",
+        "  ROOT %lt = pred[] compare(%i, %n), direction=LT",
+        "}",
+    ]
+
+    red = [
+        "%red_add (a: f32[], b: f32[]) -> f32[] {",
+        "  %a = f32[] parameter(0)",
+        "  %b = f32[] parameter(1)",
+        "  ROOT %s = f32[] add(%a, %b)",
+        "}",
+    ]
+
+    entry = [
+        f"ENTRY %tier_decode (tok: s32[{B}]) -> f32[{B},{V}] {{",
+        f"  %tok = s32[{B}] parameter(0)",
+        f"  %emb_t = {wdt}[{V},{dl}] constant(0)",
+        f"  %emb = {adt}[{B},{dl}] gather(%emb_t, %tok), "
+        "offset_dims={1}, collapsed_slice_dims={0}, start_index_map={0}, "
+        f"index_vector_dim=1, slice_sizes={{1,{dl}}}",
+    ]
+    x0 = "emb"
+    if tp > 1:
+        entry.append(f"  %embf = {adt}[{B},{d}] all-gather(%emb), "
+                     f"replica_groups=[1,{tp}], dimensions={{1}}")
+        x0 = "embf"
+    entry += [
+        "  %c0 = s32[] constant(0)",
+        f"  %t0 = (s32[], {adt}[{B},{d}]) tuple(%c0, %{x0})",
+        f"  %w = (s32[], {adt}[{B},{d}]) while(%t0), condition=%cond, "
+        "body=%body, backend_config={\"known_trip_count\":{\"n\":\"" +
+        str(L) + "\"}}",
+        f"  %xf = {adt}[{B},{d}] get-tuple-element(%w), index=1",
+        f"  %wl = {wdt}[{d},{Vl}] constant(0)",
+        f"  %lg = f32[{B},{Vl}] dot(%xf, %wl), lhs_contracting_dims={{1}}, "
+        "rhs_contracting_dims={0}",
+    ]
+    if tp > 1:
+        entry.append(f"  ROOT %lgf = f32[{B},{V}] all-gather(%lg), "
+                     f"replica_groups=[1,{tp}], dimensions={{1}}")
+    else:
+        entry[-1] = entry[-1].replace("  %lg =", "  ROOT %lg =").replace(
+            f"f32[{B},{Vl}]", f"f32[{B},{V}]", 1)
+    entry.append("}")
+
+    return "\n".join(["HloModule tier_decode", ""] + red + [""] + cond
+                     + [""] + body + [""] + entry) + "\n"
+
+
+# --------------------------------------------------------------------------
+# Registered single-source formulas (see repro.analysis.registry)
+# --------------------------------------------------------------------------
+
+
+def derived_slot_capacity(requested_slots: int, hbm_bytes: float,
+                          params_bytes: float, reserve_bytes: float,
+                          kv_row_bytes: float) -> int:
+    """The ONE slot-capacity formula for cost-modeled tiers.
+
+    Slots = requested concurrency clamped to the KV rows that fit next
+    to the resident (sharded) weights in per-device HBM.  Both the
+    simulator's ``_SimTier`` pools and the live tier's endpoint are
+    built from the resolved spec, so this must have exactly one home.
+    """
+    if kv_row_bytes <= 0.0:
+        raise ValueError(f"kv_row_bytes must be > 0, got {kv_row_bytes}")
+    free_bytes = float(hbm_bytes) - float(params_bytes) - float(reserve_bytes)
+    if free_bytes < kv_row_bytes:
+        raise ValueError(
+            f"model does not fit: {params_bytes / 1e9:.2f} GB params "
+            f"+ {reserve_bytes / 1e9:.2f} GB reserve leave "
+            f"{free_bytes / 1e9:.2f} GB for KV rows of "
+            f"{kv_row_bytes / 1e6:.1f} MB")
+    fit = int(free_bytes // kv_row_bytes)
+    return max(1, min(int(requested_slots), fit))
+
+
+def derived_service_rate_mult(ref_step_s: float, step_s: float) -> float:
+    """The ONE derived-rate formula: relative speed vs the chain's first
+    cost-modeled tier, so the reference tier's multiplier is exactly 1.0
+    and the simulator's ``edge_service_s / mult`` calibration holds."""
+    if ref_step_s <= 0.0 or step_s <= 0.0:
+        raise ValueError(
+            f"decode step times must be > 0, got ref={ref_step_s} "
+            f"step={step_s}")
+    return float(ref_step_s) / float(step_s)
+
+
+# --------------------------------------------------------------------------
+# Tier costing + spec resolution
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TierCost:
+    """The derived numbers for one cost-modeled tier."""
+
+    arch: str
+    mesh_shape: Tuple[int, ...]
+    devices: int
+    requested_slots: int
+    slots: int                       # requested clamped to the KV fit
+    kv_fit_slots: int
+    decode_step_s: float             # at batch == slots
+    params_bytes_per_device: float
+    kv_row_bytes_per_device: float
+    roofline: Dict[str, float]       # Roofline.to_dict() of the step
+
+    @property
+    def decode_step_ms(self) -> float:
+        return self.decode_step_s * 1e3
+
+
+def tier_cost(arch: str, *, mesh_shape: Optional[Tuple[int, ...]] = None,
+              requested_slots: int = 4, max_len: int = 256,
+              hbm_bytes: float = HBM_BYTES,
+              reserve_bytes: float = HBM_RESERVE_BYTES) -> TierCost:
+    """Price one tier: derived slots + decode step time + roofline."""
+    from repro import configs
+    cfg = configs.get_config(arch)
+    if cfg.family != "dense":
+        raise ValueError(
+            f"tier cost model covers the dense family only, "
+            f"{arch!r} is {cfg.family!r}")
+    shape = tuple(int(a) for a in (mesh_shape or (1, 1)))
+    tp = 1
+    for a in shape:
+        tp *= a
+    pb = params_bytes_per_device(cfg, tp)
+    kvb = kv_row_bytes_per_device(cfg, tp, max_len)
+    free = hbm_bytes - pb - reserve_bytes
+    fit = int(free // kvb) if free >= kvb else 0
+    slots = derived_slot_capacity(requested_slots, hbm_bytes, pb,
+                                  reserve_bytes, kvb)
+    hlo = decode_step_hlo(cfg, tp=tp, batch=slots, max_len=max_len)
+    hc = hlo_cost.analyze_hlo(hlo)
+    roof = Roofline(hc["flops"], hc["bytes"], hc["collective_wire_bytes"],
+                    chips=tp, mxu_flops_per_device=hc["mxu_flops"])
+    return TierCost(
+        arch=arch, mesh_shape=shape, devices=tp,
+        requested_slots=int(requested_slots), slots=slots, kv_fit_slots=fit,
+        decode_step_s=roof.step_s,
+        params_bytes_per_device=pb, kv_row_bytes_per_device=kvb,
+        roofline=roof.to_dict())
+
+
+def resolve_specs(specs: Sequence, *, hbm_bytes: float = HBM_BYTES,
+                  reserve_bytes: float = HBM_RESERVE_BYTES) -> Tuple:
+    """Resolve every cost-modeled TierSpec in a chain.
+
+    Cost-modeled specs (``model`` set) get derived ``slots``,
+    ``decode_step_ms`` and ``service_rate_mult``; hand-set specs pass
+    through untouched (including ``Topology.pair``'s elastic-cloud
+    ``service_rate_mult=None`` sentinel, which keeps its positional-
+    default meaning).  The rate reference is the first cost-modeled
+    tier in chain order, so a cost-modeled ingress runs at multiplier
+    1.0 — the simulator's ``edge_service_s`` calibration point.
+    """
+    costs = [tier_cost(s.model, mesh_shape=s.mesh_shape,
+                       requested_slots=s.slots, max_len=s.max_len,
+                       hbm_bytes=hbm_bytes, reserve_bytes=reserve_bytes)
+             if getattr(s, "model", None) is not None else None
+             for s in specs]
+    ref = next((c.decode_step_s for c in costs if c is not None), None)
+    out = []
+    for s, c in zip(specs, costs):
+        if c is None:
+            out.append(s)
+            continue
+        mult = derived_service_rate_mult(ref, c.decode_step_s)
+        out.append(dataclasses.replace(
+            s, slots=c.slots, decode_step_ms=c.decode_step_ms,
+            service_rate_mult=mult))
+    return tuple(out)

@@ -31,6 +31,18 @@ point the launchers, examples and benchmarks use:
                               topology=Topology.device_edge_cloud())
     table = Continuum.sweep("matmult", policies=(0.0, 50.0, "auto"))
 
+    # cost-modeled tiers: name a zoo model (and a mesh for sharded
+    # multi-device tiers) and slots/decode_step_ms/service_rate_mult are
+    # derived from hlo_cost rooflines — one cost model for sim AND live
+    topo = Topology.device_edge_cloud(cost_model=True)   # 1.6B/14B/405B
+    topo = Topology.costed((TierSpec("edge", slots=4,
+                                     model="qwen2.5-14b",
+                                     mesh_shape=(1, 2)),
+                            TierSpec("cloud", slots=64,
+                                     model="llama3-405b",
+                                     mesh_shape=(16, 16))))
+    cost = tier_cost("llama3-405b", mesh_shape=(16, 16))  # the numbers
+
     # traces & chaos (repro.workloads): both deployments accept the same
     # workload trace and timed fault schedule
     tr = Trace.bursty(base_rps=2.0, burst_rps=24.0, duration_s=120.0)
@@ -72,7 +84,23 @@ __all__ = [
     "HedgedOffload", "MigratingOffload", "ControlLoop",
     "Trace", "FaultEvent", "FaultSchedule",
     "edge_brownout", "cloud_partition", "tier_outage", "merge_schedules",
+    "tier_cost", "TierCost",
 ]
+
+
+def tier_cost(arch: str, **kwargs):
+    """Price one cost-modeled tier (see
+    :func:`repro.launch.tier_cost.tier_cost`).  Deferred import: the
+    pricing pulls in the jax-heavy launch stack only when asked."""
+    from repro.launch import tier_cost as _tc
+    return _tc.tier_cost(arch, **kwargs)
+
+
+def __getattr__(name: str):
+    if name == "TierCost":
+        from repro.launch.tier_cost import TierCost
+        return TierCost
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 class Continuum(EdgeCloudContinuum):

@@ -160,7 +160,8 @@ class Endpoint:
                  paged: bool = False, page_size: int = 16,
                  total_pages: Optional[int] = None,
                  prefix_cache: bool = True,
-                 prefix_capacity: int = 64):
+                 prefix_capacity: int = 64,
+                 mesh=None):
         self.cfg = cfg
         self.params = params
         self.slots = slots
@@ -169,6 +170,15 @@ class Endpoint:
         self.slot_pos = np.zeros(slots, np.int32)          # next position
         self.slot_free = [True] * slots
         self.peak_active = 0
+        # ``mesh`` switches the endpoint to shard_map tensor-parallel
+        # serving (repro.serving.sharded): params/KV sharded over the
+        # mesh's "model" axis, token stream bit-identical to unsharded.
+        self.mesh = mesh
+        self._tp = int(mesh.shape["model"]) if mesh is not None else 1
+        if self._tp > 1 and paged:
+            raise ValueError(
+                "paged=True is not supported on tensor-parallel endpoints "
+                "(page gather/scatter would cross the kv-head sharding)")
 
         batch_axes = _cache_batch_axes(cfg, slots, max_len)
         self._batch_axes = batch_axes
@@ -235,8 +245,36 @@ class Endpoint:
             self.prefix = None
             self.cache = model_zoo.init_cache(cfg, slots, max_len)
 
+        # Model-function indirection: the closures below call these, so
+        # the dense/sharded choice is made once, here, and every pool
+        # operation (masking, scatter, migration slicing) stays shared.
+        if self._tp > 1:
+            from repro.serving import sharded
+            tp_prefill, tp_decode, pspecs, cspecs = \
+                sharded.make_tp_functions(cfg, mesh, self.cache)
+            self.params = sharded.shard_params(params, mesh, pspecs)
+            self.cache = sharded.shard_cache(self.cache, mesh, cspecs)
+
+            def _model_prefill(params, batch, cache, lengths=None):
+                tokens = batch["tokens"]
+                if lengths is None:
+                    # take_along_axis at lengths-1 == S-1 is bitwise
+                    # equal to the unsharded x[:, -1:] branch
+                    lengths = jnp.full((tokens.shape[0],), tokens.shape[1],
+                                       jnp.int32)
+                return tp_prefill(params, tokens, lengths, cache)
+
+            _model_decode = tp_decode
+        else:
+            def _model_prefill(params, batch, cache, lengths=None):
+                return model_zoo.prefill(cfg, params, batch, cache,
+                                         lengths=lengths)
+
+            def _model_decode(params, cache, tokens, t):
+                return model_zoo.decode(cfg, params, cache, tokens, t)
+
         def _prefill(params, batch, cache):
-            return model_zoo.prefill(cfg, params, batch, cache)
+            return _model_prefill(params, batch, cache)
 
         def _decode(params, cache, tokens, t, active):
             """One decode step with a per-row active mask: inactive rows
@@ -245,7 +283,7 @@ class Endpoint:
             freed row must not drift — KV rows must not collect writes at a
             stale position and recurrent state must not advance on the
             zero-token placeholder — while its neighbors keep decoding."""
-            logits, new_cache = model_zoo.decode(cfg, params, cache, tokens, t)
+            logits, new_cache = _model_decode(params, cache, tokens, t)
             old_leaves, treedef = jax.tree_util.tree_flatten(cache)
             new_leaves = jax.tree_util.tree_leaves(new_cache)
             out = []
@@ -297,8 +335,8 @@ class Endpoint:
                 [_broadcast_rows(l, ax, Bp)
                  for l, ax in zip(jax.tree_util.tree_leaves(template),
                                   batch_axes)])
-            return model_zoo.prefill(cfg, params, {"tokens": tokens},
-                                     small, lengths=lengths)
+            return _model_prefill(params, {"tokens": tokens}, small,
+                                  lengths=lengths)
 
         def _scatter_rows(pool, small, slot_arr):
             """Scatter a prefilled group's rows into the dense pool at
@@ -791,7 +829,8 @@ class Endpoint:
         dimensions)."""
         return (other.cfg is self.cfg and other.max_len == self.max_len
                 and other.paged == self.paged
-                and (not self.paged or other.page_size == self.page_size))
+                and (not self.paged or other.page_size == self.page_size)
+                and getattr(other, "_tp", 1) == self._tp)
 
     def extract_rows(self, slots: List[int]) -> List[Any]:
         """Slice the given slots' cache rows out of the pool.
@@ -850,6 +889,12 @@ class Endpoint:
         the transfer ships whole pages, and ``_Transit.nbytes``,
         ``link_MB`` and the simulator's payload model must agree on what
         actually crosses the link.
+
+        Bytes are computed from each leaf's *logical* shape and dtype —
+        never from its device buffer footprint.  A replicated or sharded
+        template leaf on a multi-device (tensor-parallel) endpoint can
+        report a physical ``nbytes`` that multiplies per device replica,
+        but a migration ships the logical row exactly once.
         """
         if self.paged:
             eff = min(self.pages_for(max(length, 1)) * self.page_size,
@@ -861,7 +906,9 @@ class Endpoint:
                                   self._len_axes):
             if bax is None:
                 continue
-            per_row = float(leaf.nbytes)        # template: batch axis = 1
+            # template: batch axis = 1, so this is already per-row
+            per_row = float(np.prod(leaf.shape)
+                            * np.dtype(leaf.dtype).itemsize)
             if sax is not None:
                 per_row *= eff / leaf.shape[sax]
             total += per_row

@@ -255,12 +255,39 @@ class Tier:
 
     def deploy(self, fn_name: str, model_cfg: ModelConfig, params,
                autoscaling: Optional[AutoscalingPolicy] = None) -> None:
+        """Stand up this tier's endpoint pool for one function.
+
+        A cost-modeled :class:`TierSpec` must arrive *resolved*
+        (``Topology.costed``/``resolve_costs``): its ``slots`` are then
+        already HBM-clamped by the same ``hlo_cost`` pricing that set
+        the simulator's service rate — the sim<->live shared-cost-model
+        contract.  ``spec.model`` names the architecture that *priced*
+        the tier; ``model_cfg`` is what this pool actually serves (tests
+        deploy smoke-sized configs against production-priced specs).  A
+        ``mesh_shape`` deploys the pool shard_map tensor-parallel when
+        the host has enough devices, else falls back unsharded with a
+        warning (bit-identical either way).
+        """
+        if getattr(self.cfg, "model", None) is not None and \
+                not getattr(self.cfg, "resolved", True):
+            raise ValueError(
+                f"tier {self.name!r} declares a cost model "
+                f"({self.cfg.model}) but is unresolved; build the chain "
+                f"via Topology.costed(...) or call .resolve_costs() "
+                f"before deploying")
+        mesh = None
+        mesh_shape = getattr(self.cfg, "mesh_shape", None)
+        if mesh_shape is not None and (
+                int(mesh_shape[0]) * int(mesh_shape[1])) > 1:
+            from repro.serving import sharded
+            mesh = sharded.tier_mesh(mesh_shape)
         page_size = getattr(self.cfg, "page_size", None)
         self.endpoints[fn_name] = Endpoint(
             model_cfg, params, slots=self.cfg.slots, max_len=self.cfg.max_len,
             paged=page_size is not None,
             page_size=page_size if page_size is not None else 16,
-            total_pages=getattr(self.cfg, "pool_pages", None))
+            total_pages=getattr(self.cfg, "pool_pages", None),
+            mesh=mesh)
         self.inflight.setdefault(fn_name, {})
         self.metrics.register(fn_name)
         # A TierSpec that declares its own KPA bounds governs its whole
@@ -286,7 +313,11 @@ class Tier:
         """Admitted concurrency right now: ceil(replicas x target
         concurrency), bounded by the KV-cache pool. 0 when scaled to zero.
         A fractional target under-one admits *less* than one request per
-        replica (e.g. 2 replicas x 0.5 admit 1), not one per replica."""
+        replica (e.g. 2 replicas x 0.5 admit 1), not one per replica.
+        On a cost-modeled tier the pool bound (``Endpoint.slots``) is the
+        HBM-derived slot count from ``launch/tier_cost.py`` — the same
+        number the simulator's ``_SimTier`` pools use, so live KPA
+        admission and simulated capacity share one cost model."""
         asc = self.autoscalers[fn_name]
         want = math.ceil(asc.replicas * asc.policy.target_concurrency)
         return min(self.endpoints[fn_name].slots, want)

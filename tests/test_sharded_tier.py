@@ -1,0 +1,352 @@
+"""Sharded-tier cost model: TierSpec resolution contract, tier_cost
+pricing units, the roofline fallback path, and (in a 2-placeholder-device
+subprocess) bit-identical shard_map decode plus collective costs on the
+compiled sharded HLO."""
+
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core.simulator import SimConfig
+from repro.core.topology import LinkSpec, TierSpec, Topology
+from repro.launch import hlo_analysis, hlo_cost
+from repro.launch import tier_cost as tc
+from repro.platform import Continuum
+from repro.serving.tiers import Tier
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ---- TierSpec validation: cost-modeled fields are all-or-nothing ----------
+
+def test_mesh_shape_requires_model():
+    with pytest.raises(ValueError, match="mesh_shape requires model"):
+        TierSpec("cloud", mesh_shape=(1, 2))
+
+
+def test_mesh_shape_dims_validated():
+    with pytest.raises(ValueError, match="two positive"):
+        TierSpec("cloud", model="stablelm-1.6b", mesh_shape=(2,))
+    with pytest.raises(ValueError, match="two positive"):
+        TierSpec("cloud", model="stablelm-1.6b", mesh_shape=(0, 2))
+
+
+def test_decode_step_ms_is_an_output_not_an_input():
+    with pytest.raises(ValueError, match="requires model"):
+        TierSpec("cloud", decode_step_ms=5.0)
+
+
+def test_hand_set_mult_on_cost_modeled_tier_rejected():
+    # the drift this PR removes: a model-named tier with a hand-set rate
+    with pytest.raises(ValueError, match="set neither by hand"):
+        TierSpec("cloud", model="stablelm-1.6b", service_rate_mult=2.0)
+    # ...and the mirror image: a derived step without its derived rate
+    with pytest.raises(ValueError, match="set neither by hand"):
+        TierSpec("cloud", model="stablelm-1.6b", decode_step_ms=5.0)
+
+
+def test_spec_properties():
+    unres = TierSpec("cloud", model="stablelm-1.6b", mesh_shape=(2, 4))
+    assert unres.cost_modeled and not unres.resolved
+    assert unres.devices == 8
+    res = dataclasses.replace(unres, decode_step_ms=3.0,
+                              service_rate_mult=1.0)
+    assert res.cost_modeled and res.resolved
+    plain = TierSpec("edge", service_rate_mult=1.0)
+    assert not plain.cost_modeled and plain.resolved and plain.devices == 1
+
+
+# ---- both deployments refuse unresolved cost-modeled specs ----------------
+
+def _unresolved_topology():
+    return Topology(tiers=(TierSpec("edge", service_rate_mult=1.0),
+                           TierSpec("cloud", model="stablelm-1.6b",
+                                    queue_depth_per_slot=None)),
+                    links=(LinkSpec(),), waterfall=False)
+
+
+def test_simulator_rejects_unresolved_spec():
+    with pytest.raises(ValueError, match="unresolved"):
+        Continuum.simulate("matmult", "auto",
+                           topology=_unresolved_topology())
+
+
+def test_live_deploy_rejects_unresolved_spec():
+    spec = _unresolved_topology().tiers[1]
+    with pytest.raises(ValueError, match="unresolved"):
+        Tier("cloud", spec).deploy("fn", None, None)
+
+
+# ---- bugfix 1: the elastic-cloud None sentinel must pass through ----------
+
+def test_resolve_costs_is_identity_for_hand_set_chains():
+    topo = Topology.pair(TierSpec("edge", slots=2),
+                         TierSpec("cloud", slots=16,
+                                  queue_depth_per_slot=None))
+    assert topo.resolve_costs() is topo
+    out = tc.resolve_specs(topo.tiers)
+    # pass-through means the SAME objects: the elastic cloud keeps its
+    # service_rate_mult=None profile-default sentinel bit-identically
+    assert out[0] is topo.tiers[0] and out[1] is topo.tiers[1]
+    assert out[1].service_rate_mult is None
+
+
+def test_two_tier_bit_identity():
+    """Pin that the derived-rate plumbing left the paper apparatus alone:
+    an explicit default topology simulates bit-identically to the
+    built-in 2-tier path."""
+    a = Continuum.simulate("matmult", "auto")
+    b = Continuum.simulate("matmult", "auto",
+                           topology=SimConfig().default_topology())
+    assert a.failures == b.failures
+    for f in ("latency_avg", "cpu_util", "offload_pct", "net_MBps"):
+        np.testing.assert_array_equal(getattr(a, f), getattr(b, f),
+                                      err_msg=f)
+
+
+# ---- tier_cost pricing units ----------------------------------------------
+
+def test_derived_slot_capacity_formula():
+    # 10 GB free / 1 GB per row = 10 rows; requested clamps both ways
+    assert tc.derived_slot_capacity(4, 12e9, 1e9, 1e9, 1e9) == 4
+    assert tc.derived_slot_capacity(500, 12e9, 1e9, 1e9, 1e9) == 10
+    with pytest.raises(ValueError, match="kv_row_bytes"):
+        tc.derived_slot_capacity(4, 12e9, 1e9, 1e9, 0.0)
+    with pytest.raises(ValueError, match="does not fit"):
+        tc.derived_slot_capacity(4, 2e9, 1.5e9, 1e9, 1e9)
+
+
+def test_derived_service_rate_mult_formula():
+    assert tc.derived_service_rate_mult(2.0, 4.0) == 0.5
+    assert tc.derived_service_rate_mult(3.0, 3.0) == 1.0
+    with pytest.raises(ValueError, match="must be > 0"):
+        tc.derived_service_rate_mult(0.0, 1.0)
+
+
+def test_tier_cost_unsharded_small_model():
+    c = tc.tier_cost("stablelm-1.6b", requested_slots=500)
+    assert c.devices == 1 and c.mesh_shape == (1, 1)
+    # requested 500 clamps to the HBM KV fit
+    assert c.slots == c.kv_fit_slots < 500
+    assert c.decode_step_s > 0
+    # small-batch unsharded decode is weight-streaming bound
+    assert c.roofline["dominant"] == "memory"
+    # no mesh => the synthetic HLO carries no collectives
+    hlo = tc.decode_step_hlo(configs.get_config("stablelm-1.6b"),
+                             tp=1, batch=c.slots, max_len=256)
+    assert hlo_cost.analyze_hlo(hlo)["num_collectives"] == 0
+
+
+def test_tier_cost_sharded_collective_count():
+    cfg = configs.get_config("stablelm-1.6b")
+    hlo = tc.decode_step_hlo(cfg, tp=2, batch=4, max_len=256)
+    hc = hlo_cost.analyze_hlo(hlo)
+    # psum scheme: 2 all-reduce instructions in the layer body (the
+    # while's known_trip_count scales their traffic by num_layers) plus
+    # the embed/logits all-gathers in the entry
+    assert hc["num_collectives"] == 4
+    counts = hlo_analysis.collective_ops_count(hlo)
+    assert counts["all-reduce"] == 2 and counts["all-gather"] == 2
+    # per-layer all-reduce wire = 2*R*(n-1)/n, charged once per layer
+    cfg1 = dataclasses.replace(cfg, num_layers=1)
+    hlo1 = tc.decode_step_hlo(cfg1, tp=2, batch=4, max_len=256)
+    hc1 = hlo_cost.analyze_hlo(hlo1)
+    per_layer_ar = 2.0 * (4 * cfg.d_model * 2) * (2 - 1) / 2  # bf16 (B,d)
+    got = hc["collective_wire_bytes"] - hc1["collective_wire_bytes"]
+    assert got == pytest.approx((cfg.num_layers - 1) * 2 * per_layer_ar)
+
+
+def test_tier_cost_rejects_model_that_does_not_fit():
+    with pytest.raises(ValueError, match="does not fit"):
+        tc.tier_cost("qwen2.5-14b")        # 14B unsharded > 16 GB HBM
+
+
+def test_tier_cost_rejects_non_dense_family():
+    with pytest.raises(ValueError, match="dense family"):
+        tc.tier_cost("qwen2-moe-a2.7b")
+
+
+def test_sharding_shrinks_per_device_footprint():
+    cfg = configs.get_config("qwen2.5-14b")
+    p1 = tc.params_bytes_per_device(cfg, 1)
+    p2 = tc.params_bytes_per_device(cfg, 2)
+    assert p1 / 2 < p2 < p1          # sharded, minus replicated norms
+    k1 = tc.kv_row_bytes_per_device(cfg, 1, 256)
+    k2 = tc.kv_row_bytes_per_device(cfg, 2, 256)
+    assert k2 < k1
+
+
+def test_resolve_specs_reference_tier_mult_is_one():
+    specs = (TierSpec("device", slots=2, model="stablelm-1.6b",
+                      queue_depth_per_slot=4),
+             TierSpec("edge", slots=4, service_rate_mult=1.0))
+    out = tc.resolve_specs(specs)
+    assert out[0].service_rate_mult == 1.0          # chain's first modeled
+    assert out[0].decode_step_ms and out[0].resolved
+    assert out[1] is specs[1]                       # hand-set passthrough
+
+
+@pytest.mark.slow
+def test_device_edge_cloud_cost_model():
+    topo = Topology.device_edge_cloud(cost_model=True)
+    dev, edge, cloud = topo.tiers
+    assert all(t.resolved for t in topo.tiers)
+    assert dev.service_rate_mult == 1.0             # ingress = calibration
+    # honest speed inversion: each hop serves a far bigger model
+    assert dev.decode_step_ms < edge.decode_step_ms < cloud.decode_step_ms
+    assert edge.service_rate_mult < 1.0
+    assert cloud.service_rate_mult < 1.0
+    # requested slots survived as ceilings (they all fit)
+    assert (dev.slots, edge.slots, cloud.slots) == (2, 4, 64)
+    # the resolved chain actually simulates
+    res = Continuum.simulate("matmult", "auto", topology=topo)
+    assert float(np.nanmean(res.latency_avg)) > 0
+
+
+# ---- bugfix 2: roofline_from_compiled survives cost_analysis failure ------
+
+class _BrokenCompiled:
+    def as_text(self):
+        raise RuntimeError("backend cannot render HLO")
+
+    def cost_analysis(self):
+        raise RuntimeError("no cost analysis on this backend")
+
+
+def test_roofline_fallback_on_text_failure():
+    with pytest.warns(UserWarning, match="fallback"):
+        roof, detail = hlo_analysis.roofline_from_compiled(
+            _BrokenCompiled(), 2)
+    # explicit zero-cost roofline, never a partial dict
+    assert roof.step_s == 0.0 and roof.flops_per_device == 0.0
+    assert detail["fallback"] is not None
+    assert "cannot render" in detail["fallback"]
+    assert detail["xla_cost_analysis_ok"] is False
+    assert detail["collectives"]["total"] == 0.0
+    assert detail["num_collectives"] == 0
+
+
+def test_roofline_explicit_text_survives_cost_analysis_failure():
+    hlo = tc.decode_step_hlo(configs.get_config("stablelm-1.6b"),
+                             tp=2, batch=2, max_len=64)
+    with pytest.warns(UserWarning, match="cost_analysis unavailable"):
+        roof, detail = hlo_analysis.roofline_from_compiled(
+            _BrokenCompiled(), 2, hlo_text=hlo)
+    # the cost walk ran from the provided text: real roofline, no fallback
+    assert roof.step_s > 0 and detail["fallback"] is None
+    assert detail["xla_cost_analysis_ok"] is False
+    assert detail["num_collectives"] > 0
+
+
+# ---- sharded decode parity on forced host devices (subprocess) ------------
+
+_SUBPROC_CODE = textwrap.dedent("""\
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    import json
+    import jax, jax.numpy as jnp, numpy as np
+    from repro import configs
+    from repro.models import model_zoo
+    from repro.serving import sharded
+    from repro.serving.engine import Endpoint
+    from repro.launch import mesh as mesh_mod
+    from repro.launch import hlo_analysis
+
+    cfg = configs.get_smoke_config("stablelm-1.6b")
+    params = model_zoo.init(jax.random.PRNGKey(0), cfg)
+    mesh = mesh_mod.make_mesh((1, 2), ("data", "model"))
+
+    # -- Endpoint-level parity: dense vs tensor-parallel ------------------
+    def run(mesh):
+        ep = Endpoint(cfg, params, slots=4, max_len=32, mesh=mesh)
+        rng = np.random.RandomState(7)
+        prompts = {s: rng.randint(0, cfg.vocab_size,
+                                  size=(5 + s,)).astype(np.int32)
+                   for s in range(3)}
+        for _ in prompts:
+            ep.try_claim()
+        first = ep.prefill_batch(prompts)
+        streams = {s: [int(v)] for s, v in first.items()}
+        cur = dict(first)
+        for _ in range(6):
+            cur = ep.decode_all(cur)
+            for s, v in cur.items():
+                streams[s].append(int(v))
+        return streams, ep.cache_nbytes_per_row(16)
+
+    s_ref, nb_ref = run(None)
+    s_tp, nb_tp = run(mesh)
+
+    # -- raw-function prefill-logits parity --------------------------------
+    cache = model_zoo.init_cache(cfg, 2, 32)
+    tp_prefill, tp_decode, pspecs, cspecs = sharded.make_tp_functions(
+        cfg, mesh, cache)
+    params_s = sharded.shard_params(params, mesh, pspecs)
+    cache_s = sharded.shard_cache(cache, mesh, cspecs)
+    toks = jnp.asarray(np.random.RandomState(3).randint(
+        0, cfg.vocab_size, size=(2, 8)), jnp.int32)
+    lengths = jnp.array([8, 5], jnp.int32)
+    lg_tp, _ = tp_prefill(params_s, toks, lengths, cache_s)
+    lg_ref, _ = model_zoo.prefill(cfg, params, {"tokens": toks}, cache,
+                                  lengths=lengths)
+    logits_equal = bool(jnp.array_equal(lg_tp, lg_ref))
+
+    # -- collective costs on the REAL compiled sharded decode HLO ----------
+    tok = jnp.zeros((2,), jnp.int32)
+    t = jnp.full((2,), 5, jnp.int32)
+    compiled = jax.jit(tp_decode).lower(params_s, cache_s, tok, t).compile()
+    roof, detail = hlo_analysis.roofline_from_compiled(compiled, 2)
+
+    print(json.dumps({
+        "ndev": len(jax.devices()),
+        "streams_equal": s_ref == s_tp,
+        "logits_equal": logits_equal,
+        "nbytes_ref": nb_ref, "nbytes_tp": nb_tp,
+        "all_gathers": detail["counts"]["all-gather"],
+        "wire_bytes": roof.collective_bytes_per_device,
+        "fallback": detail["fallback"],
+    }))
+""")
+
+
+@pytest.fixture(scope="module")
+def sharded_subproc():
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", _SUBPROC_CODE], env=env,
+                         capture_output=True, text=True, timeout=420)
+    assert out.returncode == 0, out.stderr[-2000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+@pytest.mark.slow
+def test_sharded_decode_bit_identical(sharded_subproc):
+    r = sharded_subproc
+    assert r["ndev"] == 2
+    assert r["streams_equal"], "sharded token stream diverged from dense"
+    assert r["logits_equal"], "sharded prefill logits diverged from dense"
+
+
+@pytest.mark.slow
+def test_cache_nbytes_per_row_mesh_invariant(sharded_subproc):
+    # bugfix 3: per-shard KV leaves must not count once per replica —
+    # the logical per-row bytes are identical at mesh size 1 and 2
+    r = sharded_subproc
+    assert r["nbytes_ref"] == r["nbytes_tp"] > 0
+
+
+@pytest.mark.slow
+def test_compiled_sharded_hlo_collective_costs(sharded_subproc):
+    # the weight-gather scheme's all-gathers survive compilation and the
+    # cost walk prices their wire bytes from real replica_groups={{0,1}}
+    r = sharded_subproc
+    assert r["all_gathers"] > 0
+    assert r["wire_bytes"] > 0
+    assert r["fallback"] is None
